@@ -1,0 +1,41 @@
+//! Communication-volume demo (Table 1): print the paper's formulas at its
+//! cluster parameters and verify LASP's sequence-length independence on
+//! real measured traffic from a training run.
+//!
+//!     cargo run --release --example comm_volume
+
+use lasp::analytic::{comm_volume, SpMethod};
+use lasp::coordinator::{train, TrainConfig};
+use lasp::util::stats::{fmt_klen, Table};
+
+fn main() -> anyhow::Result<()> {
+    let (d, h, t) = (2048u64, 16u64, 64u64);
+    println!("Table 1 at the paper's parameters (B=1, d=2048, h=16, T=64):\n");
+    let mut tab = Table::new(&["SeqLen", "LASP", "Ring Attn", "Ulysses",
+                               "Megatron-SP"]);
+    for n in [2048u64, 32 * 1024, 512 * 1024, 4096 * 1024] {
+        tab.row(&[
+            fmt_klen(n as usize),
+            format!("{:.2e}", comm_volume::volume_elements(SpMethod::Lasp, 1, n, d, h, t)),
+            format!("{:.2e}", comm_volume::volume_elements(SpMethod::RingAttention, 1, n, d, h, t)),
+            format!("{:.2e}", comm_volume::volume_elements(SpMethod::Ulysses, 1, n, d, h, t)),
+            format!("{:.2e}", comm_volume::volume_elements(SpMethod::MegatronSp, 1, n, d, h, t)),
+        ]);
+    }
+    println!("{}", tab.render());
+
+    println!("measured LASP ring traffic per training step (tiny model, T=2):\n");
+    let mut tab = Table::new(&["N (tokens)", "ring bytes/step"]);
+    for chunk in [32usize, 64, 128] {
+        let mut cfg = TrainConfig::new("tiny", chunk, 2);
+        cfg.steps = 2;
+        cfg.warmup = 10;
+        let r = train(&cfg)?;
+        tab.row(&[(chunk * 2).to_string(),
+                  (r.ring_bytes / cfg.steps as u64).to_string()]);
+    }
+    println!("{}", tab.render());
+    println!("identical rows = the paper's headline property: LASP's\n\
+              communication volume does not depend on sequence length.");
+    Ok(())
+}

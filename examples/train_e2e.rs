@@ -1,0 +1,59 @@
+//! End-to-end system driver (DESIGN.md §5, system row): train the ~100M-
+//! parameter `e2e` transformer with LASP across 4 simulated devices on
+//! the synthetic corpus, logging the loss curve.
+//!
+//!     cargo run --release --example train_e2e -- [steps] [sp]
+//!
+//! Defaults: 200 steps, T=4 (N = 512). The loss curve is appended to
+//! `e2e_loss.csv` and the run is recorded in EXPERIMENTS.md.
+
+use std::io::Write;
+
+use lasp::coordinator::{train, TrainConfig};
+use lasp::runtime::{load_bundle, Device};
+use lasp::train::{evaluate, DataGen};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map_or(200, |s| s.parse().unwrap());
+    let sp: usize = args.get(1).map_or(4, |s| s.parse().unwrap());
+
+    let mut cfg = TrainConfig::new("e2e", 128, sp);
+    cfg.steps = steps;
+    cfg.warmup = (steps / 4).max(10);
+    cfg.lr = 1e-3;
+    cfg.log_every = 10;
+
+    let bundle = load_bundle("e2e", 128)?;
+    println!(
+        "e2e driver: {} params = {:.1}M, N={} over T={} devices, {} steps",
+        bundle.config.name,
+        bundle.config.param_count as f64 / 1e6,
+        cfg.seq_len(),
+        sp,
+        steps
+    );
+
+    let t0 = std::time::Instant::now();
+    let r = train(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut f = std::fs::File::create("e2e_loss.csv")?;
+    writeln!(f, "step,loss")?;
+    for (i, l) in r.losses.iter().enumerate() {
+        writeln!(f, "{},{}", i + 1, l)?;
+    }
+    println!("\nloss curve written to e2e_loss.csv");
+    println!("loss: {:.4} -> {:.4} (floor ~{:.3})", r.losses[0],
+             r.losses.last().unwrap(),
+             DataGen::new(0, bundle.config.vocab).entropy_floor());
+    println!("wall {:.1}s  {:.0} tokens/s  ring {} B", wall, r.tokens_per_sec,
+             r.ring_bytes);
+    println!("phases (rank 0):\n{}", r.phases.report());
+
+    let dev = Device::new(&bundle, &["chunk_logits"])?;
+    let dg = DataGen::new(cfg.seed, bundle.config.vocab);
+    let rep = evaluate(&dev, &bundle, &r.final_params, &dg, 2, 2)?;
+    println!("heldout: ppl {:.2}, acc {:.3}", rep.perplexity, rep.accuracy);
+    Ok(())
+}

@@ -1,0 +1,190 @@
+"""AOT pipeline: lower the Layer-2 chunk functions to HLO text + manifest.
+
+This is the only place Python touches the training system: ``make
+artifacts`` runs it once per (config, chunk_len) bundle, producing
+
+    artifacts/<name>_c<chunk>/
+        manifest.json        — model config, parameter ABI, artifact I/O
+        chunk_fwd.hlo.txt    — (params…, tokens, labels, kv_in) -> (loss, kv_out)
+        chunk_bwd.hlo.txt    — (+ dkv_out, loss_scale) -> (dparams…, dkv_in, loss)
+        chunk_fwd_unfused.hlo.txt / chunk_bwd_unfused.hlo.txt  (ablation)
+        chunk_logits.hlo.txt — (params…, tokens, kv_in) -> (logits, kv_out)
+        ring_block.hlo.txt   — Ring Attention baseline block step
+
+The interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The Rust runtime (`runtime::ArtifactStore`) consumes the manifest and
+never needs Python again.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import BUNDLES, CONFIGS, ModelConfig, bundle_dir
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def _abstract(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_bundle(cfg: ModelConfig, chunk: int, out_root: str,
+                 *, with_unfused: bool = True) -> dict:
+    """Lower every executable of one artifact bundle; returns the manifest."""
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    d, V = cfg.d_model, cfg.vocab
+    C = chunk
+
+    pspecs = M.param_specs(cfg)
+    flat_params = tuple(_abstract(shape) for _, shape, _, _ in pspecs)
+    tokens = _abstract((C,), jnp.int32)
+    labels = _abstract((C,), jnp.int32)
+    kv = _abstract((L, H, dh, dh))
+    dkv = _abstract((L, H, dh, dh))
+    scale = _abstract((), jnp.float32)
+
+    outdir = os.path.join(out_root, bundle_dir(cfg.name, C))
+    os.makedirs(outdir, exist_ok=True)
+
+    artifacts: dict[str, dict] = {}
+
+    def emit(name: str, fn, example_args: tuple, static_flat: bool = False):
+        """jit-lower ``fn`` and write ``<name>.hlo.txt``.
+
+        ``fn`` takes (flat_params, *rest); we wrap so the lowered signature
+        is the *flattened* argument list — the exact call ABI for Rust.
+        """
+        def wrapper(*args):
+            fp = args[: len(flat_params)]
+            return fn(fp, *args[len(flat_params):])
+
+        lowered = jax.jit(wrapper).lower(*(tuple(flat_params) + example_args))
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(wrapper, *(tuple(flat_params) + example_args))
+        flat_out = jax.tree_util.tree_leaves(out_tree)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec(a) for a in tuple(flat_params) + example_args],
+            "n_params": len(flat_params),
+            "outputs": [_spec(o) for o in flat_out],
+        }
+        print(f"  {name}: {len(text)/1e6:.1f} MB HLO text")
+
+    emit("chunk_fwd", M.make_chunk_fwd(cfg), (tokens, labels, kv))
+    emit("chunk_bwd", M.make_chunk_bwd(cfg), (tokens, labels, kv, dkv, scale))
+    emit("chunk_logits", M.make_chunk_logits(cfg), (tokens, kv))
+    if with_unfused:
+        emit("chunk_fwd_unfused", M.make_chunk_fwd(cfg, fused=False),
+             (tokens, labels, kv))
+        emit("chunk_bwd_unfused", M.make_chunk_bwd(cfg, fused=False),
+             (tokens, labels, kv, dkv, scale))
+
+    # Ring Attention baseline block (no flat-params prefix).
+    ring = M.make_ring_block(cfg, C)
+    q = _abstract((H, C, dh))
+    v_ = _abstract((H, C, dh))
+    acc = _abstract((H, C, dh))
+    moff = _abstract((), jnp.float32)
+    lowered = jax.jit(ring).lower(q, q, v_, acc, moff)
+    with open(os.path.join(outdir, "ring_block.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts["ring_block"] = {
+        "file": "ring_block.hlo.txt",
+        "inputs": [_spec(a) for a in (q, q, v_, acc, moff)],
+        "n_params": 0,
+        "outputs": [_spec(acc)],
+    }
+
+    # FLOP estimate per chunk forward (matmul-dominated), used by the
+    # Rust analytic model for throughput projection.
+    flops_fwd = (
+        # qkvo projections + GLU
+        C * (4 * d * d + 3 * d * cfg.ffn_dim) * 2 * L
+        # attention intra (C*C*dh*2 twice) + inter/state (C*dh*dh*2 thrice)
+        + L * H * (C * C * dh * 4 + C * dh * dh * 6)
+        # lm head
+        + C * d * V * 2
+    )
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "vocab": V,
+            "d_model": d,
+            "n_layers": L,
+            "n_heads": H,
+            "head_dim": dh,
+            "ffn_dim": cfg.ffn_dim,
+            "lam": cfg.lam(),
+            "linear_transformer": cfg.linear_transformer,
+            "param_count": cfg.param_count(),
+        },
+        "chunk_len": C,
+        "kv_state_shape": [L, H, dh, dh],
+        "flops_fwd_per_chunk": flops_fwd,
+        "params": [
+            {"name": n, "shape": list(s), "init": kind, "std": std}
+            for n, s, kind, std in pspecs
+        ],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root")
+    ap.add_argument("--config", default=None,
+                    help="lower only this config name")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="lower only this chunk length")
+    ap.add_argument("--no-unfused", action="store_true",
+                    help="skip the Table-5 ablation variants")
+    args = ap.parse_args()
+
+    bundles = [
+        (n, c) for (n, c) in BUNDLES
+        if (args.config is None or n == args.config)
+        and (args.chunk is None or c == args.chunk)
+    ]
+    for name, chunk in bundles:
+        cfg = CONFIGS[name]
+        # The 100M e2e bundle skips the unfused twins: they exist for the
+        # Table-5 ablation which runs on the small config.
+        with_unfused = not args.no_unfused and name != "e2e"
+        print(f"[aot] lowering {name} (params={cfg.param_count()/1e6:.1f}M) "
+              f"chunk={chunk}")
+        lower_bundle(cfg, chunk, args.out, with_unfused=with_unfused)
+    print(f"[aot] done: {len(bundles)} bundle(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Named model configurations shared between the AOT pipeline and tests.
+
+Each config describes a TNL-style linear-attention transformer (see
+``model.py``).  The Rust side never sees this file — it reads the JSON
+manifest that ``aot.py`` emits — but the *names* are shared: Makefile
+targets, Rust benches and examples refer to artifact bundles as
+``artifacts/<name>_c<chunk>/``.
+
+Scale note (DESIGN.md §3): the paper trains TNL-1B/7B on A100 clusters;
+numerics here run on the CPU PJRT backend, so the measured configs are
+CPU-feasible while the 1B/7B shapes live in the Rust analytic model
+(`analytic::models`) for the Fig. 3/4 projections.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for one model family member."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ffn_dim: int
+    # lam == 1 for every head reproduces the classical Linear Transformer
+    # (Katharopoulos et al. 2020); otherwise TNL/RetNet per-head decay.
+    linear_transformer: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def lam(self) -> list[float]:
+        """Per-head decay rates (RetNet/TNL schedule).
+
+        ``lam_h = 1 - 2^{-5-h}`` spreads memory horizons across heads;
+        the Linear-Transformer variant pins every head to ``lam = 1``
+        (paper Eq. 5 with lambda = 1).
+        """
+        if self.linear_transformer:
+            return [1.0] * self.n_heads
+        return [1.0 - 2.0 ** (-5.0 - h) for h in range(self.n_heads)]
+
+    def param_count(self) -> int:
+        d, f, L, V = self.d_model, self.ffn_dim, self.n_layers, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # attn + GLU + norms
+        return L * per_layer + V * d + d  # + embedding + final norm
+
+
+# CPU-feasible members of the TNL family.  `e2e` is the ~100M end-to-end
+# training config mandated by DESIGN.md §5 (system row).
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                    ffn_dim=128),
+        ModelConfig("tiny_lt", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                    ffn_dim=128, linear_transformer=True),
+        ModelConfig("small", vocab=2048, d_model=256, n_layers=4, n_heads=4,
+                    ffn_dim=512),
+        ModelConfig("small_lt", vocab=2048, d_model=256, n_layers=4,
+                    n_heads=4, ffn_dim=512, linear_transformer=True),
+        ModelConfig("e2e", vocab=16384, d_model=768, n_layers=12,
+                    n_heads=12, ffn_dim=2048),
+    ]
+}
+
+# Artifact bundles built by `make artifacts`: (config, chunk_len, variants).
+# chunk_len == sequence_len corresponds to T=1 (the no-SP baseline the
+# convergence table compares against).
+BUNDLES: list[tuple[str, int]] = [
+    ("tiny", 32),
+    ("tiny", 64),
+    ("tiny", 128),     # T=1 for N=128
+    ("tiny_lt", 32),
+    ("tiny_lt", 128),
+    ("small", 256),
+    ("small", 1024),   # T=1 for N=1024
+    ("small_lt", 256),
+    ("small_lt", 1024),
+    ("e2e", 128),
+]
+
+
+def bundle_dir(name: str, chunk: int) -> str:
+    return f"{name}_c{chunk}"

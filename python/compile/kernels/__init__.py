@@ -1,0 +1,2 @@
+"""LASP Layer-1 kernels: Pallas implementations + pure-jnp references."""
+from . import lasp, ref  # noqa: F401

@@ -1,0 +1,420 @@
+"""LASP chunk kernels in Pallas (Layer 1).
+
+The paper's compute hot-spot: causal linear attention over one
+sequence-parallel chunk, decomposed into
+
+  * intra-chunk  — masked left product ``[(Q K^T) . M] V``  (Eq. 7)
+  * inter-chunk  — right product against the incoming memory state
+                   ``Lam Q KV_in``                            (Eq. 9)
+  * state update — ``KV_out = lam^C KV_in + (lam^C Lam^-1 K)^T V`` (Eq. 10)
+
+and the mirrored backward (Algorithm 3).  The *fused* kernels below do all
+three in a single Pallas call per (head, block) grid step — the paper's
+"kernel fusion" optimization — carrying the running ``KV`` state across
+sequential blocks in the kernel's output buffer (the VMEM-resident
+accumulator on a real TPU; see DESIGN.md §Hardware-Adaptation).
+
+Unfused variants (one Pallas call per algebraic term, each re-reading its
+operands from HBM) exist solely for the Table-5 ablation.
+
+TPU adaptation notes:
+  * the paper's Triton kernels tile per threadblock over (batch*head,
+    chunk-block); here the Pallas grid is ``(H, C // blk)`` with the block
+    dimension iterated sequentially so the ``KV`` carry works — on TPU this
+    is the canonical "lightning attention" schedule where the carry lives
+    in VMEM scratch and blocks stream through the MXU.
+  * decay tables (``M``, ``Lam`` diagonals) are precomputed host-side once
+    per block size instead of exponentiating inside the kernel: they are
+    ``O(blk^2)`` and sequence-length independent.
+  * ``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls; lowering through interpret mode emits plain HLO that the
+    Rust runtime executes.  Real-TPU performance is *estimated* (VMEM
+    footprint, MXU utilization) in EXPERIMENTS.md §Perf.
+
+Shapes (per chunk): ``q, k: (H, C, dk)``, ``v: (H, C, dv)``,
+``kv: (H, dk, dv)``, ``lam: (H,)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# CPU PJRT cannot run Mosaic custom-calls; interpret mode lowers the kernel
+# to plain HLO.  Never flip this off in this repo (see module docstring).
+INTERPRET = True
+
+DEFAULT_BLOCK = 128
+
+__all__ = [
+    "lasp_chunk",
+    "lasp_chunk_fwd",
+    "lasp_chunk_bwd",
+    "lasp_chunk_unfused",
+    "pick_block",
+    "decay_tables",
+]
+
+
+def pick_block(C: int, target: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``C`` that is ``<= target``.
+
+    The KV carry requires the grid to cover the chunk exactly; TPU tiles
+    want powers-of-two-ish blocks, so we prefer the biggest divisor up to
+    ``target`` (128 rows keeps the (blk, dk) operand + (blk, blk) score
+    tile comfortably inside VMEM for dk <= 256).
+    """
+    best = 1
+    for b in range(1, min(C, target) + 1):
+        if C % b == 0:
+            best = b
+    return best
+
+
+def decay_tables(blk: int, lam: jax.Array):
+    """Precomputed per-block decay tables for head-wise decay ``lam``.
+
+    Returns ``(m, lq, lk, lc)``:
+      m:  (H, blk, blk)  causal decay mask  ``lam^{i-j}`` (i >= j)
+      lq: (H, blk)       query decay        ``lam^{p+1}``
+      lk: (H, blk)       key decay          ``lam^{blk-1-p}``
+      lc: (H, 1)         block decay        ``lam^{blk}``
+    """
+    i = jnp.arange(blk, dtype=jnp.float32)[:, None]
+    j = jnp.arange(blk, dtype=jnp.float32)[None, :]
+    pw = lam[:, None, None] ** (i - j)[None]
+    m = jnp.where(i >= j, pw, 0.0)
+    p = jnp.arange(blk, dtype=jnp.float32)
+    lq = lam[:, None] ** (p[None, :] + 1.0)
+    lk = lam[:, None] ** (blk - 1.0 - p)[None, :]
+    lc = lam[:, None] ** jnp.float32(blk)
+    return m, lq, lk, lc
+
+
+# ---------------------------------------------------------------------------
+# Fused forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, kv_ref, m_ref, lq_ref, lk_ref, lc_ref,
+                o_ref, kvo_ref):
+    """One (head, block) step of Algorithm 2, fully fused.
+
+    ``kvo_ref`` doubles as the sequential KV carry: initialized from the
+    incoming state at block 0 and left holding ``KV_out`` after the last
+    block (all blocks of one head map to the same output window).
+    """
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        kvo_ref[...] = kv_ref[...]
+
+    kv = kvo_ref[...]                       # (dk, dv) state at block start
+    q = q_ref[...]                          # (blk, dk)
+    k = k_ref[...]
+    v = v_ref[...]                          # (blk, dv)
+    m = m_ref[...]                          # (blk, blk)
+    lq = lq_ref[...]                        # (blk,)
+    lk = lk_ref[...]
+    lc = lc_ref[0]
+
+    o_intra = ((q @ k.T) * m) @ v           # left product, MXU tile
+    o_inter = lq[:, None] * (q @ kv)        # right product vs carried state
+    o_ref[...] = o_intra + o_inter
+    kvo_ref[...] = lc * kv + (lk[:, None] * k).T @ v
+
+
+def lasp_chunk_fwd(q, k, v, kv_in, lam, *, block: int | None = None):
+    """Fused LASP chunk forward. Returns ``(o, kv_out)``."""
+    H, C, dk = q.shape
+    dv = v.shape[-1]
+    blk = block or pick_block(C)
+    assert C % blk == 0, f"chunk {C} not divisible by block {blk}"
+    nblk = C // blk
+    m, lq, lk, lc = decay_tables(blk, lam)
+
+    grid = (H, nblk)
+    o, kv_out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, blk, dk), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, blk, dk), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, blk, dv), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, dk, dv), lambda h, b: (h, 0, 0)),
+            pl.BlockSpec((None, blk, blk), lambda h, b: (h, 0, 0)),
+            pl.BlockSpec((None, blk), lambda h, b: (h, 0)),
+            pl.BlockSpec((None, blk), lambda h, b: (h, 0)),
+            pl.BlockSpec((None, 1), lambda h, b: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, blk, dv), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, dk, dv), lambda h, b: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, C, dv), q.dtype),
+            jax.ShapeDtypeStruct((H, dk, dv), q.dtype),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v, kv_in, m, lq, lk, lc)
+    return o, kv_out
+
+
+# ---------------------------------------------------------------------------
+# Fused backward (two ring-ordered kernels)
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(do_ref, k_ref, v_ref, kv_ref, m_ref, lq_ref, lk_ref, lc_ref,
+               dq_ref, kvc_ref):
+    """Ascending pass: dQ needs the *forward* KV state at each block start
+    (Algorithm 3 lines 7–8), so we recompute the carry exactly as the
+    forward does — this is the kernel-level half of the paper's "KV state
+    caching" story: the chunk-level ``KV_in`` arrives cached from the Rust
+    coordinator, only the intra-chunk block carry is recomputed.
+    """
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        kvc_ref[...] = kv_ref[...]
+
+    kv = kvc_ref[...]
+    do = do_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+
+    dq_intra = ((do @ v.T) * m_ref[...]) @ k            # Eq. 14
+    dq_inter = lq_ref[...][:, None] * (do @ kv.T)       # Eq. 16
+    dq_ref[...] = dq_intra + dq_inter
+    kvc_ref[...] = lc_ref[0] * kv + (lk_ref[...][:, None] * k).T @ v
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, dkv_ref, m_ref, lq_ref, lk_ref,
+                lc_ref, dk_ref, dv_ref, dkvc_ref):
+    """Descending pass (grid step ``b`` maps to block ``nblk-1-b``): dK/dV
+    consume the *reverse* carry ``dKV`` (Algorithm 3 lines 13–19)."""
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        dkvc_ref[...] = dkv_ref[...]
+
+    dkv = dkvc_ref[...]                     # gradient wrt state AFTER block
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    do = do_ref[...]
+    m = m_ref[...]
+    lk = lk_ref[...]
+
+    dk_intra = ((do @ v.T) * m).T @ q                   # Eq. 17
+    dv_intra = ((q @ k.T) * m).T @ do                   # (Algorithm 3 l.10)
+    dk_ref[...] = dk_intra + lk[:, None] * (v @ dkv.T)  # Eq. 19
+    dv_ref[...] = dv_intra + lk[:, None] * (k @ dkv)    # Eq. 22
+    dkvc_ref[...] = lc_ref[0] * dkv + (lq_ref[...][:, None] * q).T @ do  # Eq. 20
+
+
+def lasp_chunk_bwd(q, k, v, kv_in, lam, do, dkv_out, *, block: int | None = None):
+    """Fused LASP chunk backward.
+
+    Args mirror the forward plus the output cotangents ``do`` (local loss
+    gradient) and ``dkv_out`` (the ``dKV`` received from the next rank in
+    the backward ring).
+
+    Returns ``(dq, dk, dv, dkv_in)`` where ``dkv_in`` is the ``dKV`` to
+    send to the previous rank.
+    """
+    H, C, dk_dim = q.shape
+    dv_dim = v.shape[-1]
+    blk = block or pick_block(C)
+    assert C % blk == 0
+    nblk = C // blk
+    m, lq, lk, lc = decay_tables(blk, lam)
+
+    # Ascending pass: dQ (+ forward carry recomputation).
+    dq, _ = pl.pallas_call(
+        _dq_kernel,
+        grid=(H, nblk),
+        in_specs=[
+            pl.BlockSpec((None, blk, dv_dim), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, blk, dk_dim), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, blk, dv_dim), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, dk_dim, dv_dim), lambda h, b: (h, 0, 0)),
+            pl.BlockSpec((None, blk, blk), lambda h, b: (h, 0, 0)),
+            pl.BlockSpec((None, blk), lambda h, b: (h, 0)),
+            pl.BlockSpec((None, blk), lambda h, b: (h, 0)),
+            pl.BlockSpec((None, 1), lambda h, b: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, blk, dk_dim), lambda h, b: (h, b, 0)),
+            pl.BlockSpec((None, dk_dim, dv_dim), lambda h, b: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, C, dk_dim), q.dtype),
+            jax.ShapeDtypeStruct((H, dk_dim, dv_dim), q.dtype),
+        ],
+        interpret=INTERPRET,
+    )(do, k, v, kv_in, m, lq, lk, lc)
+
+    # Descending pass: dK, dV, dKV_in.  Block index runs high -> low.
+    nb = nblk  # captured by the reversed index maps below
+
+    def rev(h, b):
+        return (h, nb - 1 - b, 0)
+
+    dk_arr, dv_arr, dkv_in = pl.pallas_call(
+        _dkv_kernel,
+        grid=(H, nblk),
+        in_specs=[
+            pl.BlockSpec((None, blk, dk_dim), rev),
+            pl.BlockSpec((None, blk, dk_dim), rev),
+            pl.BlockSpec((None, blk, dv_dim), rev),
+            pl.BlockSpec((None, blk, dv_dim), rev),
+            pl.BlockSpec((None, dk_dim, dv_dim), lambda h, b: (h, 0, 0)),
+            pl.BlockSpec((None, blk, blk), lambda h, b: (h, 0, 0)),
+            pl.BlockSpec((None, blk), lambda h, b: (h, 0)),
+            pl.BlockSpec((None, blk), lambda h, b: (h, 0)),
+            pl.BlockSpec((None, 1), lambda h, b: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, blk, dk_dim), rev),
+            pl.BlockSpec((None, blk, dv_dim), rev),
+            pl.BlockSpec((None, dk_dim, dv_dim), lambda h, b: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, C, dk_dim), q.dtype),
+            jax.ShapeDtypeStruct((H, C, dv_dim), q.dtype),
+            jax.ShapeDtypeStruct((H, dk_dim, dv_dim), q.dtype),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v, do, dkv_out, m, lq, lk, lc)
+    return dq, dk_arr, dv_arr, dkv_in
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper — this is what the model calls
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def lasp_chunk(q, k, v, kv_in, lam):
+    """Differentiable fused LASP chunk step: ``(o, kv_out)``.
+
+    Backward implements the paper's Algorithm 3 explicitly (not autodiff
+    through the forward kernel): the cotangent of ``kv_out`` *is* the
+    ``dKV`` ring message, so chaining ``jax.vjp`` over chunks reproduces
+    the backward ring exactly.
+    """
+    return lasp_chunk_fwd(q, k, v, kv_in, lam)
+
+
+def _vjp_fwd(q, k, v, kv_in, lam):
+    o, kv_out = lasp_chunk_fwd(q, k, v, kv_in, lam)
+    return (o, kv_out), (q, k, v, kv_in, lam)
+
+
+def _vjp_bwd(res, cot):
+    q, k, v, kv_in, lam = res
+    do, dkv_out = cot
+    dq, dk, dv, dkv_in = lasp_chunk_bwd(q, k, v, kv_in, lam, do, dkv_out)
+    # lam is a fixed per-head decay (TNL/RetNet style, non-learnable).
+    return dq, dk, dv, dkv_in, jnp.zeros_like(lam)
+
+
+lasp_chunk.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Unfused variant (Table 5 ablation): one Pallas call per algebraic term.
+# Each call re-reads its operands — the extra HBM traffic the paper's
+# kernel fusion removes.
+# ---------------------------------------------------------------------------
+
+
+def _intra_kernel(q_ref, k_ref, v_ref, m_ref, o_ref):
+    o_ref[...] = ((q_ref[...] @ k_ref[...].T) * m_ref[...]) @ v_ref[...]
+
+
+def _inter_kernel(q_ref, kv_ref, lq_ref, o_ref):
+    o_ref[...] = lq_ref[...][:, None] * (q_ref[...] @ kv_ref[...])
+
+
+def _kvupd_kernel(k_ref, v_ref, kv_ref, lk_ref, lc_ref, kvo_ref):
+    kvo_ref[...] = lc_ref[0] * kv_ref[...] + (
+        lk_ref[...][:, None] * k_ref[...]
+    ).T @ v_ref[...]
+
+
+def _full_specs(shape):
+    """BlockSpec taking the full per-head slab of a (H, ...) array."""
+    return pl.BlockSpec((None,) + shape, lambda h: (h,) + (0,) * len(shape))
+
+
+def lasp_chunk_unfused(q, k, v, kv_in, lam):
+    """Unfused LASP chunk forward (ablation): three separate kernels,
+    whole chunk as a single block per head."""
+    H, C, dk = q.shape
+    dv = v.shape[-1]
+    m, lq, lk, lc = decay_tables(C, lam)
+
+    o_intra = pl.pallas_call(
+        _intra_kernel,
+        grid=(H,),
+        in_specs=[_full_specs((C, dk)), _full_specs((C, dk)),
+                  _full_specs((C, dv)), _full_specs((C, C))],
+        out_specs=_full_specs((C, dv)),
+        out_shape=jax.ShapeDtypeStruct((H, C, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v, m)
+
+    o_inter = pl.pallas_call(
+        _inter_kernel,
+        grid=(H,),
+        in_specs=[_full_specs((C, dk)), _full_specs((dk, dv)),
+                  _full_specs((C,))],
+        out_specs=_full_specs((C, dv)),
+        out_shape=jax.ShapeDtypeStruct((H, C, dv), q.dtype),
+        interpret=INTERPRET,
+    )(q, kv_in, lq)
+
+    kv_out = pl.pallas_call(
+        _kvupd_kernel,
+        grid=(H,),
+        in_specs=[_full_specs((C, dk)), _full_specs((C, dv)),
+                  _full_specs((dk, dv)), _full_specs((C,)),
+                  _full_specs((1,))],
+        out_specs=_full_specs((dk, dv)),
+        out_shape=jax.ShapeDtypeStruct((H, dk, dv), q.dtype),
+        interpret=INTERPRET,
+    )(k, v, kv_in, lk, lc)
+
+    return o_intra + o_inter, kv_out
+
+
+@jax.custom_vjp
+def lasp_chunk_unfused_op(q, k, v, kv_in, lam):
+    """Differentiable unfused chunk step (ablation twin of lasp_chunk)."""
+    return lasp_chunk_unfused(q, k, v, kv_in, lam)
+
+
+def _uf_fwd(q, k, v, kv_in, lam):
+    return lasp_chunk_unfused(q, k, v, kv_in, lam), (q, k, v, kv_in, lam)
+
+
+def _uf_bwd(res, cot):
+    q, k, v, kv_in, lam = res
+    do, dkv_out = cot
+    # Unfused backward: full-chunk blocks (block == C) so every term is a
+    # separate whole-chunk kernel under the hood of lasp_chunk_bwd.
+    dq, dk, dv, dkv_in = lasp_chunk_bwd(
+        q, k, v, kv_in, lam, do, dkv_out, block=q.shape[1]
+    )
+    return dq, dk, dv, dkv_in, jnp.zeros_like(lam)
+
+
+lasp_chunk_unfused_op.defvjp(_uf_fwd, _uf_bwd)

@@ -1,0 +1,167 @@
+"""Pure-jnp reference oracles for the LASP chunk kernels.
+
+This module is the *correctness anchor* of Layer 1.  Everything here is
+written in the most obviously-correct way (sequential recurrence, explicit
+masks) and is deliberately slow.  The Pallas kernels in ``lasp.py`` and the
+chunked model in ``model.py`` are validated against these functions by
+``python/tests/``.
+
+Conventions (shared across the whole repo):
+  * per-head layout: ``q, k: (H, N, dk)``, ``v: (H, N, dv)``
+  * memory state:    ``kv: (H, dk, dv)``  (the paper's ``KV_t``)
+  * decay:           ``lam: (H,)`` with ``0 < lam <= 1``; ``lam == 1``
+    recovers the ordinary Linear Transformer (Katharopoulos et al., 2020),
+    ``lam < 1`` the TNL / RetNet exponential decay.
+
+All math follows the paper's equations:
+  Eq. (5):  kv_s = lam * kv_{s-1} + k_s v_s^T,   o_s = q_s^T kv_s
+  Eq. (7):  O_intra = [(Q K^T) . M] V            with M_ij = lam^{i-j}, i>=j
+  Eq. (9):  O_inter = Lam Q KV_prev              with Lam = diag(lam^1..lam^C)
+  Eq. (10): KV_t = lam^C KV_{t-1} + (lam^C Lam^{-1} K)^T V
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "decay_mask",
+    "lam_q",
+    "lam_k",
+    "linear_attention_recurrence",
+    "linear_attention_masked",
+    "chunk_ref",
+    "chunk_ref_vjp",
+    "chunked_full_ref",
+]
+
+
+def decay_mask(C: int, lam: jax.Array) -> jax.Array:
+    """Causal decay mask ``M`` of shape ``(H, C, C)``.
+
+    ``M[h, i, j] = lam[h]**(i - j)`` for ``i >= j`` and ``0`` otherwise.
+    Powers of ``lam`` are exact for ``lam == 1`` and well-behaved for
+    ``lam`` close to 1.
+    """
+    i = jnp.arange(C)[:, None]
+    j = jnp.arange(C)[None, :]
+    exponent = (i - j).astype(jnp.float32)
+    pw = lam[:, None, None] ** exponent[None, :, :]
+    return jnp.where(i >= j, pw, 0.0)
+
+
+def lam_q(C: int, lam: jax.Array) -> jax.Array:
+    """Per-position decay applied to queries for the inter-chunk product.
+
+    ``Lam = diag(lam^1, ..., lam^C)`` from Eq. (9); returned as ``(H, C)``.
+    Position ``p`` (0-indexed) gets ``lam**(p+1)``.
+    """
+    p = jnp.arange(1, C + 1, dtype=jnp.float32)
+    return lam[:, None] ** p[None, :]
+
+
+def lam_k(C: int, lam: jax.Array) -> jax.Array:
+    """Per-position decay applied to keys in the state update.
+
+    ``lam^C Lam^{-1} = diag(lam^{C-1}, ..., lam^0)`` from Eq. (10);
+    returned as ``(H, C)``. Position ``p`` gets ``lam**(C-1-p)``.
+    """
+    p = jnp.arange(C - 1, -1, -1, dtype=jnp.float32)
+    return lam[:, None] ** p[None, :]
+
+
+def linear_attention_recurrence(q, k, v, lam, kv0=None):
+    """Token-by-token recurrence — the ground-truth semantics (Eq. 5).
+
+    Args:
+      q, k: ``(H, N, dk)``; v: ``(H, N, dv)``; lam: ``(H,)``.
+      kv0: optional initial state ``(H, dk, dv)`` (zeros if None).
+
+    Returns:
+      (o, kv_final): ``(H, N, dv)`` outputs and the final state.
+    """
+    H, N, dk = q.shape
+    dv = v.shape[-1]
+    if kv0 is None:
+        kv0 = jnp.zeros((H, dk, dv), dtype=q.dtype)
+
+    def step(kv, inputs):
+        qs, ks, vs = inputs  # (H, dk), (H, dk), (H, dv)
+        kv = lam[:, None, None] * kv + ks[:, :, None] * vs[:, None, :]
+        o = jnp.einsum("hk,hkv->hv", qs, kv)
+        return kv, o
+
+    xs = (jnp.swapaxes(q, 0, 1), jnp.swapaxes(k, 0, 1), jnp.swapaxes(v, 0, 1))
+    kv_final, o = lax.scan(step, kv0, xs)
+    return jnp.swapaxes(o, 0, 1), kv_final
+
+
+def linear_attention_masked(q, k, v, lam):
+    """Left-product form ``[(Q K^T) . M] V`` (Eq. 2 with decay mask).
+
+    Mathematically identical to the recurrence with ``kv0 = 0``; used to
+    cross-check the mask algebra and as the baselines' computational manner
+    (the paper's comparisons run linear attention *without* the
+    right-product trick).
+    """
+    C = q.shape[1]
+    m = decay_mask(C, lam)
+    scores = jnp.einsum("hnk,hmk->hnm", q, k) * m
+    return jnp.einsum("hnm,hmv->hnv", scores, v)
+
+
+def chunk_ref(q, k, v, kv_in, lam):
+    """Reference single-chunk LASP step (Algorithm 2, lines 8–16).
+
+    Args:
+      q, k: ``(H, C, dk)``; v: ``(H, C, dv)``; kv_in: ``(H, dk, dv)``.
+
+    Returns:
+      (o, kv_out) with ``o: (H, C, dv)`` and ``kv_out: (H, dk, dv)``.
+    """
+    C = q.shape[1]
+    o_intra = linear_attention_masked(q, k, v, lam)
+    lq = lam_q(C, lam)  # (H, C)
+    lk = lam_k(C, lam)  # (H, C)
+    o_inter = lq[:, :, None] * jnp.einsum("hck,hkv->hcv", q, kv_in)
+    kv_out = (lam[:, None, None] ** C) * kv_in + jnp.einsum(
+        "hck,hcv->hkv", lk[:, :, None] * k, v
+    )
+    return o_intra + o_inter, kv_out
+
+
+def chunk_ref_vjp(q, k, v, kv_in, lam, do, dkv_out):
+    """Reference chunk backward via jax autodiff of :func:`chunk_ref`.
+
+    Matches the paper's Algorithm 3 when applied per chunk: the cotangent
+    of ``kv_out`` is the incoming ``dKV`` from the next rank, the returned
+    cotangent of ``kv_in`` is the ``dKV`` sent to the previous rank.
+
+    Returns (dq, dk, dv, dkv_in).
+    """
+
+    def f(q_, k_, v_, kv_):
+        return chunk_ref(q_, k_, v_, kv_, lam)
+
+    _, vjp = jax.vjp(f, q, k, v, kv_in)
+    return vjp((do, dkv_out))
+
+
+def chunked_full_ref(q, k, v, lam, T: int):
+    """Run a full sequence through T chained chunk steps (the LASP ring,
+    serialized).  Must equal :func:`linear_attention_recurrence` on the
+    whole sequence — the core exactness claim of the paper.
+    """
+    H, N, dk = q.shape
+    dv = v.shape[-1]
+    assert N % T == 0, "sequence length must divide into T chunks"
+    C = N // T
+    kv = jnp.zeros((H, dk, dv), dtype=q.dtype)
+    outs = []
+    for t in range(T):
+        sl = slice(t * C, (t + 1) * C)
+        o, kv = chunk_ref(q[:, sl], k[:, sl], v[:, sl], kv, lam)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), kv

@@ -1,0 +1,267 @@
+"""Layer 2: TNL-style linear-attention transformer in JAX.
+
+The paper evaluates LASP on TransNormerLLM (TNL) and the classical Linear
+Transformer.  This module implements that family:
+
+  block(x) = x + O_proj( Norm( LASP-attn( silu(x W_q), silu(x W_k), x W_v ) ) )
+             then
+             x + W_2 ( silu(x W_1) * (x W_3) )        (SiLU-GLU FFN)
+
+with RMSNorm pre-normalization, per-head decay ``lam`` (TNL/RetNet
+schedule; all-ones for the Linear-Transformer variant) and a weight-tied
+LM head.  The attention core is the Layer-1 Pallas kernel
+(:func:`compile.kernels.lasp.lasp_chunk`), so the whole chunk step lowers
+into a single HLO module.
+
+Everything is written *per chunk*: the functions take the incoming memory
+states ``kv_in (L, H, dk, dv)`` and return the outgoing states, which is
+exactly the unit the Rust coordinator schedules around the ring
+(Algorithms 2/3).  Python never runs at training time — these functions
+exist to be lowered by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.lasp import lasp_chunk, lasp_chunk_unfused_op
+
+Params = dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...], str, float]]:
+    """Ordered parameter table: (name, shape, init_kind, init_std).
+
+    The order here *is* the ABI between Python and Rust: ``aot.py`` writes
+    it into the manifest and the Rust ``model::ParamStore`` materializes
+    and feeds buffers in exactly this order.
+    """
+    d, f, V = cfg.d_model, cfg.ffn_dim, cfg.vocab
+    std = 0.02
+    out_std = std / (2.0 * cfg.n_layers) ** 0.5  # GPT-2 style residual scaling
+    specs: list[tuple[str, tuple[int, ...], str, float]] = [
+        ("embed", (V, d), "normal", std),
+        ("final_norm", (d,), "ones", 0.0),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        specs += [
+            (p + "attn_norm", (d,), "ones", 0.0),
+            (p + "wq", (d, d), "normal", std),
+            (p + "wk", (d, d), "normal", std),
+            (p + "wv", (d, d), "normal", std),
+            (p + "wo", (d, d), "normal", out_std),
+            (p + "ffn_norm", (d,), "ones", 0.0),
+            (p + "w1", (d, f), "normal", std),
+            (p + "w3", (d, f), "normal", std),
+            (p + "w2", (f, d), "normal", out_std),
+        ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Reference initializer (tests only; Rust owns init at training time)."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape, kind, std in param_specs(cfg):
+        if kind == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Params) -> list[jax.Array]:
+    return [params[name] for name, *_ in param_specs(cfg)]
+
+
+def list_to_params(cfg: ModelConfig, flat: list[jax.Array]) -> Params:
+    return {name: x for (name, *_), x in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array | None = None, eps: float = 1e-6):
+    """RMSNorm; gain-free form is TNL's ``Norm(.)`` on attention outputs
+    (the SRMSNorm of Qin et al. 2024a)."""
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    y = x * r
+    return y if gain is None else y * gain
+
+
+def _attention(cfg: ModelConfig, params: Params, layer: int, x: jax.Array,
+               kv_in: jax.Array, chunk_op: Callable):
+    """One LASP attention layer over a chunk ``x: (C, d)``.
+
+    Returns (attn_out (C, d), kv_out (H, dk, dv)).
+    """
+    p = f"layer{layer:02d}."
+    C, d = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    h = rmsnorm(x, params[p + "attn_norm"])
+    # TNL applies a non-negative activation to q/k (the linear-attention
+    # feature map); SiLU keeps the kernel trick well-conditioned.
+    q = jax.nn.silu(h @ params[p + "wq"])
+    k = jax.nn.silu(h @ params[p + "wk"])
+    v = h @ params[p + "wv"]
+    # (C, d) -> (H, C, dh)
+    to_heads = lambda t: jnp.transpose(t.reshape(C, H, dh), (1, 0, 2))
+    lam = jnp.asarray(cfg.lam(), jnp.float32)
+    o, kv_out = chunk_op(to_heads(q), to_heads(k), to_heads(v), kv_in, lam)
+    o = jnp.transpose(o, (1, 0, 2)).reshape(C, d)
+    # Eq. (2)'s Norm(.) — gain-free RMSNorm over the merged heads.
+    o = rmsnorm(o)
+    return o @ params[p + "wo"], kv_out
+
+
+def _ffn(cfg: ModelConfig, params: Params, layer: int, x: jax.Array):
+    p = f"layer{layer:02d}."
+    h = rmsnorm(x, params[p + "ffn_norm"])
+    return (jax.nn.silu(h @ params[p + "w1"]) * (h @ params[p + "w3"])) @ params[p + "w2"]
+
+
+def forward_chunk(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  kv_in: jax.Array, *, fused: bool = True):
+    """Transformer forward over one chunk.
+
+    Args:
+      tokens: ``(C,)`` int32 token ids.
+      kv_in:  ``(L, H, dk, dv)`` memory states received from the previous
+              rank (zeros for the first chunk).
+      fused:  select the fused LASP kernel or the unfused ablation twin.
+
+    Returns:
+      (hidden (C, d), kv_out (L, H, dk, dv)).
+    """
+    chunk_op = lasp_chunk if fused else lasp_chunk_unfused_op
+    x = params["embed"][tokens]
+    kv_outs = []
+    for l in range(cfg.n_layers):
+        attn, kv_out = _attention(cfg, params, l, x, kv_in[l], chunk_op)
+        x = x + attn
+        x = x + _ffn(cfg, params, l, x)
+        kv_outs.append(kv_out)
+    x = rmsnorm(x, params["final_norm"])
+    return x, jnp.stack(kv_outs)
+
+
+def chunk_logits(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 kv_in: jax.Array):
+    """Forward to vocabulary logits (weight-tied head). For eval/decode."""
+    x, kv_out = forward_chunk(cfg, params, tokens, kv_in)
+    return x @ params["embed"].T, kv_out
+
+
+def chunk_loss(cfg: ModelConfig, params: Params, tokens: jax.Array,
+               labels: jax.Array, kv_in: jax.Array, *, fused: bool = True):
+    """Summed next-token cross-entropy over one chunk.
+
+    Labels are supplied by the coordinator (`labels[i]` is the token after
+    `tokens[i]`, crossing the chunk boundary), so the loss is exactly the
+    full-sequence LM loss when summed over all chunks.
+
+    Returns (loss_sum, kv_out).
+    """
+    x, kv_out = forward_chunk(cfg, params, tokens, kv_in, fused=fused)
+    logits = x @ params["embed"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll), kv_out
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_chunk_fwd(cfg: ModelConfig, *, fused: bool = True):
+    """(params..., tokens, labels, kv_in) -> (loss_sum, kv_out)."""
+
+    def fn(flat_params, tokens, labels, kv_in):
+        params = list_to_params(cfg, flat_params)
+        loss, kv_out = chunk_loss(cfg, params, tokens, labels, kv_in,
+                                  fused=fused)
+        return loss, kv_out
+
+    return fn
+
+
+def make_chunk_bwd(cfg: ModelConfig, *, fused: bool = True):
+    """(params..., tokens, labels, kv_in, dkv_out, loss_scale)
+         -> (dparams..., dkv_in, loss_sum).
+
+    Implements the chunk-local slice of Algorithm 3 at the *model* level:
+    seeding the loss cotangent with ``loss_scale`` (1/total_tokens, chosen
+    by the coordinator) and folding the incoming ``dKV`` ring message in
+    via the dot-product trick — ``grad(loss*s + <kv_out, dkv_out>)`` gives
+    simultaneously the parameter gradients and the outgoing ``dKV``.
+
+    ``kv_in`` arrives from the coordinator's KV state cache (paper §2.4):
+    the forward is recomputed *inside the chunk* (per-chunk activation
+    recomputation) but the cross-chunk states are never recomputed or
+    re-communicated.
+    """
+
+    def fn(flat_params, tokens, labels, kv_in, dkv_out, loss_scale):
+        def objective(fp, kv):
+            params = list_to_params(cfg, fp)
+            loss, kv_out = chunk_loss(cfg, params, tokens, labels, kv,
+                                      fused=fused)
+            return loss * loss_scale + jnp.sum(kv_out * dkv_out), loss
+
+        grads, loss = jax.grad(objective, argnums=(0, 1), has_aux=True)(
+            flat_params, kv_in)
+        dparams, dkv_in = grads
+        return tuple(dparams) + (dkv_in, loss)
+
+    return fn
+
+
+def make_chunk_logits(cfg: ModelConfig):
+    """(params..., tokens, kv_in) -> (logits, kv_out)."""
+
+    def fn(flat_params, tokens, kv_in):
+        params = list_to_params(cfg, flat_params)
+        return chunk_logits(cfg, params, tokens, kv_in)
+
+    return fn
+
+
+def make_ring_block(cfg: ModelConfig, chunk: int):
+    """Baseline numerics for Ring Attention on linear attention *without*
+    the right-product trick (paper §4: baselines keep their original
+    left-product computational manner).
+
+    One ring step: the local query chunk attends to a remote (k, v) chunk
+    that is ``m`` hops behind in the sequence, accumulating into ``acc``:
+
+        acc += [(Q K^T) . D] V,   D_pr = lam^{p + m*C - r}  (masked causal
+                                         when m == 0)
+
+    (q, k, v, acc, moff) -> acc'   with moff = float(m * C).
+    """
+    H, dh = cfg.n_heads, cfg.head_dim
+    lam = jnp.asarray(cfg.lam(), jnp.float32)
+
+    def fn(q, k, v, acc, moff):
+        p = jnp.arange(chunk, dtype=jnp.float32)[:, None]
+        r = jnp.arange(chunk, dtype=jnp.float32)[None, :]
+        e = p + moff - r
+        d = jnp.where(e >= 0, lam[:, None, None] ** e[None], 0.0)
+        scores = jnp.einsum("hpk,hrk->hpr", q, k) * d
+        return acc + jnp.einsum("hpr,hrv->hpv", scores, v)
+
+    return fn

@@ -1,0 +1,77 @@
+"""Generalization tests (paper Appendix A.4): the LASP chunk decomposition
+holds for every diagonal-oscillation instance of the general recurrent
+form — S4/DSS, TNL/RetNet, HGRN-style gates, and plain linear attention —
+with the ring message remaining a (k, d) state independent of chunk size.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.general import (
+    TABLE3_INSTANCES,
+    general_chunk,
+    general_chunked_full,
+    general_recurrence,
+)
+
+
+def make_inputs(rng, n, k, d):
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    return mk(n, k), mk(n, d), mk(n, k)  # e, i, s
+
+
+@pytest.mark.parametrize("name", sorted(TABLE3_INSTANCES))
+@pytest.mark.parametrize("T", [1, 2, 4])
+def test_chunked_equals_recurrence(name, T):
+    rng = np.random.default_rng(abs(hash((name, T))) % 2**32)
+    n, k, d = 32, 8, 12
+    e, i, s = make_inputs(rng, n, k, d)
+    a = TABLE3_INSTANCES[name](k)
+    y_ref, m_ref = general_recurrence(e, i, s, a)
+    y, m = general_chunked_full(e, i, s, a, T)
+    np.testing.assert_allclose(y, y_ref, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(m, m_ref, atol=2e-4, rtol=2e-4)
+
+
+def test_message_size_is_chunk_independent():
+    rng = np.random.default_rng(0)
+    k, d = 8, 12
+    a = TABLE3_INSTANCES["s4_dss"](k)
+    for C in (4, 16, 64):
+        e, i, s = make_inputs(rng, C, k, d)
+        m_in = jnp.zeros((k, d), jnp.float32)
+        _, m_out = general_chunk(e, i, s, a, m_in)
+        assert m_out.shape == (k, d)  # the LASP property, generalized
+
+
+def test_linear_attention_instance_matches_lasp_kernel():
+    """The a=1 instance must agree with the per-head LASP reference."""
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(5)
+    n, k = 32, 8
+    e, i, s = make_inputs(rng, n, k, k)
+    a = TABLE3_INSTANCES["linear_attention"](k)
+    y, _ = general_chunked_full(e, i, s, a, T=4)
+    # per-head reference with lam=1: q=s, k=e, v=i
+    o_ref, _ = ref.linear_attention_recurrence(
+        s[None], e[None], i[None], jnp.ones((1,), jnp.float32))
+    np.testing.assert_allclose(y, o_ref[0], atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 2, 4]),
+    k=st.sampled_from([2, 4, 8]),
+    lo=st.floats(min_value=0.2, max_value=1.0),
+)
+def test_chunk_invariance_property(t, k, lo):
+    rng = np.random.default_rng(abs(hash((t, k))) % 2**32)
+    n, d = 16 * t, 6
+    e, i, s = make_inputs(rng, n, k, d)
+    a = jnp.asarray(np.linspace(lo, 1.0, k), jnp.float32)
+    y_ref, _ = general_recurrence(e, i, s, a)
+    y, _ = general_chunked_full(e, i, s, a, t)
+    np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-3)

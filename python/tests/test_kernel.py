@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas LASP kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: every claim the
+Rust coordinator makes about exactness rests on these kernels matching the
+sequential recurrence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import lasp, ref
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def make_case(rng, H=2, C=64, dk=16, dv=16, lam_kind="mixed"):
+    q = rand(rng, H, C, dk)
+    k = rand(rng, H, C, dk)
+    v = rand(rng, H, C, dv)
+    kv = rand(rng, H, dk, dv)
+    if lam_kind == "ones":
+        lam = jnp.ones((H,), jnp.float32)
+    elif lam_kind == "decay":
+        lam = jnp.asarray([1.0 - 2.0 ** (-5 - h) for h in range(H)], jnp.float32)
+    else:
+        lam = jnp.linspace(0.9, 1.0, H).astype(jnp.float32)
+    return q, k, v, kv, lam
+
+
+@pytest.mark.parametrize("lam_kind", ["ones", "decay", "mixed"])
+@pytest.mark.parametrize("C,block", [(32, 32), (64, 16), (128, 128), (96, 32)])
+def test_fwd_matches_ref(lam_kind, C, block):
+    rng = np.random.default_rng(hash((lam_kind, C, block)) % 2**32)
+    q, k, v, kv, lam = make_case(rng, C=C, lam_kind=lam_kind)
+    o_ref, kv_ref = ref.chunk_ref(q, k, v, kv, lam)
+    o, kv_out = lasp.lasp_chunk_fwd(q, k, v, kv, lam, block=block)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(kv_out, kv_ref, atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("lam_kind", ["ones", "decay"])
+@pytest.mark.parametrize("C,block", [(32, 32), (64, 16), (96, 32)])
+def test_bwd_matches_autodiff(lam_kind, C, block):
+    rng = np.random.default_rng(hash((lam_kind, C, block, "b")) % 2**32)
+    q, k, v, kv, lam = make_case(rng, C=C, lam_kind=lam_kind)
+    do = rand(rng, *v.shape)
+    dkv = rand(rng, *kv.shape)
+    ref_grads = ref.chunk_ref_vjp(q, k, v, kv, lam, do, dkv)
+    grads = lasp.lasp_chunk_bwd(q, k, v, kv, lam, do, dkv, block=block)
+    for name, a, b in zip(["dq", "dk", "dv", "dkv_in"], grads, ref_grads):
+        np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL, err_msg=name)
+
+
+def test_custom_vjp_wires_ring_cotangents():
+    """jax.vjp through lasp_chunk must produce Algorithm-3 gradients."""
+    rng = np.random.default_rng(7)
+    q, k, v, kv, lam = make_case(rng, C=32)
+    do = rand(rng, *v.shape)
+    dkv = rand(rng, *kv.shape)
+    _, vjp = jax.vjp(lambda *a: lasp.lasp_chunk(*a, lam), q, k, v, kv)
+    dq, dk, dv, dkv_in = vjp((do, dkv))
+    rq, rk, rv, rkv = ref.chunk_ref_vjp(q, k, v, kv, lam, do, dkv)
+    np.testing.assert_allclose(dq, rq, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(dk, rk, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(dv, rv, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(dkv_in, rkv, atol=ATOL, rtol=RTOL)
+
+
+def test_unfused_matches_fused():
+    """Table-5 ablation twin computes identical numerics."""
+    rng = np.random.default_rng(9)
+    q, k, v, kv, lam = make_case(rng, C=64)
+    of, kvf = lasp.lasp_chunk_fwd(q, k, v, kv, lam)
+    ou, kvu = lasp.lasp_chunk_unfused(q, k, v, kv, lam)
+    np.testing.assert_allclose(of, ou, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(kvf, kvu, atol=ATOL, rtol=RTOL)
+
+
+def test_chunked_chain_equals_recurrence():
+    """The exactness claim: T chained chunk steps == token recurrence."""
+    rng = np.random.default_rng(11)
+    H, N, dk = 2, 128, 16
+    q, k, v, _, lam = make_case(rng, H=H, C=N, dk=dk, lam_kind="decay")
+    o_seq, kv_seq = ref.linear_attention_recurrence(q, k, v, lam)
+    for T in (1, 2, 4, 8):
+        C = N // T
+        kv = jnp.zeros((H, dk, dk), jnp.float32)
+        outs = []
+        for t in range(T):
+            sl = slice(t * C, (t + 1) * C)
+            o, kv = lasp.lasp_chunk_fwd(q[:, sl], k[:, sl], v[:, sl], kv, lam)
+            outs.append(o)
+        o_all = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(o_all, o_seq, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(kv, kv_seq, atol=ATOL, rtol=RTOL)
+
+
+def test_masked_equals_recurrence():
+    """Left-product (baseline manner) == recurrence with zero init state."""
+    rng = np.random.default_rng(13)
+    q, k, v, _, lam = make_case(rng, C=48, lam_kind="decay")
+    o_l = ref.linear_attention_masked(q, k, v, lam)
+    o_r, _ = ref.linear_attention_recurrence(q, k, v, lam)
+    np.testing.assert_allclose(o_l, o_r, atol=ATOL, rtol=RTOL)
+
+
+def test_decay_tables_algebra():
+    """Tables satisfy the recurrences the kernels rely on."""
+    lam = jnp.asarray([0.97, 1.0], jnp.float32)
+    blk = 8
+    m, lq, lk, lc = lasp.decay_tables(blk, lam)
+    # m diagonal is 1, strictly upper is 0
+    for h in range(2):
+        np.testing.assert_allclose(np.diag(np.asarray(m[h])), 1.0)
+        assert np.all(np.triu(np.asarray(m[h]), 1) == 0.0)
+        # lq[p] = lam^{p+1}; lk[p] = lam^{blk-1-p}; lq[p]*lk[p] = lam^blk
+        np.testing.assert_allclose(
+            np.asarray(lq[h] * lk[h]), np.asarray(lc[h, 0]) * np.ones(blk),
+            rtol=1e-6)
+
+
+def test_pick_block_divides():
+    for C in [1, 2, 7, 31, 32, 96, 100, 128, 1000, 4096]:
+        b = lasp.pick_block(C)
+        assert C % b == 0 and b <= max(1, min(C, 128))
+
+
+def test_zero_kv_in_matches_masked():
+    """With zero incoming state a chunk is plain masked attention."""
+    rng = np.random.default_rng(17)
+    q, k, v, _, lam = make_case(rng, C=32)
+    kv0 = jnp.zeros((2, 16, 16), jnp.float32)
+    o, _ = lasp.lasp_chunk_fwd(q, k, v, kv0, lam)
+    np.testing.assert_allclose(
+        o, ref.linear_attention_masked(q, k, v, lam), atol=ATOL, rtol=RTOL)
+
+
+def test_rectangular_head_dims():
+    """dk != dv must work (the paper's general memory state is k x d)."""
+    rng = np.random.default_rng(19)
+    q, k, v, kv, lam = make_case(rng, C=32, dk=8, dv=24)
+    o_ref, kv_ref = ref.chunk_ref(q, k, v, kv, lam)
+    o, kv_out = lasp.lasp_chunk_fwd(q, k, v, kv, lam, block=16)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(kv_out, kv_ref, atol=ATOL, rtol=RTOL)

@@ -1,0 +1,68 @@
+//! Fig. 3 / Table 4: LASP scalability — throughput (tokens/sec) and
+//! per-GPU memory across sequence lengths 2K–4096K and 16–128 GPUs, with
+//! DDP and FSDP backends and the OOM frontier marked "x" like the paper.
+//!
+//! Cluster-scale numbers come from the calibrated analytic model
+//! (DESIGN.md §3); a small real run on the CPU substrate is appended to
+//! anchor the shape with measured numbers.
+//!
+//! Run: cargo bench --bench fig3_scalability
+
+use lasp::analytic::{memory_per_gpu, models::TNL_1B, throughput_tokens_per_sec,
+                     DdpBackend, SpMethod};
+use lasp::cluster::Topology;
+use lasp::coordinator::{train, TrainConfig};
+use lasp::runtime::artifact_root;
+use lasp::util::stats::{fmt_klen, Table};
+
+fn main() {
+    println!("== Fig. 3 / Table 4: Scalability of LASP (TNL-1B, batch 1) ==\n");
+    let seqs: Vec<usize> = (11..=22).map(|e| 1usize << e).collect(); // 2K..4096K
+    let gpus = [16usize, 32, 64, 128];
+    for backend in [DdpBackend::Ddp, DdpBackend::Fsdp] {
+        println!("-- LASP + {} --", backend.name());
+        let mut tab = Table::new(&["SeqLen", "GPUs", "Throughput (tok/s)",
+                                   "Memory/GPU (GB)"]);
+        for &n in &seqs {
+            for &w in &gpus {
+                let topo = Topology::a100(w);
+                let dp = if backend == DdpBackend::Fsdp { w as u64 } else { 1 };
+                match throughput_tokens_per_sec(
+                    &TNL_1B, SpMethod::Lasp, &topo, n as u64, w as u64, backend,
+                    dp, 1, false,
+                ) {
+                    Some(tp) => {
+                        let mem = memory_per_gpu(&TNL_1B, SpMethod::Lasp,
+                                                 n as u64, w as u64, dp, backend,
+                                                 1, false);
+                        tab.row(&[fmt_klen(n), w.to_string(), format!("{tp:.1}"),
+                                  format!("{:.1}", mem.total_gb())]);
+                    }
+                    None => tab.row(&[fmt_klen(n), w.to_string(),
+                                      "x (OOM)".into(), "x".into()]),
+                }
+            }
+        }
+        println!("{}", tab.render());
+    }
+
+    // Measured small-scale anchor on the real substrate.
+    if artifact_root().join("tiny_c32/manifest.json").exists() {
+        println!("-- measured on CPU-PJRT substrate (tiny model) --");
+        let mut tab =
+            Table::new(&["N", "T", "tokens/s (measured)", "ring bytes/step"]);
+        for (chunk, sp) in [(32usize, 2usize), (32, 4), (64, 4)] {
+            let mut cfg = TrainConfig::new("tiny", chunk, sp);
+            cfg.steps = 3;
+            cfg.warmup = 10;
+            let r = train(&cfg).unwrap();
+            tab.row(&[
+                (chunk * sp).to_string(),
+                sp.to_string(),
+                format!("{:.0}", r.tokens_per_sec),
+                (r.ring_bytes / cfg.steps as u64).to_string(),
+            ]);
+        }
+        println!("{}", tab.render());
+    }
+}

@@ -1,0 +1,96 @@
+//! §Perf micro-benchmarks of the L3 hot path: executable latency, literal
+//! conversion, ring hop, gradient all-reduce — the numbers behind
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+use lasp::comm::CommWorld;
+use lasp::model::ParamStore;
+use lasp::runtime::{artifact_root, literals, load_bundle, zero_kv, Device};
+use lasp::tensor::{IntTensor, Tensor, Value};
+use lasp::util::stats::{bench, Table};
+
+fn main() {
+    if !artifact_root().join("tiny_c32/manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut tab = Table::new(&["hot path", "mean", "p50", "p95"]);
+    let fmt = |s: f64| {
+        if s < 1e-3 {
+            format!("{:.1} us", s * 1e6)
+        } else {
+            format!("{:.2} ms", s * 1e3)
+        }
+    };
+    let mut row = |name: &str, s: lasp::util::stats::Summary| {
+        tab.row(&[name.into(), fmt(s.mean), fmt(s.p50), fmt(s.p95)]);
+    };
+
+    // 1) chunk_fwd / chunk_bwd executable latency (the per-step compute)
+    let b = load_bundle("tiny", 32).unwrap();
+    let dev = Device::new(&b, &["chunk_fwd", "chunk_bwd"]).unwrap();
+    let params = ParamStore::init(&b, 0);
+    let c = b.chunk_len;
+    let mut args: Vec<Value> =
+        params.tensors().iter().cloned().map(Value::F32).collect();
+    args.push(IntTensor::new(vec![c], vec![1; c]).into());
+    args.push(IntTensor::new(vec![c], vec![2; c]).into());
+    args.push(zero_kv(&b).into());
+    row("chunk_fwd exec (tiny/C=32)",
+        bench(3, 20, || { dev.exec("chunk_fwd", &args).unwrap(); }));
+
+    let mut bargs = args.clone();
+    bargs.push(zero_kv(&b).into());
+    bargs.push(Tensor::scalar(1.0 / c as f32).into());
+    row("chunk_bwd exec (tiny/C=32)",
+        bench(3, 20, || { dev.exec("chunk_bwd", &bargs).unwrap(); }));
+
+    // 2) literal conversion of a KV state (per ring message)
+    let kv = zero_kv(&b);
+    let v: Value = kv.clone().into();
+    row("tensor->literal (KV state)",
+        bench(10, 200, || { literals::to_literal(&v).unwrap(); }));
+
+    // 3) ring hop over the comm substrate (KV-state sized)
+    let world = CommWorld::new(2);
+    let comms = world.communicators();
+    let (c0, c1) = (comms[0].clone(), comms[1].clone());
+    let kv2 = kv.clone();
+    let shape = kv.shape().to_vec();
+    let h = std::thread::spawn(move || {
+        for _ in 0..1000 {
+            c1.recv(0, &shape);
+        }
+    });
+    row("ring hop send (KV state)",
+        bench(0, 1000, || { c0.send(1, &kv2); }));
+    h.join().unwrap();
+
+    // 4) gradient all-reduce (tiny model, W=4)
+    let world = CommWorld::new(4);
+    let n = params.numel();
+    let handles: Vec<_> = world
+        .communicators()
+        .into_iter()
+        .map(|comm| {
+            std::thread::spawn(move || {
+                let g = comm.world_group();
+                let mut t = Tensor::zeros(&[n]);
+                let s = bench(1, 10, || comm.all_reduce(&g, &mut t));
+                if comm.rank() == 0 {
+                    Some(s)
+                } else {
+                    None
+                }
+            })
+        })
+        .collect();
+    for hd in handles {
+        if let Some(s) = hd.join().unwrap() {
+            row(&format!("all_reduce {} f32 (W=4)", n), s);
+        }
+    }
+
+    println!("{}", tab.render());
+}

@@ -1,0 +1,51 @@
+//! Table 6: activation-reducing methods — maximum trainable sequence
+//! length and throughput for {plain, +AC, +LASP, +AC+LASP} under DDP and
+//! FSDP on a single 8-GPU node (TNL-1B, batch 1).
+//!
+//! Max lengths come from the memory model at the 80 GB frontier;
+//! throughputs from the calibrated speed model at each method's max
+//! length (matching how the paper reports the table).
+//!
+//! Run: cargo bench --bench table6_ablation_ac
+
+use lasp::analytic::{max_seq_len, models::TNL_1B, throughput_tokens_per_sec,
+                     DdpBackend, SpMethod};
+use lasp::cluster::Topology;
+use lasp::util::stats::{fmt_klen, Table};
+
+fn main() {
+    println!("== Table 6: Activation Reducing Methods (8x A100, TNL-1B) ==\n");
+    let topo = Topology::a100(8);
+    let hbm = topo.hbm_bytes as f64;
+    let mut tab = Table::new(&["Method", "Max SeqLen", "Throughput (tok/s)"]);
+    let mut maxima = Vec::new();
+    for backend in [DdpBackend::Ddp, DdpBackend::Fsdp] {
+        for (label, t, ac) in [
+            ("", 1u64, false),
+            ("+AC", 1, true),
+            ("+LASP", 8, false),
+            ("+AC+LASP", 8, true),
+        ] {
+            let dp = if backend == DdpBackend::Fsdp { 8 } else { 1 };
+            let n = max_seq_len(&TNL_1B, SpMethod::Lasp, t, dp, backend, 1, ac, hbm);
+            let tp = throughput_tokens_per_sec(&TNL_1B, SpMethod::Lasp, &topo, n,
+                                               t, backend, dp, 1, ac)
+                .unwrap_or(0.0);
+            maxima.push((backend, label, n));
+            tab.row(&[
+                format!("{}{}", backend.name(), label),
+                fmt_klen(n as usize),
+                format!("{tp:.1}"),
+            ]);
+        }
+    }
+    println!("{}", tab.render());
+    // paper shape: each addition strictly extends the max length, and
+    // AC+LASP is the longest per backend.
+    for w in maxima.chunks(4) {
+        assert!(w[1].2 > w[0].2, "AC should extend max len");
+        assert!(w[2].2 > w[0].2, "LASP should extend max len");
+        assert!(w[3].2 > w[1].2.max(w[2].2), "AC+LASP should be longest");
+    }
+    println!("(asserted: plain < AC,LASP < AC+LASP per backend — Table 6's shape)");
+}

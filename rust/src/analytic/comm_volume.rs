@@ -1,0 +1,143 @@
+//! Table 1: per-layer communication volume formulas.
+//!
+//! Paper, §2.3 (elements, per attention-module layer, per iteration):
+//!
+//! | Method            | Full formulation    | Simplified (drop B·d) |
+//! |-------------------|---------------------|-----------------------|
+//! | LASP              | B·d²/h              | d/h                   |
+//! | Ring Attention    | 2·B·N·d/h           | 2N/h                  |
+//! | DeepSpeed-Ulysses | 4·B·N·d/T           | 4N/T                  |
+//! | Megatron-SP       | 2·B·N·d + 4·B·N·d/T | 2N + 4N/T             |
+//!
+//! The `comm` substrate's byte counters verify these against measured
+//! wire traffic in `rust/tests/comm_volume.rs` and the Table-1 bench.
+
+/// The sequence-parallel methods compared by the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpMethod {
+    Lasp,
+    RingAttention,
+    Ulysses,
+    MegatronSp,
+}
+
+impl SpMethod {
+    pub const ALL: [SpMethod; 4] = [
+        SpMethod::Lasp,
+        SpMethod::RingAttention,
+        SpMethod::Ulysses,
+        SpMethod::MegatronSp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpMethod::Lasp => "LASP",
+            SpMethod::RingAttention => "Ring Attention",
+            SpMethod::Ulysses => "DeepSpeed-Ulysses",
+            SpMethod::MegatronSp => "Megatron-SP",
+        }
+    }
+}
+
+/// Communication volume in *elements* per attention layer per iteration
+/// (the paper's "Full Formulation" column).
+///
+/// Args: batch `b`, sequence length `n`, model width `d`, heads `h`,
+/// sequence-parallel size `t`.
+pub fn volume_elements(m: SpMethod, b: u64, n: u64, d: u64, h: u64, t: u64) -> f64 {
+    let (b, n, d, h, t) = (b as f64, n as f64, d as f64, h as f64, t as f64);
+    match m {
+        SpMethod::Lasp => b * d * d / h,
+        SpMethod::RingAttention => 2.0 * b * n * d / h,
+        SpMethod::Ulysses => 4.0 * b * n * d / t,
+        SpMethod::MegatronSp => 2.0 * b * n * d + 4.0 * b * n * d / t,
+    }
+}
+
+/// The paper's "Simplified Formulation" (common factor B·d dropped).
+pub fn volume_simplified(m: SpMethod, n: u64, d: u64, h: u64, t: u64) -> f64 {
+    volume_elements(m, 1, n, d, h, t) / d as f64
+}
+
+/// Crossover: the sub-sequence length `N/T` above which LASP's volume is
+/// the lowest of all methods. The paper states `N/T >= 32` when
+/// `d/h = 128` — i.e. LASP wins as soon as each device holds at least a
+/// quarter of the head dimension… verified in tests.
+pub fn lasp_wins_from_subseq(d: u64, h: u64) -> u64 {
+    // LASP < Ulysses (the tightest of the competitors as T grows with N
+    // fixed per device): B d²/h < 4 B (N/T·T) d / T ⇔ N/T > d²/(4dh/h…)
+    // Solve numerically for robustness instead of algebra on each pair.
+    let mut c = 1u64;
+    loop {
+        let n_over_t = c;
+        // with one chunk per device, N = n_over_t * T; pick T = 64.
+        let t = 64u64;
+        let n = n_over_t * t;
+        let lasp = volume_elements(SpMethod::Lasp, 1, n, d, h, t);
+        let others = [
+            volume_elements(SpMethod::RingAttention, 1, n, d, h, t),
+            volume_elements(SpMethod::Ulysses, 1, n, d, h, t),
+            volume_elements(SpMethod::MegatronSp, 1, n, d, h, t),
+        ];
+        if others.iter().all(|&o| lasp <= o) {
+            return c;
+        }
+        c *= 2;
+        assert!(c < 1 << 40, "no crossover found");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lasp_volume_is_sequence_independent() {
+        let v1 = volume_elements(SpMethod::Lasp, 1, 2048, 2048, 16, 64);
+        let v2 = volume_elements(SpMethod::Lasp, 1, 4 << 20, 2048, 16, 64);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn others_grow_with_sequence() {
+        for m in [SpMethod::RingAttention, SpMethod::Ulysses, SpMethod::MegatronSp] {
+            let v1 = volume_elements(m, 1, 1 << 15, 2048, 16, 64);
+            let v2 = volume_elements(m, 1, 1 << 16, 2048, 16, 64);
+            assert!((v2 / v1 - 2.0).abs() < 1e-9, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn paper_claim_lasp_lowest_when_subseq_ge_32() {
+        // d/h = 128 as in the paper's Table 1 discussion.
+        let (d, h) = (2048, 16);
+        let c = lasp_wins_from_subseq(d, h);
+        assert!(c <= 32, "crossover at N/T = {c}, paper claims <= 32");
+        // And verify directly at N/T = 32, T = 64:
+        let (n, t) = (32 * 64, 64);
+        let lasp = volume_elements(SpMethod::Lasp, 1, n, d, h, t);
+        for m in [SpMethod::RingAttention, SpMethod::Ulysses, SpMethod::MegatronSp] {
+            assert!(lasp <= volume_elements(m, 1, n, d, h, t), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn megatron_dominates_ring_at_scale() {
+        // Megatron-SP's 2BNd term has no 1/h or 1/T relief.
+        let (n, d, h, t) = (1 << 20, 2048, 16, 64);
+        assert!(
+            volume_elements(SpMethod::MegatronSp, 1, n, d, h, t)
+                > volume_elements(SpMethod::RingAttention, 1, n, d, h, t)
+        );
+    }
+
+    #[test]
+    fn simplified_matches_full_over_bd() {
+        let (n, d, h, t) = (4096, 2048, 16, 64);
+        for m in SpMethod::ALL {
+            let full = volume_elements(m, 1, n, d, h, t);
+            let simp = volume_simplified(m, n, d, h, t);
+            assert!((full / d as f64 - simp).abs() < 1e-9, "{m:?}");
+        }
+    }
+}

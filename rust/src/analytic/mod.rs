@@ -1,0 +1,19 @@
+//! Closed-form scale model: communication volumes (Table 1), per-GPU
+//! memory (Fig. 3 / Table 4 / Table 6 OOM frontiers) and throughput
+//! projections (Fig. 3 / Fig. 4).
+//!
+//! The measured small-scale runs calibrate nothing here — these are the
+//! paper's own formulas plus a standard transformer memory/compute model
+//! evaluated at the paper's cluster parameters (`cluster::Topology::a100`),
+//! so "who wins, by what factor, where the OOM crossovers fall" can be
+//! regenerated without 128 physical GPUs (DESIGN.md §3 substitution).
+
+pub mod comm_volume;
+pub mod memory;
+pub mod models;
+pub mod speed;
+
+pub use comm_volume::{volume_elements, SpMethod};
+pub use memory::{max_seq_len, memory_per_gpu, DdpBackend, MemoryBreakdown};
+pub use models::ModelShape;
+pub use speed::{step_time, throughput_tokens_per_sec};

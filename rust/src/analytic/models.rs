@@ -1,0 +1,141 @@
+//! Model shapes used by the analytic projections.
+//!
+//! The paper's measured models are TNL-1B and TNL-7B; the local CPU runs
+//! use the artifact-bundle configs (`tiny`/`small`/`e2e`) whose shapes are
+//! read from the manifest instead.
+
+/// Transformer shape parameters sufficient for the flop/byte model.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub vocab: usize,
+}
+
+impl ModelShape {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn param_count(&self) -> u64 {
+        let (d, f, l, v) = (
+            self.d_model as u64,
+            self.ffn_dim as u64,
+            self.n_layers as u64,
+            self.vocab as u64,
+        );
+        l * (4 * d * d + 3 * d * f + 2 * d) + v * d + d
+    }
+
+    /// Forward flops for a chunk of `c` tokens with linear attention
+    /// (right-product path: O(c·d²) attention, no c² term beyond the
+    /// intra-block tile which is folded into the constant).
+    pub fn fwd_flops_linear(&self, c: u64) -> f64 {
+        let (d, f, l, v) = (
+            self.d_model as f64,
+            self.ffn_dim as f64,
+            self.n_layers as f64,
+            self.vocab as f64,
+        );
+        let dh = self.head_dim() as f64;
+        let cf = c as f64;
+        // projections + GLU + attention state/products + lm head
+        l * cf * (4.0 * d * d + 3.0 * d * f) * 2.0
+            + l * cf * d * dh * 6.0
+            + cf * d * v * 2.0
+    }
+
+    /// Forward flops for `c` local tokens when attention is computed the
+    /// left-product way over the *full* sequence `n` (the baselines'
+    /// computational manner): the score matrix term is c·n·d.
+    pub fn fwd_flops_left_product(&self, c: u64, n: u64) -> f64 {
+        let (d, f, l, v) = (
+            self.d_model as f64,
+            self.ffn_dim as f64,
+            self.n_layers as f64,
+            self.vocab as f64,
+        );
+        let cf = c as f64;
+        l * cf * (4.0 * d * d + 3.0 * d * f) * 2.0
+            + l * cf * (n as f64) * d * 4.0
+            + cf * d * v * 2.0
+    }
+
+    /// Train-step flops ≈ 3× forward (fwd + 2× bwd).
+    pub fn step_flops_linear(&self, c: u64) -> f64 {
+        3.0 * self.fwd_flops_linear(c)
+    }
+
+    pub fn step_flops_left_product(&self, c: u64, n: u64) -> f64 {
+        3.0 * self.fwd_flops_left_product(c, n)
+    }
+}
+
+/// TNL-1B (Qin et al. 2024a): 2048 width, 16 layers/heads.
+pub const TNL_1B: ModelShape = ModelShape {
+    name: "TNL-1B",
+    d_model: 2048,
+    n_layers: 16,
+    n_heads: 16,
+    ffn_dim: 6144,
+    vocab: 64000,
+};
+
+/// TNL-7B: 4096 width, 30 layers, 32 heads.
+pub const TNL_7B: ModelShape = ModelShape {
+    name: "TNL-7B",
+    d_model: 4096,
+    n_layers: 30,
+    n_heads: 32,
+    ffn_dim: 11264,
+    vocab: 64000,
+};
+
+/// TNL-0.4B (the convergence-table model).
+pub const TNL_04B: ModelShape = ModelShape {
+    name: "TNL-0.4B",
+    d_model: 1024,
+    n_layers: 24,
+    n_heads: 8,
+    ffn_dim: 2816,
+    vocab: 64000,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_names() {
+        let p1 = TNL_1B.param_count() as f64 / 1e9;
+        assert!((0.8..1.3).contains(&p1), "TNL-1B params {p1}B");
+        let p7 = TNL_7B.param_count() as f64 / 1e9;
+        assert!((6.0..8.0).contains(&p7), "TNL-7B params {p7}B");
+        let p04 = TNL_04B.param_count() as f64 / 1e9;
+        assert!((0.3..0.5).contains(&p04), "TNL-0.4B params {p04}B");
+    }
+
+    #[test]
+    fn linear_flops_are_sequence_linear() {
+        // doubling the chunk doubles linear-attention flops…
+        let f1 = TNL_1B.fwd_flops_linear(1024);
+        let f2 = TNL_1B.fwd_flops_linear(2048);
+        assert!((f2 / f1 - 2.0).abs() < 1e-6);
+        // …but left-product flops grow superlinearly with total n
+        let l1 = TNL_1B.fwd_flops_left_product(1024, 16384);
+        let l2 = TNL_1B.fwd_flops_left_product(1024, 32768);
+        assert!(l2 > l1);
+    }
+
+    #[test]
+    fn left_product_dominates_at_long_sequence() {
+        let n = 1 << 21; // 2048K
+        let c = n / 64;
+        assert!(
+            TNL_1B.fwd_flops_left_product(c, n) > 3.0 * TNL_1B.fwd_flops_linear(c)
+        );
+    }
+}

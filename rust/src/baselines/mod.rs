@@ -1,0 +1,19 @@
+//! Baseline sequence-parallel methods (paper §4 comparison protocol).
+//!
+//! Per the paper, baselines run linear attention *without* the
+//! right-product trick, keeping each method's original communication
+//! primitives and computational manner:
+//!
+//!  * [`ring_attention`] — P2P rotation of full K/V chunks with
+//!    left-product blockwise accumulation (real numerics via the
+//!    `ring_block` artifact);
+//!  * [`schedules`]      — Megatron-SP (all-gather + reduce-scatter) and
+//!    DeepSpeed-Ulysses (all-to-all) wire schedules with exactly the
+//!    Table-1 buffer sizes, driven against the comm substrate so the byte
+//!    counters can be checked against the closed forms.
+
+pub mod ring_attention;
+pub mod schedules;
+
+pub use ring_attention::ring_attention_layer;
+pub use schedules::sp_layer_traffic;

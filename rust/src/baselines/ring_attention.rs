@@ -1,0 +1,152 @@
+//! Ring Attention (Liu et al. 2023) on linear attention, left-product
+//! manner — the paper's strongest P2P baseline.
+//!
+//! Every rank holds one (q, k, v) chunk of the sequence. At ring step m,
+//! rank i receives the (k, v) chunk originally owned by rank i-m and
+//! accumulates the causal block product `[(Q Kᵀ) ⊙ D] V` via the
+//! `ring_block` artifact. Unlike LASP the messages are **2·C·d·H/h…
+//! sequence-proportional** (two (H, C, dh) tensors per hop), which is the
+//! Table-1 gap this baseline exists to demonstrate.
+
+use anyhow::Result;
+
+use crate::comm::Communicator;
+use crate::runtime::Device;
+use crate::tensor::{Tensor, Value};
+
+/// One attention layer under the Ring Attention schedule.
+///
+/// `q`, `k`, `v`: this rank's chunks, shape `(H, C, dh)`; `t_idx` is this
+/// rank's chunk index in a ring of `t` ranks whose global rank ids are
+/// `ring[..]` (ring[j] holds chunk j). Returns the local output chunk.
+pub fn ring_attention_layer(
+    dev: &Device,
+    comm: &Communicator,
+    ring: &[usize],
+    t_idx: usize,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+) -> Result<Tensor> {
+    let t = ring.len();
+    let c = q.shape()[1];
+    let me = ring[t_idx];
+    let next = ring[(t_idx + 1) % t];
+    let prev = ring[(t_idx + t - 1) % t];
+
+    let mut acc = Tensor::zeros(q.shape());
+    let mut cur_k = k.clone();
+    let mut cur_v = v.clone();
+    for m in 0..t {
+        // the (k, v) pair currently held came from chunk (t_idx - m)
+        let src = (t_idx + t - m) % t;
+        if src <= t_idx {
+            // causal: only chunks at or before ours contribute
+            let moff = ((t_idx - src) * c) as f32;
+            let out = dev.exec(
+                "ring_block",
+                &[
+                    q.clone().into(),
+                    cur_k.clone().into(),
+                    cur_v.clone().into(),
+                    acc.clone().into(),
+                    Value::F32(Tensor::scalar(moff)),
+                ],
+            )?;
+            acc = out.into_iter().next().unwrap().into_f32();
+        }
+        if m + 1 < t {
+            // rotate k/v around the ring: 2 sequence-sized messages/hop
+            comm.send(next, &cur_k);
+            comm.send(next, &cur_v);
+            cur_k = comm.recv(prev, k.shape());
+            cur_v = comm.recv(prev, v.shape());
+        }
+    }
+    let _ = me;
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommWorld;
+    use crate::runtime::{artifact_root, load_bundle, Device};
+    use crate::util::rng::Rng;
+
+    /// Distributed ring attention must equal the same blocks accumulated
+    /// locally (schedule correctness), for every rank.
+    #[test]
+    fn distributed_matches_local_accumulation() {
+        if !artifact_root().join("tiny_c32/manifest.json").exists() {
+            return;
+        }
+        let bundle = load_bundle("tiny", 32).unwrap();
+        let (h, c, dh) =
+            (bundle.config.n_heads, bundle.chunk_len, bundle.config.head_dim);
+        let t = 4;
+        // generate all chunks up-front (deterministic)
+        let mk = |stream: u64| -> Tensor {
+            let mut rng = Rng::new(9).fork(stream);
+            let mut t = Tensor::zeros(&[h, c, dh]);
+            rng.fill_normal(t.data_mut(), 0.5);
+            t
+        };
+        let qs: Vec<Tensor> = (0..t).map(|i| mk(i as u64)).collect();
+        let ks: Vec<Tensor> = (0..t).map(|i| mk(100 + i as u64)).collect();
+        let vs: Vec<Tensor> = (0..t).map(|i| mk(200 + i as u64)).collect();
+
+        // local reference on one device
+        let dev = Device::new(&bundle, &["ring_block"]).unwrap();
+        let mut expect = Vec::new();
+        for ti in 0..t {
+            let mut acc = Tensor::zeros(&[h, c, dh]);
+            for src in 0..=ti {
+                let moff = ((ti - src) * c) as f32;
+                let out = dev
+                    .exec(
+                        "ring_block",
+                        &[
+                            qs[ti].clone().into(),
+                            ks[src].clone().into(),
+                            vs[src].clone().into(),
+                            acc.clone().into(),
+                            Value::F32(Tensor::scalar(moff)),
+                        ],
+                    )
+                    .unwrap();
+                acc = out.into_iter().next().unwrap().into_f32();
+            }
+            expect.push(acc);
+        }
+
+        // distributed run
+        let world = CommWorld::new(t);
+        let handles: Vec<_> = world
+            .communicators()
+            .into_iter()
+            .enumerate()
+            .map(|(i, comm)| {
+                let bundle = bundle.clone();
+                let (q, k, v) = (qs[i].clone(), ks[i].clone(), vs[i].clone());
+                let expect = expect[i].clone();
+                std::thread::spawn(move || {
+                    let dev = Device::new(&bundle, &["ring_block"]).unwrap();
+                    let ring: Vec<usize> = (0..4).collect();
+                    let out =
+                        ring_attention_layer(&dev, &comm, &ring, i, &q, &k, &v)
+                            .unwrap();
+                    let d = out.max_abs_diff(&expect);
+                    assert!(d < 1e-4, "rank {i}: diff {d}");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // ring traffic: (t-1) hops × 2 tensors × t ranks, sequence-sized
+        let bytes = world.stats().bytes(crate::comm::OpKind::P2p);
+        let per_tensor = (h * c * dh * 4) as u64;
+        assert_eq!(bytes, (t as u64 - 1) * 2 * t as u64 * per_tensor);
+    }
+}

@@ -1,0 +1,169 @@
+//! Simulated cluster topology + interconnect cost model.
+//!
+//! The paper's testbed: up to 16 DGX-A100 nodes (8× A100-80GB each),
+//! NVSwitch intra-node at 600 GB/s, RoCE inter-node at 800 Gb/s
+//! (Appendix A.2). Numerics in this repo execute on per-thread PJRT CPU
+//! devices; *scale* projections (Fig. 3/4, Tables 4/6) use this α-β cost
+//! model with the paper's exact link parameters.
+
+/// Physical layout + link parameters of a GPU cluster.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_nodes: usize,
+    pub gpus_per_node: usize,
+    /// intra-node (NVSwitch) bandwidth, bytes/s per GPU pair
+    pub intra_bw: f64,
+    /// inter-node (RoCE) bandwidth, bytes/s per node
+    pub inter_bw: f64,
+    /// per-message latencies (α in the α-β model), seconds
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+    /// HBM capacity per GPU, bytes
+    pub hbm_bytes: u64,
+    /// sustained matmul throughput per GPU, flop/s (effective, not peak)
+    pub gpu_flops: f64,
+}
+
+impl Topology {
+    /// The paper's DGX-A100 cluster scaled to `n_gpus` (multiples of 8
+    /// become multi-node; smaller counts stay single-node).
+    pub fn a100(n_gpus: usize) -> Topology {
+        let gpus_per_node = n_gpus.min(8);
+        let n_nodes = n_gpus.div_ceil(8);
+        Topology {
+            n_nodes,
+            gpus_per_node,
+            intra_bw: 600e9,             // NVSwitch 600 GB/s
+            inter_bw: 100e9,             // 8x RoCE = 800 Gb/s = 100 GB/s
+            intra_lat: 5e-6,
+            inter_lat: 20e-6,
+            hbm_bytes: 80 * (1u64 << 30), // A100 80GB
+            // ~25% of A100 bf16 peak (312 TF): the sustained MFU the
+            // paper's Table-4 throughputs imply for this stack.
+            gpu_flops: 80e12,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.n_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    /// Are two GPUs on the same node?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// α-β time for one point-to-point message.
+    pub fn p2p_time(&self, src: usize, dst: usize, nbytes: u64) -> f64 {
+        if self.same_node(src, dst) {
+            self.intra_lat + nbytes as f64 / self.intra_bw
+        } else {
+            self.inter_lat + nbytes as f64 / self.inter_bw
+        }
+    }
+
+    /// Worst link crossed by a group spanning `group` GPUs [0..group).
+    fn group_link(&self, group: usize) -> (f64, f64) {
+        if group <= self.gpus_per_node {
+            (self.intra_lat, self.intra_bw)
+        } else {
+            (self.inter_lat, self.inter_bw)
+        }
+    }
+
+    /// Ring all-reduce time over a contiguous group of `n` GPUs for a
+    /// buffer of `nbytes`: 2(n-1) steps of `nbytes/n` each.
+    pub fn all_reduce_time(&self, n: usize, nbytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (lat, bw) = self.group_link(n);
+        2.0 * (n as f64 - 1.0) * (lat + (nbytes as f64 / n as f64) / bw)
+    }
+
+    /// Ring all-gather of per-rank `nbytes` shards over `n` GPUs.
+    pub fn all_gather_time(&self, n: usize, nbytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (lat, bw) = self.group_link(n);
+        (n as f64 - 1.0) * (lat + nbytes as f64 / bw)
+    }
+
+    /// Reduce-scatter of a `nbytes` buffer over `n` GPUs.
+    pub fn reduce_scatter_time(&self, n: usize, nbytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (lat, bw) = self.group_link(n);
+        (n as f64 - 1.0) * (lat + (nbytes as f64 / n as f64) / bw)
+    }
+
+    /// Pairwise all-to-all of total `nbytes` local payload over `n` GPUs.
+    pub fn all_to_all_time(&self, n: usize, nbytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let (lat, bw) = self.group_link(n);
+        (n as f64 - 1.0) * lat + (nbytes as f64 * (n as f64 - 1.0) / n as f64) / bw
+    }
+
+    /// Time to push `flops` through one GPU.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.gpu_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_layout() {
+        let t = Topology::a100(64);
+        assert_eq!(t.n_nodes, 8);
+        assert_eq!(t.gpus_per_node, 8);
+        assert_eq!(t.n_gpus(), 64);
+        assert!(t.same_node(0, 7));
+        assert!(!t.same_node(7, 8));
+        let t4 = Topology::a100(4);
+        assert_eq!(t4.n_nodes, 1);
+        assert_eq!(t4.n_gpus(), 4);
+    }
+
+    #[test]
+    fn p2p_inter_node_is_slower() {
+        let t = Topology::a100(16);
+        let intra = t.p2p_time(0, 1, 1 << 20);
+        let inter = t.p2p_time(7, 8, 1 << 20);
+        assert!(inter > intra);
+    }
+
+    #[test]
+    fn collective_times_scale_with_bytes() {
+        let t = Topology::a100(8);
+        assert!(t.all_reduce_time(8, 2 << 20) > t.all_reduce_time(8, 1 << 20));
+        assert_eq!(t.all_reduce_time(1, 1 << 20), 0.0);
+        // all-gather moves n-1 full shards; reduce-scatter 1/n-sized ones
+        assert!(t.all_gather_time(8, 1 << 20) > t.reduce_scatter_time(8, 1 << 20));
+    }
+
+    #[test]
+    fn multi_node_groups_use_slow_link() {
+        let t = Topology::a100(16);
+        // same byte count, bigger group crossing nodes => slower per-step bw
+        let fast = t.all_reduce_time(8, 1 << 24);
+        let slow = t.all_reduce_time(16, 1 << 24);
+        assert!(slow > fast);
+    }
+
+    #[test]
+    fn compute_time_linear() {
+        let t = Topology::a100(8);
+        assert!((t.compute_time(t.gpu_flops) - 1.0).abs() < 1e-12);
+    }
+}

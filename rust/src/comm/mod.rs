@@ -1,0 +1,675 @@
+//! Communication substrate — the in-process "NCCL".
+//!
+//! The paper's experiments run on NCCL over NVSwitch/RoCE; here every
+//! simulated device is an OS thread and this module provides the same
+//! primitive set: point-to-point `send`/`recv` (the LASP ring), plus
+//! `all_reduce`, `all_gather`, `reduce_scatter`, `all_to_all` and
+//! `broadcast` — each implemented *on top of the P2P layer with the
+//! textbook ring/pairwise algorithms*, so the per-op byte counters
+//! measure exactly the wire traffic the paper's Table 1 compares.
+//!
+//! Collectives operate on a [`Group`] (an ordered rank subset), which is
+//! how sequence-parallel groups and data-parallel groups coexist
+//! (Algorithm 1 / Fig. 2's `SP-GROUP`s).
+//!
+//! An optional [`LinkModel`] injects per-message latency + bandwidth
+//! delays so cluster-scale interconnects can be emulated in wall-clock
+//! experiments (used by the Fig. 4 bench to mimic slower links).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::tensor::Tensor;
+
+pub mod stats;
+pub use stats::{CommStats, OpKind};
+
+/// Message payload; token scatters are i32, everything else f32.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => 4 * v.len() as u64,
+            Payload::I32(v) => 4 * v.len() as u64,
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            Payload::I32(_) => panic!("expected f32 payload"),
+        }
+    }
+
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            Payload::I32(v) => v,
+            Payload::F32(_) => panic!("expected i32 payload"),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Msg {
+    tag: u64,
+    payload: Payload,
+}
+
+/// One src->dst mailbox: eager (buffered) delivery, blocking receive.
+#[derive(Default)]
+struct Mailbox {
+    q: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn push(&self, msg: Msg) {
+        self.q.lock().unwrap().push_back(msg);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self, tag: u64) -> Payload {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(idx) = q.iter().position(|m| m.tag == tag) {
+                return q.remove(idx).unwrap().payload;
+            }
+            let (guard, timed_out) = self
+                .cv
+                .wait_timeout(q, Duration::from_secs(600))
+                .unwrap();
+            q = guard;
+            if timed_out.timed_out() {
+                panic!("comm: recv(tag={tag}) timed out after 600s — ring deadlock?");
+            }
+        }
+    }
+}
+
+/// Bandwidth/latency emulation applied to every P2P message.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// fixed per-message latency
+    pub latency: Duration,
+    /// bytes per second; 0 disables the bandwidth term
+    pub bytes_per_sec: f64,
+}
+
+impl LinkModel {
+    pub fn delay_for(&self, nbytes: u64) -> Duration {
+        let bw = if self.bytes_per_sec > 0.0 {
+            Duration::from_secs_f64(nbytes as f64 / self.bytes_per_sec)
+        } else {
+            Duration::ZERO
+        };
+        self.latency + bw
+    }
+}
+
+struct Shared {
+    world: usize,
+    // mailboxes[dst][src]
+    mailboxes: Vec<Vec<Mailbox>>,
+    // sense-reversing barrier
+    barrier_count: Mutex<(usize, u64)>,
+    barrier_cv: Condvar,
+    stats: CommStats,
+    link: Option<LinkModel>,
+    seq: AtomicU64,
+}
+
+/// Construction handle: build once, hand one [`Communicator`] per rank to
+/// each device thread.
+pub struct CommWorld {
+    shared: Arc<Shared>,
+}
+
+impl CommWorld {
+    pub fn new(world: usize) -> CommWorld {
+        Self::build(world, None)
+    }
+
+    pub fn with_link_model(world: usize, link: LinkModel) -> CommWorld {
+        Self::build(world, Some(link))
+    }
+
+    fn build(world: usize, link: Option<LinkModel>) -> CommWorld {
+        assert!(world > 0);
+        let mailboxes = (0..world)
+            .map(|_| (0..world).map(|_| Mailbox::default()).collect())
+            .collect();
+        CommWorld {
+            shared: Arc::new(Shared {
+                world,
+                mailboxes,
+                barrier_count: Mutex::new((0, 0)),
+                barrier_cv: Condvar::new(),
+                stats: CommStats::new(world),
+                link,
+                seq: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    pub fn communicators(&self) -> Vec<Communicator> {
+        (0..self.shared.world)
+            .map(|rank| Communicator { rank, shared: self.shared.clone() })
+            .collect()
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.shared.stats
+    }
+}
+
+/// An ordered subset of ranks participating in a collective.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Group {
+    pub ranks: Vec<usize>,
+}
+
+impl Group {
+    pub fn new(ranks: Vec<usize>) -> Group {
+        assert!(!ranks.is_empty());
+        Group { ranks }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    fn index_of(&self, rank: usize) -> usize {
+        self.ranks
+            .iter()
+            .position(|&r| r == rank)
+            .unwrap_or_else(|| panic!("rank {rank} not in group {:?}", self.ranks))
+    }
+}
+
+/// Per-rank communication endpoint. Cloneable; cheap handle to the world.
+#[derive(Clone)]
+pub struct Communicator {
+    rank: usize,
+    shared: Arc<Shared>,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.shared.world
+    }
+
+    pub fn world_group(&self) -> Group {
+        Group::new((0..self.shared.world).collect())
+    }
+
+    // ---- P2P ------------------------------------------------------------
+
+    /// Eager (buffered) send; never blocks.
+    pub fn send_tagged(&self, dst: usize, tag: u64, payload: Payload, kind: OpKind) {
+        let nbytes = payload.nbytes();
+        self.shared.stats.record(self.rank, kind, nbytes);
+        if let Some(link) = &self.shared.link {
+            std::thread::sleep(link.delay_for(nbytes));
+        }
+        self.shared.mailboxes[dst][self.rank].push(Msg { tag, payload });
+    }
+
+    /// Blocking receive of the matching tag from `src`.
+    pub fn recv_tagged(&self, src: usize, tag: u64) -> Payload {
+        self.shared.mailboxes[self.rank][src].pop(tag)
+    }
+
+    /// Untagged convenience pair used by the LASP ring (tag 0).
+    pub fn send(&self, dst: usize, t: &Tensor) {
+        self.send_tagged(dst, 0, Payload::F32(t.data().to_vec()), OpKind::P2p);
+    }
+
+    pub fn recv(&self, src: usize, shape: &[usize]) -> Tensor {
+        Tensor::new(shape.to_vec(), self.recv_tagged(src, 0).into_f32())
+    }
+
+    // ---- barrier ---------------------------------------------------------
+
+    pub fn barrier(&self) {
+        let shared = &self.shared;
+        let mut g = shared.barrier_count.lock().unwrap();
+        let gen = g.1;
+        g.0 += 1;
+        if g.0 == shared.world {
+            g.0 = 0;
+            g.1 = g.1.wrapping_add(1);
+            shared.barrier_cv.notify_all();
+        } else {
+            while g.1 == gen {
+                g = shared.barrier_cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    fn fresh_tag(&self) -> u64 {
+        // Collective ops allocate a tag block so concurrent collectives on
+        // disjoint groups can't cross-talk. Caller threads within one group
+        // must call collectives in the same order (standard MPI contract),
+        // so the *group leader's* sequence is taken by everyone via tag
+        // exchange below — instead we simply derive tags from a per-op
+        // handshake: leader draws the tag and sends it to members.
+        self.shared.seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Leader draws a fresh tag block and distributes it to the group on
+    /// the control plane (tag u64::MAX; zero-cost, not counted as data).
+    fn group_tag(&self, group: &Group, _kind: OpKind) -> u64 {
+        let leader = group.ranks[0];
+        if self.rank == leader {
+            let tag = self.fresh_tag() << 16;
+            for &r in &group.ranks[1..] {
+                self.shared.mailboxes[r][leader].push(Msg {
+                    tag: u64::MAX,
+                    payload: Payload::I32(vec![
+                        (tag >> 32) as i32,
+                        (tag & 0xFFFF_FFFF) as i32,
+                    ]),
+                });
+            }
+            tag
+        } else {
+            let v = self.recv_tagged(leader, u64::MAX).into_i32();
+            (((v[0] as u32) as u64) << 32) | ((v[1] as u32) as u64)
+        }
+    }
+
+    // ---- collectives (ring / pairwise algorithms over P2P) ---------------
+
+    /// Ring all-reduce (sum): reduce-scatter phase + all-gather phase.
+    /// Wire traffic per rank: `2 * (n-1)/n * |t|` — the NCCL ring volume.
+    pub fn all_reduce(&self, group: &Group, t: &mut Tensor) {
+        let n = group.size();
+        if n == 1 {
+            return;
+        }
+        let tag = self.group_tag(group, OpKind::AllReduce);
+        let me = group.index_of(self.rank);
+        let next = group.ranks[(me + 1) % n];
+        let prev = group.ranks[(me + n - 1) % n];
+        let len = t.len();
+        // Pad-free chunking: chunk c covers [off(c), off(c+1)).
+        let off = |c: usize| c * len / n;
+        let data = t.data_mut();
+
+        // Phase 1: reduce-scatter. Step s: send chunk (me - s), recv and
+        // accumulate chunk (me - s - 1).
+        for s in 0..n - 1 {
+            let sc = (me + n - s) % n;
+            let rc = (me + n - s - 1) % n;
+            let send_slice = data[off(sc)..off(sc + 1)].to_vec();
+            self.send_tagged(
+                next,
+                tag + s as u64,
+                Payload::F32(send_slice),
+                OpKind::AllReduce,
+            );
+            let recv = self.recv_tagged(prev, tag + s as u64).into_f32();
+            for (a, b) in data[off(rc)..off(rc + 1)].iter_mut().zip(recv) {
+                *a += b;
+            }
+        }
+        // Phase 2: all-gather of the reduced chunks.
+        for s in 0..n - 1 {
+            let sc = (me + 1 + n - s) % n;
+            let rc = (me + n - s) % n;
+            let send_slice = data[off(sc)..off(sc + 1)].to_vec();
+            self.send_tagged(
+                next,
+                tag + (n + s) as u64,
+                Payload::F32(send_slice),
+                OpKind::AllReduce,
+            );
+            let recv = self.recv_tagged(prev, tag + (n + s) as u64).into_f32();
+            data[off(rc)..off(rc + 1)].copy_from_slice(&recv);
+        }
+    }
+
+    /// Ring all-gather: returns the concatenation of every rank's tensor
+    /// in group order. Wire traffic per rank: `(n-1) * |t|`.
+    pub fn all_gather(&self, group: &Group, t: &Tensor) -> Vec<Tensor> {
+        let n = group.size();
+        if n == 1 {
+            return vec![t.clone()];
+        }
+        let tag = self.group_tag(group, OpKind::AllGather);
+        let me = group.index_of(self.rank);
+        let next = group.ranks[(me + 1) % n];
+        let prev = group.ranks[(me + n - 1) % n];
+        let mut slots: Vec<Option<Tensor>> = vec![None; n];
+        slots[me] = Some(t.clone());
+        let mut cur = t.clone();
+        for s in 0..n - 1 {
+            self.send_tagged(
+                next,
+                tag + s as u64,
+                Payload::F32(cur.data().to_vec()),
+                OpKind::AllGather,
+            );
+            let recv = self.recv_tagged(prev, tag + s as u64).into_f32();
+            let src = (me + n - 1 - s) % n;
+            cur = Tensor::new(t.shape().to_vec(), recv);
+            slots[src] = Some(cur.clone());
+        }
+        slots.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Ring reduce-scatter (sum): every rank contributes `t` (same shape);
+    /// rank `i` in the group receives the reduced `i`-th of `n` shards.
+    /// Wire traffic per rank: `(n-1)/n * |t|`.
+    pub fn reduce_scatter(&self, group: &Group, t: &Tensor) -> Tensor {
+        let n = group.size();
+        if n == 1 {
+            return t.clone();
+        }
+        assert_eq!(t.len() % n, 0, "reduce_scatter needs len divisible by group");
+        let tag = self.group_tag(group, OpKind::ReduceScatter);
+        let me = group.index_of(self.rank);
+        let next = group.ranks[(me + 1) % n];
+        let prev = group.ranks[(me + n - 1) % n];
+        let c = t.len() / n;
+        let mut data = t.data().to_vec();
+        // Step s sends chunk (me-1-s) and accumulates chunk (me-2-s); after
+        // n-1 steps rank `me` holds the fully-reduced chunk `me`.
+        for s in 0..n - 1 {
+            let sc = (me + n - 1 - s) % n;
+            let rc = (me + 2 * n - 2 - s) % n;
+            let send_slice = data[sc * c..(sc + 1) * c].to_vec();
+            self.send_tagged(
+                next,
+                tag + s as u64,
+                Payload::F32(send_slice),
+                OpKind::ReduceScatter,
+            );
+            let recv = self.recv_tagged(prev, tag + s as u64).into_f32();
+            for (a, b) in data[rc * c..(rc + 1) * c].iter_mut().zip(recv) {
+                *a += b;
+            }
+        }
+        Tensor::new(vec![c], data[me * c..(me + 1) * c].to_vec())
+    }
+
+    /// Pairwise all-to-all: `inputs[j]` goes to the group's `j`-th rank;
+    /// returns what every rank sent to me. Wire traffic per rank:
+    /// `(n-1)/n * Σ|inputs|` (the self-chunk never hits the wire).
+    pub fn all_to_all(&self, group: &Group, inputs: Vec<Tensor>) -> Vec<Tensor> {
+        let n = group.size();
+        assert_eq!(inputs.len(), n);
+        let tag = self.group_tag(group, OpKind::AllToAll);
+        let me = group.index_of(self.rank);
+        let mut out: Vec<Option<Tensor>> = vec![None; n];
+        for (j, inp) in inputs.iter().enumerate() {
+            if j == me {
+                out[me] = Some(inp.clone());
+            } else {
+                self.send_tagged(
+                    group.ranks[j],
+                    tag + me as u64,
+                    Payload::F32(inp.data().to_vec()),
+                    OpKind::AllToAll,
+                );
+            }
+        }
+        for j in 0..n {
+            if j != me {
+                let recv = self.recv_tagged(group.ranks[j], tag + j as u64).into_f32();
+                out[j] = Some(Tensor::new(inputs[j].shape().to_vec(), recv));
+            }
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Broadcast from the group-relative `root` index.
+    pub fn broadcast(&self, group: &Group, root: usize, t: &mut Tensor) {
+        let n = group.size();
+        if n == 1 {
+            return;
+        }
+        let tag = self.group_tag(group, OpKind::Broadcast);
+        let me = group.index_of(self.rank);
+        if me == root {
+            for (j, &r) in group.ranks.iter().enumerate() {
+                if j != root {
+                    self.send_tagged(
+                        r,
+                        tag,
+                        Payload::F32(t.data().to_vec()),
+                        OpKind::Broadcast,
+                    );
+                }
+            }
+        } else {
+            let recv = self.recv_tagged(group.ranks[root], tag).into_f32();
+            t.data_mut().copy_from_slice(&recv);
+        }
+    }
+
+    /// Scatter i32 payloads (Algorithm 1's token distribution) from the
+    /// group-relative `root`.
+    pub fn scatter_i32(&self, group: &Group, root: usize, chunks: Option<Vec<Vec<i32>>>) -> Vec<i32> {
+        let n = group.size();
+        let tag = self.group_tag(group, OpKind::Scatter);
+        let me = group.index_of(self.rank);
+        if me == root {
+            let chunks = chunks.expect("root must supply scatter chunks");
+            assert_eq!(chunks.len(), n);
+            let mut mine = Vec::new();
+            for (j, c) in chunks.into_iter().enumerate() {
+                if j == root {
+                    mine = c;
+                } else {
+                    self.send_tagged(
+                        group.ranks[j],
+                        tag,
+                        Payload::I32(c),
+                        OpKind::Scatter,
+                    );
+                }
+            }
+            mine
+        } else {
+            self.recv_tagged(group.ranks[root], tag).into_i32()
+        }
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.shared.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_world<F>(w: usize, f: F)
+    where
+        F: Fn(Communicator) + Send + Sync + Clone + 'static,
+    {
+        let world = CommWorld::new(w);
+        let comms = world.communicators();
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                thread::spawn(move || f(c))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn p2p_ring_roundtrip() {
+        run_world(4, |c| {
+            let w = c.world_size();
+            let t = Tensor::new(vec![2], vec![c.rank() as f32, 1.0]);
+            c.send((c.rank() + 1) % w, &t);
+            let prev = (c.rank() + w - 1) % w;
+            let r = c.recv(prev, &[2]);
+            assert_eq!(r.data()[0], prev as f32);
+        });
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        for w in [1, 2, 3, 4, 7] {
+            run_world(w, move |c| {
+                let g = c.world_group();
+                let mut t = Tensor::new(vec![10], vec![(c.rank() + 1) as f32; 10]);
+                c.all_reduce(&g, &mut t);
+                let expect = (w * (w + 1) / 2) as f32;
+                assert!(t.data().iter().all(|&x| x == expect), "{:?}", t.data());
+            });
+        }
+    }
+
+    #[test]
+    fn all_gather_orders_by_group() {
+        run_world(3, |c| {
+            let g = c.world_group();
+            let t = Tensor::new(vec![2], vec![c.rank() as f32; 2]);
+            let all = c.all_gather(&g, &t);
+            for (i, a) in all.iter().enumerate() {
+                assert_eq!(a.data(), &[i as f32; 2]);
+            }
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_shards() {
+        run_world(4, |c| {
+            let g = c.world_group();
+            let t = Tensor::new(vec![8], (0..8).map(|i| i as f32).collect());
+            let shard = c.reduce_scatter(&g, &t);
+            let me = c.rank();
+            // every rank contributed the same tensor: shard = 4 * slice
+            assert_eq!(shard.data(), &[4.0 * (2 * me) as f32, 4.0 * (2 * me + 1) as f32]);
+        });
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        run_world(3, |c| {
+            let g = c.world_group();
+            let me = c.rank() as f32;
+            let inputs: Vec<Tensor> =
+                (0..3).map(|j| Tensor::new(vec![1], vec![me * 10.0 + j as f32])).collect();
+            let out = c.all_to_all(&g, inputs);
+            for (j, o) in out.iter().enumerate() {
+                assert_eq!(o.data()[0], j as f32 * 10.0 + me);
+            }
+        });
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        run_world(4, |c| {
+            let g = c.world_group();
+            let mut t = if c.rank() == 2 {
+                Tensor::new(vec![3], vec![7.0, 8.0, 9.0])
+            } else {
+                Tensor::zeros(&[3])
+            };
+            c.broadcast(&g, 2, &mut t);
+            assert_eq!(t.data(), &[7.0, 8.0, 9.0]);
+        });
+    }
+
+    #[test]
+    fn subgroup_collectives_are_disjoint() {
+        run_world(4, |c| {
+            let g = if c.rank() < 2 {
+                Group::new(vec![0, 1])
+            } else {
+                Group::new(vec![2, 3])
+            };
+            let mut t = Tensor::new(vec![4], vec![c.rank() as f32; 4]);
+            c.all_reduce(&g, &mut t);
+            let expect = if c.rank() < 2 { 1.0 } else { 5.0 };
+            assert!(t.data().iter().all(|&x| x == expect));
+        });
+    }
+
+    #[test]
+    fn scatter_i32_distributes_chunks() {
+        run_world(3, |c| {
+            let g = c.world_group();
+            let chunks = if c.rank() == 0 {
+                Some(vec![vec![0, 0], vec![1, 1], vec![2, 2]])
+            } else {
+                None
+            };
+            let mine = c.scatter_i32(&g, 0, chunks);
+            assert_eq!(mine, vec![c.rank() as i32; 2]);
+        });
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        COUNT.store(0, Ordering::SeqCst);
+        run_world(4, |c| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            assert_eq!(COUNT.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn byte_accounting_matches_ring_formula() {
+        let world = CommWorld::new(4);
+        let comms = world.communicators();
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let g = c.world_group();
+                    let mut t = Tensor::zeros(&[16]);
+                    c.all_reduce(&g, &mut t);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // ring all-reduce wire bytes per rank: 2*(n-1)/n*len*4 = 2*3/4*64
+        let per_rank = world.stats().bytes(OpKind::AllReduce) / 4;
+        assert_eq!(per_rank, 2 * 3 * 16 / 4 * 4);
+    }
+
+    #[test]
+    fn p2p_bytes_are_sequence_length_independent() {
+        // The LASP claim at substrate level: sending a (dk, dv) state costs
+        // the same regardless of how long the chunk was.
+        let world = CommWorld::new(2);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        let h = thread::spawn(move || {
+            let t = Tensor::zeros(&[64, 64]);
+            c0.send(1, &t);
+        });
+        let r = c1.recv(0, &[64, 64]);
+        h.join().unwrap();
+        assert_eq!(r.len(), 4096);
+        assert_eq!(world.stats().bytes(OpKind::P2p), 4096 * 4);
+    }
+}

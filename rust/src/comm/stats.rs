@@ -1,0 +1,173 @@
+//! Per-operation byte accounting for the communication substrate.
+//!
+//! The paper's Table 1 is a *communication volume* comparison; these
+//! counters measure the actual wire traffic of every run so the measured
+//! volumes can be printed next to the closed-form formulas
+//! (`analytic::comm_volume`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Classification of communication operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Point-to-point ring messages (LASP's KV/dKV exchange, Ring
+    /// Attention's K/V rotation).
+    P2p,
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+    Scatter,
+}
+
+pub const ALL_KINDS: [OpKind; 7] = [
+    OpKind::P2p,
+    OpKind::AllReduce,
+    OpKind::AllGather,
+    OpKind::ReduceScatter,
+    OpKind::AllToAll,
+    OpKind::Broadcast,
+    OpKind::Scatter,
+];
+
+impl OpKind {
+    fn idx(self) -> usize {
+        match self {
+            OpKind::P2p => 0,
+            OpKind::AllReduce => 1,
+            OpKind::AllGather => 2,
+            OpKind::ReduceScatter => 3,
+            OpKind::AllToAll => 4,
+            OpKind::Broadcast => 5,
+            OpKind::Scatter => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::P2p => "p2p",
+            OpKind::AllReduce => "all_reduce",
+            OpKind::AllGather => "all_gather",
+            OpKind::ReduceScatter => "reduce_scatter",
+            OpKind::AllToAll => "all_to_all",
+            OpKind::Broadcast => "broadcast",
+            OpKind::Scatter => "scatter",
+        }
+    }
+}
+
+/// Lock-free counters: bytes and message counts, total and per rank.
+pub struct CommStats {
+    bytes: [AtomicU64; 7],
+    msgs: [AtomicU64; 7],
+    per_rank_bytes: Vec<AtomicU64>,
+}
+
+impl CommStats {
+    pub fn new(world: usize) -> CommStats {
+        CommStats {
+            bytes: Default::default(),
+            msgs: Default::default(),
+            per_rank_bytes: (0..world).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn record(&self, rank: usize, kind: OpKind, nbytes: u64) {
+        self.bytes[kind.idx()].fetch_add(nbytes, Ordering::Relaxed);
+        self.msgs[kind.idx()].fetch_add(1, Ordering::Relaxed);
+        self.per_rank_bytes[rank].fetch_add(nbytes, Ordering::Relaxed);
+    }
+
+    /// Total bytes sent under `kind` across all ranks.
+    pub fn bytes(&self, kind: OpKind) -> u64 {
+        self.bytes[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn msgs(&self, kind: OpKind) -> u64 {
+        self.msgs[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        ALL_KINDS.iter().map(|&k| self.bytes(k)).sum()
+    }
+
+    pub fn rank_bytes(&self, rank: usize) -> u64 {
+        self.per_rank_bytes[rank].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot (kind -> bytes) for diffing around a measured region.
+    pub fn snapshot(&self) -> Vec<(OpKind, u64)> {
+        ALL_KINDS.iter().map(|&k| (k, self.bytes(k))).collect()
+    }
+
+    /// Bytes per kind since `snap`.
+    pub fn delta_since(&self, snap: &[(OpKind, u64)]) -> Vec<(OpKind, u64)> {
+        snap.iter().map(|&(k, b)| (k, self.bytes(k) - b)).collect()
+    }
+
+    pub fn reset(&self) {
+        for b in &self.bytes {
+            b.store(0, Ordering::Relaxed);
+        }
+        for m in &self.msgs {
+            m.store(0, Ordering::Relaxed);
+        }
+        for r in &self.per_rank_bytes {
+            r.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for &k in &ALL_KINDS {
+            let b = self.bytes(k);
+            if b > 0 {
+                s += &format!(
+                    "  {:<14} {:>12} bytes  {:>8} msgs\n",
+                    k.name(),
+                    b,
+                    self.msgs(k)
+                );
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let s = CommStats::new(2);
+        s.record(0, OpKind::P2p, 100);
+        s.record(1, OpKind::P2p, 50);
+        s.record(0, OpKind::AllReduce, 10);
+        assert_eq!(s.bytes(OpKind::P2p), 150);
+        assert_eq!(s.msgs(OpKind::P2p), 2);
+        assert_eq!(s.total_bytes(), 160);
+        assert_eq!(s.rank_bytes(0), 110);
+        assert!(s.report().contains("p2p"));
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let s = CommStats::new(1);
+        s.record(0, OpKind::AllGather, 5);
+        let snap = s.snapshot();
+        s.record(0, OpKind::AllGather, 7);
+        let d = s.delta_since(&snap);
+        let ag = d.iter().find(|(k, _)| *k == OpKind::AllGather).unwrap();
+        assert_eq!(ag.1, 7);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let s = CommStats::new(1);
+        s.record(0, OpKind::Scatter, 9);
+        s.reset();
+        assert_eq!(s.total_bytes(), 0);
+    }
+}

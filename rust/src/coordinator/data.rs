@@ -1,0 +1,214 @@
+//! Algorithm 1: LASP data distribution.
+//!
+//! The distributed world of `W` ranks is tiled into `G = W/T` sequence-
+//! parallel groups of `T` ranks each (Fig. 2). Each group trains on its
+//! own batch of sequences; *within* a group the sequence is split into
+//! `T` chunks of `C = N/T` tokens, scattered from the group's source rank
+//! (the first rank of the group) so every rank retains exactly one chunk.
+
+use crate::comm::{Communicator, Group};
+
+/// Static placement derived from (world, sp_size) — Algorithm 1 lines 2–5.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub world: usize,
+    /// sequence-parallel size T
+    pub sp_size: usize,
+}
+
+impl Placement {
+    pub fn new(world: usize, sp_size: usize) -> Placement {
+        assert!(sp_size > 0 && world % sp_size == 0,
+                "sequence parallel size {sp_size} must divide world {world}");
+        Placement { world, sp_size }
+    }
+
+    /// Number of sequence-parallel groups G = W/T.
+    pub fn n_groups(&self) -> usize {
+        self.world / self.sp_size
+    }
+
+    /// Which SP group a rank belongs to.
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.sp_size
+    }
+
+    /// Chunk index t of a rank within its group (t = i in Algorithm 2).
+    pub fn chunk_index(&self, rank: usize) -> usize {
+        rank % self.sp_size
+    }
+
+    /// The source rank list R_src = floor(R/T)*T (Algorithm 1 line 5).
+    pub fn source_rank(&self, rank: usize) -> usize {
+        rank / self.sp_size * self.sp_size
+    }
+
+    /// Ordered ranks of one SP group (the ring).
+    pub fn sp_group(&self, group: usize) -> Group {
+        Group::new((group * self.sp_size..(group + 1) * self.sp_size).collect())
+    }
+
+    /// All ranks — the gradient-synchronization group (data-sequence
+    /// hybrid parallelism: chunk-grads sum over T, batch-grads over G).
+    pub fn world_group(&self) -> Group {
+        Group::new((0..self.world).collect())
+    }
+
+    /// Split a full sequence (N+1 tokens: inputs + lookahead for labels)
+    /// into per-chunk (tokens, labels) pairs — Algorithm 1 line 6.
+    pub fn split_sequence(&self, seq: &[i32]) -> Vec<(Vec<i32>, Vec<i32>)> {
+        let n = seq.len() - 1;
+        assert_eq!(n % self.sp_size, 0, "N={n} not divisible by T={}", self.sp_size);
+        let c = n / self.sp_size;
+        (0..self.sp_size)
+            .map(|t| {
+                let tokens = seq[t * c..(t + 1) * c].to_vec();
+                let labels = seq[t * c + 1..(t + 1) * c + 1].to_vec();
+                (tokens, labels)
+            })
+            .collect()
+    }
+}
+
+/// Run Algorithm 1 for one step: the group's source rank holds `seq`
+/// (N+1 tokens); every rank comes back with its (tokens, labels) chunk.
+/// Interleaved on the wire as `[tokens ++ labels]` per chunk.
+pub fn distribute(
+    comm: &Communicator,
+    placement: &Placement,
+    seq: Option<&[i32]>,
+) -> (Vec<i32>, Vec<i32>) {
+    let rank = comm.rank();
+    let group = placement.sp_group(placement.group_of(rank));
+    let is_src = rank == placement.source_rank(rank);
+    let chunks = if is_src {
+        let seq = seq.expect("source rank must hold the sequence");
+        Some(
+            placement
+                .split_sequence(seq)
+                .into_iter()
+                .map(|(mut t, mut l)| {
+                    t.append(&mut l);
+                    t
+                })
+                .collect(),
+        )
+    } else {
+        None
+    };
+    let mine = comm.scatter_i32(&group, 0, chunks);
+    let c = mine.len() / 2;
+    (mine[..c].to_vec(), mine[c..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, param};
+
+    #[test]
+    fn paper_example_w8_t4() {
+        // Fig. 2: W=8, T=4 ⇒ G=2, R_src = [0, 4].
+        let p = Placement::new(8, 4);
+        assert_eq!(p.n_groups(), 2);
+        for r in 0..8 {
+            assert_eq!(p.source_rank(r), if r < 4 { 0 } else { 4 });
+        }
+        assert_eq!(p.sp_group(0).ranks, vec![0, 1, 2, 3]);
+        assert_eq!(p.sp_group(1).ranks, vec![4, 5, 6, 7]);
+        assert_eq!(p.chunk_index(6), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_nondivisible_sp_size() {
+        Placement::new(8, 3);
+    }
+
+    #[test]
+    fn split_produces_shifted_labels() {
+        let p = Placement::new(2, 2);
+        let seq: Vec<i32> = (0..9).collect(); // N=8, C=4
+        let chunks = p.split_sequence(&seq);
+        assert_eq!(chunks[0].0, vec![0, 1, 2, 3]);
+        assert_eq!(chunks[0].1, vec![1, 2, 3, 4]);
+        // labels cross the chunk boundary (token 4 predicts 5 etc.)
+        assert_eq!(chunks[1].0, vec![4, 5, 6, 7]);
+        assert_eq!(chunks[1].1, vec![5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn placement_invariants_property() {
+        // Partition exactness over arbitrary (G, T, C): groups are
+        // disjoint, every rank gets exactly one chunk, chunks tile the
+        // sequence, and the label stream is the token stream shifted by 1.
+        check(1, 100, &[param("g", 1, 4), param("t", 1, 8), param("c", 1, 16)], |case| {
+            let (g, t, c) = (case.usize("g"), case.usize("t"), case.usize("c"));
+            let p = Placement::new(g * t, t);
+            if p.n_groups() != g {
+                return Err("group count".into());
+            }
+            let mut seen = vec![false; g * t];
+            for grp in 0..g {
+                for (i, &r) in p.sp_group(grp).ranks.iter().enumerate() {
+                    if seen[r] {
+                        return Err(format!("rank {r} in two groups"));
+                    }
+                    seen[r] = true;
+                    if p.group_of(r) != grp || p.chunk_index(r) != i {
+                        return Err("placement math".into());
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("rank unassigned".into());
+            }
+            let n = t * c;
+            let seq: Vec<i32> = (0..=(n as i32)).collect();
+            let chunks = p.split_sequence(&seq);
+            let mut toks = Vec::new();
+            for (tok, lab) in &chunks {
+                // labels = tokens shifted by one
+                for (j, &l) in lab.iter().enumerate() {
+                    let expect = tok[j] + 1;
+                    if l != expect {
+                        return Err("labels not shifted".into());
+                    }
+                }
+                toks.extend_from_slice(tok);
+            }
+            if toks != seq[..n] {
+                return Err("chunks do not tile sequence".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn distribute_over_real_comm() {
+        use crate::comm::CommWorld;
+        let p = Placement::new(4, 2); // G=2, T=2
+        let world = CommWorld::new(4);
+        let handles: Vec<_> = world
+            .communicators()
+            .into_iter()
+            .map(|c| {
+                let p = p.clone();
+                std::thread::spawn(move || {
+                    let g = p.group_of(c.rank()) as i32;
+                    let seq: Vec<i32> = (0..9).map(|x| x + 100 * g).collect();
+                    let is_src = c.rank() == p.source_rank(c.rank());
+                    let (tok, lab) =
+                        distribute(&c, &p, if is_src { Some(&seq) } else { None });
+                    let t = p.chunk_index(c.rank()) as i32;
+                    assert_eq!(tok[0], 100 * g + 4 * t);
+                    assert_eq!(lab[0], tok[0] + 1);
+                    assert_eq!(tok.len(), 4);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's system contribution: LASP sequence-parallel coordination.
+//!
+//!  * [`data`]     — Algorithm 1 data distribution + SP-group placement
+//!  * [`ring`]     — Algorithms 2/3 forward/backward ring schedules
+//!  * [`kv_cache`] — the HBM KV-state cache (§2.4)
+//!  * [`trainer`]  — worker threads, hybrid data-sequence parallelism,
+//!                   gradient sync across DDP/ZeRO backends
+
+pub mod data;
+pub mod kv_cache;
+pub mod ring;
+pub mod trainer;
+
+pub use data::{distribute, Placement};
+pub use kv_cache::KvCache;
+pub use trainer::{train, TrainConfig, TrainResult};

@@ -1,0 +1,143 @@
+//! The LASP ring schedules (Algorithms 2 & 3) at the chunk level.
+//!
+//! Forward: chunk `t` receives `KV_{t-1}` from rank `i-1`, caches it,
+//! executes the fused chunk kernel (intra + inter + state update lowered
+//! into one HLO module), and sends `KV_t` to rank `i+1`. The message is a
+//! `(L, H, dk, dv)` stack — **sequence-length independent**, the paper's
+//! central communication claim.
+//!
+//! Backward: chunk `t` receives `dKV` from rank `i+1` (the cotangent of
+//! its `KV_out`), loads the cached `KV_{t-1}`, runs the chunk backward
+//! (which recomputes the forward *inside* the chunk — per-chunk activation
+//! recomputation — but never recomputes or re-communicates cross-chunk
+//! states), and sends its `dKV_in` to rank `i-1`.
+
+use anyhow::Result;
+
+use super::data::Placement;
+use super::kv_cache::KvCache;
+use crate::comm::Communicator;
+use crate::model::ParamStore;
+use crate::runtime::Device;
+use crate::tensor::{IntTensor, Tensor, Value};
+
+/// Forward-ring output for one chunk.
+pub struct ForwardOut {
+    /// summed next-token NLL over this chunk
+    pub loss_sum: f32,
+    /// the incoming state actually used (needed if the cache is off)
+    pub kv_in: Tensor,
+    /// outgoing state (diagnostics/tests; it has already been sent)
+    pub kv_out: Tensor,
+}
+
+/// Backward-ring output for one chunk.
+pub struct BackwardOut {
+    /// parameter gradients, manifest order, pre-scaled by `loss_scale`
+    pub grads: Vec<Tensor>,
+    /// loss recomputed by the backward executable (consistency checks)
+    pub loss_sum: f32,
+}
+
+/// Algorithm 2 for one rank. `fused` selects the kernel-fusion ablation
+/// twin; `slot` is the micro-batch slot for the KV cache.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_chunk(
+    dev: &Device,
+    comm: &Communicator,
+    placement: &Placement,
+    params: &ParamStore,
+    tokens: &[i32],
+    labels: &[i32],
+    cache: &mut KvCache,
+    slot: usize,
+    fused: bool,
+) -> Result<ForwardOut> {
+    let rank = comm.rank();
+    let t_idx = placement.chunk_index(rank);
+    let t_max = placement.sp_size - 1;
+    let kv_shape = &dev.bundle().kv_state_shape;
+
+    // Recv KV_{t-1} from rank i-1 (zeros for the first chunk).
+    let kv_in = if t_idx > 0 {
+        comm.recv(rank - 1, kv_shape)
+    } else {
+        Tensor::zeros(kv_shape)
+    };
+    cache.put(slot, &kv_in);
+
+    let c = dev.bundle().chunk_len;
+    let rest: Vec<Value> = vec![
+        IntTensor::new(vec![c], tokens.to_vec()).into(),
+        IntTensor::new(vec![c], labels.to_vec()).into(),
+        kv_in.clone().into(),
+    ];
+    let name = if fused { "chunk_fwd" } else { "chunk_fwd_unfused" };
+    let mut out = dev.exec_parts(name, params.tensors(), &rest)?;
+    let kv_out = out.remove(1).into_f32();
+    let loss_sum = out.remove(0).as_f32().item();
+
+    // Send KV_t to rank i+1.
+    if t_idx < t_max {
+        comm.send(rank + 1, &kv_out);
+    }
+    Ok(ForwardOut { loss_sum, kv_in, kv_out })
+}
+
+/// Algorithm 3 for one rank. `kv_in` must be supplied when the cache is
+/// disabled (Table-5 ablation replays the forward ring to obtain it).
+#[allow(clippy::too_many_arguments)]
+pub fn backward_chunk(
+    dev: &Device,
+    comm: &Communicator,
+    placement: &Placement,
+    params: &ParamStore,
+    tokens: &[i32],
+    labels: &[i32],
+    cache: &KvCache,
+    slot: usize,
+    kv_in_fallback: Option<&Tensor>,
+    loss_scale: f32,
+    fused: bool,
+) -> Result<BackwardOut> {
+    let rank = comm.rank();
+    let t_idx = placement.chunk_index(rank);
+    let t_max = placement.sp_size - 1;
+    let kv_shape = &dev.bundle().kv_state_shape;
+
+    // Recv dKV from rank i+1 (zeros for the last chunk).
+    let dkv_out = if t_idx < t_max {
+        comm.recv(rank + 1, kv_shape)
+    } else {
+        Tensor::zeros(kv_shape)
+    };
+
+    // Load KV_{t-1}: from the HBM cache (paper §2.4) or the replayed ring.
+    let kv_in = cache
+        .get(slot)
+        .or(kv_in_fallback)
+        .expect("KV state neither cached nor recomputed — coordinator bug")
+        .clone();
+
+    let c = dev.bundle().chunk_len;
+    let rest: Vec<Value> = vec![
+        IntTensor::new(vec![c], tokens.to_vec()).into(),
+        IntTensor::new(vec![c], labels.to_vec()).into(),
+        kv_in.into(),
+        dkv_out.into(),
+        Tensor::scalar(loss_scale).into(),
+    ];
+    let name = if fused { "chunk_bwd" } else { "chunk_bwd_unfused" };
+    let mut out = dev.exec_parts(name, params.tensors(), &rest)?;
+
+    // outputs: dparams…, dkv_in, loss
+    let loss_sum = out.pop().unwrap().as_f32().item();
+    let dkv_in = out.pop().unwrap().into_f32();
+    let grads: Vec<Tensor> = out.into_iter().map(Value::into_f32).collect();
+
+    // Send dKV_in to rank i-1.
+    if t_idx > 0 {
+        comm.send(rank - 1, &dkv_in);
+    }
+    Ok(BackwardOut { grads, loss_sum })
+}

@@ -1,0 +1,25 @@
+//! LASP: Linear Attention Sequence Parallelism — Rust coordinator (L3).
+//!
+//! Reproduction of "Linear Attention Sequence Parallelism" (2024): a
+//! sequence-parallel training system for linear-attention transformers
+//! whose ring communication exchanges only the d×d KV memory state,
+//! making communication volume independent of sequence length.
+//!
+//! Layering (see DESIGN.md):
+//!   * `python/compile` authors the model (JAX) and kernels (Pallas) and
+//!     AOT-lowers per-chunk executables to HLO text (`make artifacts`);
+//!   * this crate loads those executables via PJRT (`runtime`), simulates
+//!     a multi-GPU cluster (`cluster`, `comm`), and implements the
+//!     paper's contribution (`coordinator`) plus baselines, optimizers,
+//!     the training loop and the analytic scale model.
+pub mod analytic;
+pub mod baselines;
+pub mod cluster;
+pub mod comm;
+pub mod coordinator;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

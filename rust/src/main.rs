@@ -1,0 +1,164 @@
+//! `lasp` — the leader binary: train, evaluate, and reproduce the paper's
+//! tables from the command line.
+//!
+//! Examples:
+//!   lasp train --config tiny --chunk 32 --sp 4 --steps 20 --backend ddp
+//!   lasp eval  --config small --chunk 256 --steps 50
+//!   lasp comm-volume
+//!   lasp scaling
+//!   lasp info --config tiny --chunk 32
+
+use anyhow::Result;
+use lasp::analytic::{self, DdpBackend, SpMethod};
+use lasp::cluster::Topology;
+use lasp::coordinator::{train, TrainConfig};
+use lasp::runtime::{load_bundle, Device};
+use lasp::train::{evaluate, DataGen};
+use lasp::util::cli::Cli;
+use lasp::util::stats::{fmt_klen, Table};
+
+fn parse_backend(s: &str) -> DdpBackend {
+    match s {
+        "ddp" => DdpBackend::Ddp,
+        "legacy" => DdpBackend::LegacyDdp,
+        "zero1" => DdpBackend::Zero1,
+        "zero2" => DdpBackend::Zero2,
+        "zero3" => DdpBackend::Zero3,
+        "fsdp" => DdpBackend::Fsdp,
+        other => {
+            eprintln!("unknown backend {other} (ddp|legacy|zero1|zero2|zero3|fsdp)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if args.is_empty() { "help".to_string() } else { args.remove(0) };
+    match cmd.as_str() {
+        "train" | "eval" => {
+            let cli = Cli::new("lasp train", "train a linear-attention model with LASP")
+                .opt("config", "tiny", "model config (artifact bundle name)")
+                .opt("chunk", "32", "chunk length C (bundle must exist)")
+                .opt("sp", "4", "sequence parallel size T")
+                .opt("groups", "1", "data-parallel groups G (world = T*G)")
+                .opt("steps", "20", "training steps")
+                .opt("lr", "5e-4", "learning rate")
+                .opt("warmup", "2000", "LR warmup steps")
+                .opt("seed", "0", "RNG seed")
+                .opt("backend", "ddp", "ddp|legacy|zero1|zero2|zero3|fsdp")
+                .opt("log-every", "5", "log interval")
+                .flag("unfused", "disable kernel fusion (Table-5 ablation)")
+                .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)");
+            let a = cli.parse_from(&args).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            let mut cfg = TrainConfig::new(a.get("config"), a.get_usize("chunk"),
+                                           a.get_usize("sp"));
+            cfg.data_groups = a.get_usize("groups");
+            cfg.steps = a.get_usize("steps");
+            cfg.lr = a.get_f64("lr") as f32;
+            cfg.warmup = a.get_usize("warmup");
+            cfg.seed = a.get_usize("seed") as u64;
+            cfg.backend = parse_backend(a.get("backend"));
+            cfg.fused = !a.has("unfused");
+            cfg.kv_cache = !a.has("no-kv-cache");
+            cfg.log_every = a.get_usize("log-every");
+            let r = train(&cfg)?;
+            println!("final loss: {:.4}", r.losses.last().unwrap());
+            println!("throughput: {:.1} tokens/sec", r.tokens_per_sec);
+            println!("ring bytes: {} (KV/dKV states)", r.ring_bytes);
+            println!("phase breakdown (rank 0):\n{}", r.phases.report());
+            if cmd == "eval" {
+                let bundle = load_bundle(&cfg.config, cfg.chunk)?;
+                let dev = Device::new(&bundle, &["chunk_logits"])?;
+                let dg = DataGen::new(cfg.seed, bundle.config.vocab);
+                let rep = evaluate(&dev, &bundle, &r.final_params, &dg, 4, 2)?;
+                println!(
+                    "heldout: nll {:.4}  ppl {:.2}  acc {:.3}  ({} tokens)",
+                    rep.nll, rep.perplexity, rep.accuracy, rep.tokens
+                );
+            }
+        }
+        "comm-volume" => {
+            // Table 1 at the paper's parameters.
+            let (b, d, h, t) = (1u64, 2048u64, 16u64, 64u64);
+            let mut tab = Table::new(&["Method", "Full (elements)", "Simplified"]);
+            for n in [2048u64, 65536, 1 << 20, 4 << 20] {
+                for m in SpMethod::ALL {
+                    tab.row(&[
+                        format!("{} @N={}", m.name(), fmt_klen(n as usize)),
+                        format!("{:.3e}", analytic::volume_elements(m, b, n, d, h, t)),
+                        format!("{:.1}", analytic::comm_volume::volume_simplified(m, n, d, h, t)),
+                    ]);
+                }
+            }
+            println!("{}", tab.render());
+        }
+        "scaling" => {
+            // Fig. 3 / Table 4 projection.
+            let shape = analytic::models::TNL_1B;
+            let mut tab = Table::new(&["SeqLen", "GPUs", "DDP tok/s", "DDP GB",
+                                       "FSDP tok/s", "FSDP GB"]);
+            for n in [2048usize, 16384, 131072, 1 << 20, 4 << 20] {
+                for gpus in [16usize, 32, 64, 128] {
+                    let topo = Topology::a100(gpus);
+                    let cell = |backend: DdpBackend, dp: u64| {
+                        match analytic::throughput_tokens_per_sec(
+                            &shape, SpMethod::Lasp, &topo, n as u64, gpus as u64,
+                            backend, dp, 1, false,
+                        ) {
+                            Some(tp) => {
+                                let mem = analytic::memory_per_gpu(
+                                    &shape, SpMethod::Lasp, n as u64, gpus as u64,
+                                    dp, backend, 1, false,
+                                );
+                                (format!("{tp:.0}"), format!("{:.1}", mem.total_gb()))
+                            }
+                            None => ("OOM".into(), "OOM".into()),
+                        }
+                    };
+                    let (dt, dm) = cell(DdpBackend::Ddp, 1);
+                    let (ft, fm) = cell(DdpBackend::Fsdp, gpus as u64);
+                    tab.row(&[fmt_klen(n), gpus.to_string(), dt, dm, ft, fm]);
+                }
+            }
+            println!("{}", tab.render());
+        }
+        "info" => {
+            let cli = Cli::new("lasp info", "inspect an artifact bundle")
+                .opt("config", "tiny", "config name")
+                .opt("chunk", "32", "chunk length");
+            let a = cli.parse_from(&args).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            let b = load_bundle(a.get("config"), a.get_usize("chunk"))?;
+            println!("config {} — {} params, d={}, L={}, H={}, vocab={}",
+                     b.config.name, b.config.param_count, b.config.d_model,
+                     b.config.n_layers, b.config.n_heads, b.config.vocab);
+            println!("chunk_len {}  kv_state {:?} ({} elements/ring message)",
+                     b.chunk_len, b.kv_state_shape, b.kv_state_elems());
+            for (name, art) in &b.artifacts {
+                println!("  {name}: {} inputs -> {} outputs ({})",
+                         art.inputs.len(), art.outputs.len(), art.file);
+            }
+        }
+        _ => {
+            println!(
+                "lasp — Linear Attention Sequence Parallelism (paper reproduction)\n\n\
+                 subcommands:\n\
+                 \x20 train        run distributed LASP training\n\
+                 \x20 eval         train then evaluate on held-out data\n\
+                 \x20 comm-volume  print the Table-1 communication volumes\n\
+                 \x20 scaling      print the Fig.3/Table-4 scale projection\n\
+                 \x20 info         inspect an artifact bundle\n\n\
+                 benches: cargo bench --bench <table1_comm_volume|fig3_scalability|\n\
+                 \x20        fig4_speed_comparison|table2_convergence|table5_ablation_fusion|\n\
+                 \x20        table6_ablation_ac|table7_downstream|perf_hotpath>"
+            );
+        }
+    }
+    Ok(())
+}

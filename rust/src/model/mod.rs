@@ -1,0 +1,142 @@
+//! Parameter store: deterministic initialization from the manifest's
+//! parameter table and flat-space views for optimizers / ZeRO sharding.
+//!
+//! Initialization lives on the Rust side (Python is compile-time only):
+//! `init` draws N(0, std²) per tensor from a per-parameter forked stream,
+//! so any two runs (e.g. LASP-on vs LASP-off in the Table-2 parity
+//! experiment) see bit-identical starting points regardless of worker
+//! count or evaluation order.
+
+use crate::runtime::Bundle;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// The full parameter set of one model replica, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    tensors: Vec<Tensor>,
+    names: Vec<String>,
+}
+
+impl ParamStore {
+    /// Deterministic init: parameter `i` uses stream `fork(i)` of `seed`.
+    pub fn init(bundle: &Bundle, seed: u64) -> ParamStore {
+        let base = Rng::new(seed);
+        let mut tensors = Vec::with_capacity(bundle.params.len());
+        let mut names = Vec::with_capacity(bundle.params.len());
+        for (i, spec) in bundle.params.iter().enumerate() {
+            let mut t = Tensor::zeros(&spec.shape);
+            match spec.init.as_str() {
+                "ones" => t.data_mut().fill(1.0),
+                "normal" => {
+                    let mut rng = base.fork(i as u64);
+                    rng.fill_normal(t.data_mut(), spec.std);
+                }
+                other => panic!("unknown init kind {other:?}"),
+            }
+            tensors.push(t);
+            names.push(spec.name.clone());
+        }
+        ParamStore { tensors, names }
+    }
+
+    /// All-zeros gradients with matching shapes.
+    pub fn zeros_like(&self) -> Vec<Tensor> {
+        self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect()
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        &mut self.tensors
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Flatten into one padded buffer (len divisible by `align`) — the
+    /// ZeRO/FSDP flat space.
+    pub fn flatten(tensors: &[Tensor], align: usize) -> Vec<f32> {
+        let n: usize = tensors.iter().map(|t| t.len()).sum();
+        let padded = n.div_ceil(align) * align;
+        let mut flat = Vec::with_capacity(padded);
+        for t in tensors {
+            flat.extend_from_slice(t.data());
+        }
+        flat.resize(padded, 0.0);
+        flat
+    }
+
+    /// Scatter a flat buffer back into the tensor list (inverse of
+    /// `flatten`; padding ignored).
+    pub fn unflatten(flat: &[f32], tensors: &mut [Tensor]) {
+        let mut off = 0;
+        for t in tensors.iter_mut() {
+            let n = t.len();
+            t.data_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert!(off <= flat.len());
+    }
+
+    /// Max |a - b| across two parameter sets (convergence-parity checks).
+    pub fn max_abs_diff(a: &ParamStore, b: &ParamStore) -> f32 {
+        a.tensors
+            .iter()
+            .zip(&b.tensors)
+            .map(|(x, y)| x.max_abs_diff(y))
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifact_root, load_bundle};
+
+    fn bundle() -> Option<Bundle> {
+        if !artifact_root().join("tiny_c32/manifest.json").exists() {
+            return None;
+        }
+        Some(load_bundle("tiny", 32).unwrap())
+    }
+
+    #[test]
+    fn init_is_deterministic_and_spec_shaped() {
+        let Some(b) = bundle() else { return };
+        let p1 = ParamStore::init(&b, 42);
+        let p2 = ParamStore::init(&b, 42);
+        assert_eq!(ParamStore::max_abs_diff(&p1, &p2), 0.0);
+        let p3 = ParamStore::init(&b, 43);
+        assert!(ParamStore::max_abs_diff(&p1, &p3) > 0.0);
+        assert_eq!(p1.numel(), b.param_count());
+        // norm gains are ones
+        for (name, t) in p1.names().iter().zip(p1.tensors()) {
+            if name.contains("norm") {
+                assert!(t.data().iter().all(|&x| x == 1.0), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn flatten_roundtrip_with_padding() {
+        let ts = vec![
+            Tensor::new(vec![3], vec![1., 2., 3.]),
+            Tensor::new(vec![2, 2], vec![4., 5., 6., 7.]),
+        ];
+        let flat = ParamStore::flatten(&ts, 4);
+        assert_eq!(flat.len(), 8); // 7 -> padded to 8
+        assert_eq!(&flat[..7], &[1., 2., 3., 4., 5., 6., 7.]);
+        let mut out = vec![Tensor::zeros(&[3]), Tensor::zeros(&[2, 2])];
+        ParamStore::unflatten(&flat, &mut out);
+        assert_eq!(out[0].data(), &[1., 2., 3.]);
+        assert_eq!(out[1].data(), &[4., 5., 6., 7.]);
+    }
+}

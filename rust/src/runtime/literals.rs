@@ -1,0 +1,78 @@
+//! Tensor <-> PJRT Literal conversion at the device boundary.
+
+use anyhow::{Context, Result};
+
+use super::manifest::IoSpec;
+use crate::tensor::{DType, IntTensor, Tensor, Value};
+
+fn as_bytes<T>(v: &[T]) -> &[u8] {
+    // f32/i32 slices reinterpreted as little-endian bytes (host order —
+    // the literal is consumed in-process).
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+/// Borrowed f32 tensor -> literal without wrapping in a `Value` (hot path).
+pub fn f32_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, t.shape(), as_bytes(t.data()))
+        .context("creating literal")
+}
+
+/// Host tensor -> PJRT literal.
+pub fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let (ty, shape, bytes): (xla::ElementType, &[usize], &[u8]) = match v {
+        Value::F32(t) => (xla::ElementType::F32, t.shape(), as_bytes(t.data())),
+        Value::I32(t) => (xla::ElementType::S32, t.shape(), as_bytes(t.data())),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+        .context("creating literal")
+}
+
+/// PJRT literal -> host tensor, shaped per the manifest spec.
+pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
+    match spec.dtype {
+        DType::F32 => {
+            let data: Vec<f32> = lit.to_vec()?;
+            Ok(Value::F32(Tensor::new(spec.shape.clone(), data)))
+        }
+        DType::I32 => {
+            let data: Vec<i32> = lit.to_vec()?;
+            Ok(Value::I32(IntTensor::new(spec.shape.clone(), data)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = to_literal(&Value::F32(t.clone())).unwrap();
+        let spec = IoSpec { shape: vec![2, 3], dtype: DType::F32 };
+        let back = from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().data(), t.data());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = IntTensor::new(vec![4], vec![-1, 0, 7, 100]);
+        let lit = to_literal(&Value::I32(t.clone())).unwrap();
+        let spec = IoSpec { shape: vec![4], dtype: DType::I32 };
+        let back = from_literal(&lit, &spec).unwrap();
+        match back {
+            Value::I32(b) => assert_eq!(b.data(), t.data()),
+            _ => panic!("dtype"),
+        }
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = to_literal(&Value::F32(Tensor::scalar(3.5))).unwrap();
+        let spec = IoSpec { shape: vec![], dtype: DType::F32 };
+        assert_eq!(from_literal(&lit, &spec).unwrap().as_f32().item(), 3.5);
+    }
+}

@@ -1,0 +1,200 @@
+//! Manifest parsing: the ABI between `python/compile/aot.py` and the
+//! Rust runtime. Everything the coordinator knows about a model config —
+//! parameter table, artifact signatures, state shapes, flop counts —
+//! comes from here; Python is never consulted at run time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// One input/output slot of an executable.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One executable in the bundle.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// leading `inputs` that are model parameters (manifest order)
+    pub n_params: usize,
+}
+
+/// One model parameter.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "normal" | "ones"
+    pub init: String,
+    pub std: f32,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model architecture block of the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub lam: Vec<f32>,
+    pub linear_transformer: bool,
+    pub param_count: usize,
+}
+
+/// A parsed artifact bundle (manifest + directory).
+#[derive(Clone, Debug)]
+pub struct Bundle {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub chunk_len: usize,
+    pub kv_state_shape: Vec<usize>,
+    pub flops_fwd_per_chunk: f64,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        shape: j.req("shape").usize_arr().context("shape")?,
+        dtype: DType::parse(j.req("dtype").as_str().context("dtype")?)?,
+    })
+}
+
+impl Bundle {
+    pub fn load(dir: &Path) -> Result<Bundle> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = j.req("config");
+        let config = ModelConfig {
+            name: c.req("name").as_str().unwrap().to_string(),
+            vocab: c.req("vocab").as_usize().unwrap(),
+            d_model: c.req("d_model").as_usize().unwrap(),
+            n_layers: c.req("n_layers").as_usize().unwrap(),
+            n_heads: c.req("n_heads").as_usize().unwrap(),
+            head_dim: c.req("head_dim").as_usize().unwrap(),
+            ffn_dim: c.req("ffn_dim").as_usize().unwrap(),
+            lam: c.req("lam").f32_arr().unwrap(),
+            linear_transformer: c.req("linear_transformer").as_bool().unwrap(),
+            param_count: c.req("param_count").as_usize().unwrap(),
+        };
+
+        let params = j
+            .req("params")
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name").as_str().unwrap().to_string(),
+                    shape: p.req("shape").usize_arr().unwrap(),
+                    init: p.req("init").as_str().unwrap().to_string(),
+                    std: p.req("std").as_f64().unwrap() as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(m) = j.req("artifacts") {
+            for (name, a) in m {
+                let inputs = a
+                    .req("inputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = a
+                    .req("outputs")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(io_spec)
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        file: a.req("file").as_str().unwrap().to_string(),
+                        inputs,
+                        outputs,
+                        n_params: a.req("n_params").as_usize().unwrap(),
+                    },
+                );
+            }
+        }
+
+        Ok(Bundle {
+            dir: dir.to_path_buf(),
+            config,
+            chunk_len: j.req("chunk_len").as_usize().unwrap(),
+            kv_state_shape: j.req("kv_state_shape").usize_arr().unwrap(),
+            flops_fwd_per_chunk: j.req("flops_fwd_per_chunk").as_f64().unwrap(),
+            params,
+            artifacts: artifacts.into_iter().collect(),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// KV state elements per (layer, head, dk, dv) stack — the paper's
+    /// ring message size (sequence-length independent).
+    pub fn kv_state_elems(&self) -> usize {
+        self.kv_state_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_informative() {
+        let err = Bundle::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn parses_generated_manifest_consistently() {
+        let dir = crate::runtime::artifact_root().join("tiny_c32");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let b = Bundle::load(&dir).unwrap();
+        // param table sums to the declared count
+        assert_eq!(b.param_count(), b.config.param_count);
+        // chunk_fwd signature: params + tokens + labels + kv
+        let f = &b.artifacts["chunk_fwd"];
+        assert_eq!(f.inputs.len(), f.n_params + 3);
+        assert_eq!(f.outputs.len(), 2);
+        // kv shape is (L, H, dh, dh)
+        assert_eq!(
+            b.kv_state_shape,
+            vec![b.config.n_layers, b.config.n_heads, b.config.head_dim,
+                 b.config.head_dim]
+        );
+        // chunk_bwd returns dparams + dkv + loss
+        let bwd = &b.artifacts["chunk_bwd"];
+        assert_eq!(bwd.outputs.len(), bwd.n_params + 2);
+    }
+}

@@ -1,0 +1,272 @@
+//! Shaped host buffers — the currency between the coordinator, the comm
+//! substrate and the PJRT runtime.
+//!
+//! PJRT `Literal`s wrap raw C pointers and are not `Send`; everything that
+//! crosses a thread boundary (ring messages, gradient buckets, parameter
+//! shards) travels as a `Tensor` and is converted at the device-executor
+//! boundary (`runtime::literals`).
+
+use std::fmt;
+
+/// Element type of an executable input/output, parsed from the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} el]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    // ---- arithmetic used by optimizers / gradient accumulation ----------
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Split the flat buffer into `n` equal-length contiguous shards
+    /// (padding semantics are the caller's concern; len must divide).
+    pub fn chunks(&self, n: usize) -> Vec<Tensor> {
+        assert_eq!(self.data.len() % n, 0, "cannot shard {} into {n}", self.data.len());
+        let c = self.data.len() / n;
+        (0..n)
+            .map(|i| Tensor::new(vec![c], self.data[i * c..(i + 1) * c].to_vec()))
+            .collect()
+    }
+}
+
+/// Dense row-major i32 tensor (token ids / labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> IntTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        IntTensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+}
+
+/// An argument value passed to an executable.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> &Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::I32(_) => panic!("expected f32 value"),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Value {
+        Value::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.nbytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        assert_eq!(Tensor::zeros(&[3]).data(), &[0.0; 3]);
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![10.0, 20.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[11.0, 22.0]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[5.5, 11.0]);
+        assert!((a.sq_norm() - (5.5f64 * 5.5 + 11.0 * 11.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharding() {
+        let t = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let s = t.chunks(2);
+        assert_eq!(s[0].data(), &[1., 2.]);
+        assert_eq!(s[1].data(), &[3., 4.]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::new(vec![2], vec![1.0, 5.0]);
+        let b = Tensor::new(vec![2], vec![1.5, 5.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn value_wrapping() {
+        let v: Value = Tensor::zeros(&[2]).into();
+        assert_eq!(v.dtype(), DType::F32);
+        let v: Value = IntTensor::new(vec![1], vec![7]).into();
+        assert_eq!(v.dtype(), DType::I32);
+        assert_eq!(v.shape(), &[1]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Held-out evaluation: perplexity + next-token accuracy.
+//!
+//! The paper's Tables 7/8 evaluate downstream benchmarks after 300K
+//! steps; the CPU-scale substitute (DESIGN.md §3) measures held-out
+//! perplexity and next-token accuracy on the synthetic corpus — the
+//! point being *parity between LASP and non-LASP training*, which is
+//! data-independent.
+//!
+//! Evaluation is single-device: `chunk_logits` is chained over chunks
+//! with the recurrent KV state, demonstrating that a LASP-trained model
+//! serves exactly like a recurrently-decoded linear-attention model.
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+use crate::runtime::{Bundle, Device};
+use crate::tensor::{IntTensor, Tensor, Value};
+use crate::train::data::DataGen;
+
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// mean NLL per token (nats)
+    pub nll: f64,
+    pub perplexity: f64,
+    /// top-1 next-token accuracy
+    pub accuracy: f64,
+    pub tokens: usize,
+}
+
+/// Evaluate `params` on `n_seqs` held-out sequences of `chunks_per_seq`
+/// chunks each, using a single device and the recurrent state chain.
+pub fn evaluate(
+    dev: &Device,
+    bundle: &Bundle,
+    params: &ParamStore,
+    datagen: &DataGen,
+    n_seqs: usize,
+    chunks_per_seq: usize,
+) -> Result<EvalReport> {
+    let c = bundle.chunk_len;
+    let v = bundle.config.vocab;
+    let mut nll = 0.0f64;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+
+    let pargs: Vec<Value> =
+        params.tensors().iter().cloned().map(Value::F32).collect();
+
+    for s in 0..n_seqs {
+        let seq = datagen.heldout(s, c * chunks_per_seq + 1);
+        let mut kv = Tensor::zeros(&bundle.kv_state_shape);
+        for t in 0..chunks_per_seq {
+            let tokens = &seq[t * c..(t + 1) * c];
+            let labels = &seq[t * c + 1..(t + 1) * c + 1];
+            let mut args = pargs.clone();
+            args.push(IntTensor::new(vec![c], tokens.to_vec()).into());
+            args.push(kv.into());
+            let mut out = dev.exec("chunk_logits", &args)?;
+            kv = out.remove(1).into_f32();
+            let logits = out.remove(0).into_f32();
+            // log-softmax NLL + argmax accuracy per position
+            let ld = logits.data();
+            for (i, &label) in labels.iter().enumerate() {
+                let row = &ld[i * v..(i + 1) * v];
+                let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse: f32 =
+                    row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+                nll += f64::from(lse - row[label as usize]);
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if argmax == label as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    let mean = nll / total as f64;
+    Ok(EvalReport {
+        nll: mean,
+        perplexity: mean.exp(),
+        accuracy: correct as f64 / total as f64,
+        tokens: total,
+    })
+}

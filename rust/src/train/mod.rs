@@ -1,0 +1,7 @@
+//! Training support: synthetic corpus + single-device evaluation.
+
+pub mod data;
+pub mod eval;
+
+pub use data::DataGen;
+pub use eval::{evaluate, EvalReport};

@@ -1,0 +1,220 @@
+//! Tiny declarative CLI parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and auto-generated `--help`, which covers everything the `lasp` binary,
+//! examples, and bench harnesses need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    default: Option<String>,
+    help: String,
+    is_flag: bool,
+}
+
+/// Declarative argument set: declare options, then `parse()`.
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), specs: vec![] }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            default: Some(default.into()),
+            help: help.into(),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            default: None,
+            help: help.into(),
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            if spec.is_flag {
+                s += &format!("  --{:<24} {}\n", spec.name, spec.help);
+            } else {
+                s += &format!(
+                    "  --{:<24} {} (default: {})\n",
+                    format!("{} <v>", spec.name),
+                    spec.help,
+                    spec.default.as_deref().unwrap_or("")
+                );
+            }
+        }
+        s
+    }
+
+    /// Parse an explicit token list (testable); exits on --help / errors
+    /// only via the `parse()` wrapper.
+    pub fn parse_from(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                args.opts.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{name} is a flag, takes no value"));
+                    }
+                    args.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    args.opts.insert(name, v);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse process args; prints usage and exits on error or --help.
+    pub fn parse(&self) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&tokens) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.opts
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("bad list in --{name}")))
+            .collect()
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "10", "number of steps")
+            .opt("name", "tiny", "config")
+            .flag("verbose", "chatty")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults() {
+        let a = cli().parse_from(&[]).unwrap();
+        assert_eq!(a.get_usize("steps"), 10);
+        assert_eq!(a.get("name"), "tiny");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = cli()
+            .parse_from(&toks(&["--steps", "99", "--verbose", "--name=small", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 99);
+        assert_eq!(a.get("name"), "small");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse_from(&toks(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse_from(&toks(&["--steps"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = cli().parse_from(&toks(&["--help"])).unwrap_err();
+        assert!(e.contains("--steps"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Cli::new("t", "t").opt("gpus", "16,32", "gpu counts");
+        let a = c.parse_from(&toks(&["--gpus", "1, 2,4"])).unwrap();
+        assert_eq!(a.get_usize_list("gpus"), vec![1, 2, 4]);
+    }
+}

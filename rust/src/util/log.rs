@@ -1,0 +1,85 @@
+//! Leveled stderr logging with wall-clock offsets.
+//!
+//! Set `LASP_LOG=debug|info|warn|error` (default `info`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != u8::MAX {
+        return cur;
+    }
+    let lv = match std::env::var("LASP_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lv, Ordering::Relaxed);
+    lv
+}
+
+/// Force the level programmatically (tests).
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn log(lv: Level, args: std::fmt::Arguments<'_>) {
+    if (lv as u8) < level() {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let tag = match lv {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! debug { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! info { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! warn_ { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! error { ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn macros_compile_and_respect_level() {
+        set_level(Level::Error);
+        crate::debug!("hidden {}", 1);
+        crate::info!("hidden");
+        crate::warn_!("hidden");
+        crate::error!("visible (stderr) {}", 2);
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utilities: PRNG, JSON, CLI, logging, stats, property
+//! testing. The offline vendor set has no rand/serde/clap/criterion/
+//! proptest, so the repo carries minimal production-grade equivalents.
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,167 @@
+//! quickcheck-lite: randomized property testing with shrinking for the
+//! coordinator invariants (routing, batching, state management).
+//!
+//! The offline vendor set carries no `proptest`, so this module provides
+//! the minimal core: seeded generators, a `check` driver that runs N
+//! random cases, and greedy scalar shrinking on failure so test output
+//! points at a near-minimal counterexample.
+
+use super::rng::Rng;
+
+/// A generated test case: a vector of named integer parameters drawn from
+/// inclusive ranges. Enough for the repo's invariants, which are all
+/// parameterized by small shape/topology integers.
+#[derive(Clone, Debug)]
+pub struct Case {
+    pub vals: Vec<(String, u64)>,
+}
+
+impl Case {
+    pub fn get(&self, name: &str) -> u64 {
+        self.vals
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("no generated param {name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name) as usize
+    }
+}
+
+/// Inclusive integer range generator for one named parameter.
+#[derive(Clone)]
+pub struct Param {
+    name: String,
+    lo: u64,
+    hi: u64,
+}
+
+pub fn param(name: &str, lo: u64, hi: u64) -> Param {
+    assert!(lo <= hi);
+    Param { name: name.into(), lo, hi }
+}
+
+/// Run `prop` on `n` random cases; on failure, greedily shrink each
+/// parameter toward its lower bound and panic with the minimal case found.
+pub fn check(seed: u64, n: usize, params: &[Param], prop: impl Fn(&Case) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = Case {
+            vals: params
+                .iter()
+                .map(|p| (p.name.clone(), p.lo + rng.below(p.hi - p.lo + 1)))
+                .collect(),
+        };
+        if let Err(msg) = prop(&case) {
+            let minimal = shrink(case, params, &prop);
+            panic!(
+                "property failed (seed={seed}, case #{i}): {msg}\n  minimal counterexample: {:?}",
+                minimal.vals
+            );
+        }
+    }
+}
+
+fn shrink(mut case: Case, params: &[Param], prop: &impl Fn(&Case) -> Result<(), String>) -> Case {
+    // Per-coordinate binary search for the smallest failing value, looped
+    // until a fixed point (coordinates can interact).
+    loop {
+        let mut improved = false;
+        for (idx, p) in params.iter().enumerate() {
+            let cur = case.vals[idx].1;
+            if cur <= p.lo {
+                continue;
+            }
+            let fails = |v: u64| {
+                let mut cand = case.clone();
+                cand.vals[idx].1 = v;
+                prop(&cand).is_err()
+            };
+            // Invariant: `hi_fail` fails. Find the smallest failing value
+            // in [p.lo, cur] assuming monotonicity; fall back gracefully
+            // (we only ever keep failing candidates) if it isn't monotone.
+            let mut hi_fail = cur;
+            if fails(p.lo) {
+                hi_fail = p.lo;
+            } else {
+                let mut lo_pass = p.lo;
+                while hi_fail - lo_pass > 1 {
+                    let mid = lo_pass + (hi_fail - lo_pass) / 2;
+                    if fails(mid) {
+                        hi_fail = mid;
+                    } else {
+                        lo_pass = mid;
+                    }
+                }
+            }
+            if hi_fail < cur {
+                case.vals[idx].1 = hi_fail;
+                improved = true;
+            }
+        }
+        if !improved {
+            return case;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check(1, 50, &[param("x", 0, 100)], |_| {
+            **counter.borrow_mut() += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics() {
+        check(2, 100, &[param("x", 0, 1000)], |c| {
+            if c.get("x") >= 500 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_boundary() {
+        // Capture the panic message and confirm the shrunk value is the
+        // true threshold (500), not whatever random value first failed.
+        let r = std::panic::catch_unwind(|| {
+            check(3, 200, &[param("x", 0, 100_000)], |c| {
+                if c.get("x") >= 500 {
+                    Err("boom".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("(\"x\", 500)"), "{msg}");
+    }
+
+    #[test]
+    fn generated_values_respect_bounds() {
+        check(4, 200, &[param("a", 3, 7), param("b", 10, 10)], |c| {
+            let a = c.get("a");
+            if !(3..=7).contains(&a) {
+                return Err("a out of range".into());
+            }
+            if c.get("b") != 10 {
+                return Err("b must be 10".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Timing + summary statistics helpers for the bench harnesses.
+//!
+//! criterion is not in the offline vendor set; `[[bench]] harness = false`
+//! targets use these primitives instead (warmup, repeated timing, robust
+//! summaries), keeping methodology consistent across all paper tables.
+
+use std::time::{Duration, Instant};
+
+/// Summary of a sample of measurements (seconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let q = |p: f64| s[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Time `f` — `warmup` unrecorded runs then `iters` recorded ones.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Cumulative named timer for phase breakdowns (execute vs comm vs optim).
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.phases.push((name.to_string(), d));
+        }
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or_default()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut s = String::new();
+        for (name, d) in &self.phases {
+            let secs = d.as_secs_f64();
+            s += &format!("  {name:<16} {secs:>9.3}s  {:>5.1}%\n", 100.0 * secs / total);
+        }
+        s
+    }
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s += &format!("{:<width$} | ", c, width = w[i]);
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        let mut out = line(&self.headers);
+        out += &format!(
+            "|{}\n",
+            w.iter().map(|x| format!("{}|", "-".repeat(x + 2))).collect::<String>()
+        );
+        for r in &self.rows {
+            out += &line(r);
+        }
+        out
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: u64) -> String {
+    const U: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", U[i])
+    }
+}
+
+/// Human-readable token count (paper reports seq lens as 2K..4096K).
+pub fn fmt_klen(n: usize) -> String {
+    if n % 1024 == 0 {
+        format!("{}K", n / 1024)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[2.5]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p95, 2.5);
+    }
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::default();
+        t.add("a", Duration::from_millis(10));
+        t.add("a", Duration::from_millis(5));
+        t.add("b", Duration::from_millis(1));
+        assert_eq!(t.get("a"), Duration::from_millis(15));
+        assert!(t.report().contains('a'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["seq", "tput"]);
+        t.row(&["2K".into(), "1893.3".into()]);
+        t.row(&["4096K".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("| seq   | tput"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KB");
+        assert_eq!(fmt_klen(4096 * 1024), "4096K");
+        assert_eq!(fmt_klen(100), "100");
+    }
+}

@@ -1,0 +1,63 @@
+//! Measured communication volume vs the paper's Table-1 closed forms,
+//! through the *real training path* (not just the schedule driver).
+
+use lasp::coordinator::{train, TrainConfig};
+use lasp::runtime::{artifact_root, load_bundle};
+
+fn have_artifacts() -> bool {
+    artifact_root().join("tiny_c32/manifest.json").exists()
+}
+
+/// LASP's per-step ring traffic is exactly 2·(T-1) KV-state messages
+/// (KV forward + dKV backward at every chunk boundary), independent of C.
+#[test]
+fn lasp_ring_bytes_closed_form() {
+    if !have_artifacts() {
+        return;
+    }
+    for (chunk, sp) in [(32usize, 2usize), (32, 4), (64, 2)] {
+        let bundle = load_bundle("tiny", chunk).unwrap();
+        let state_bytes = (bundle.kv_state_elems() * 4) as u64;
+        let mut cfg = TrainConfig::new("tiny", chunk, sp);
+        cfg.steps = 3;
+        cfg.warmup = 10;
+        let r = train(&cfg).unwrap();
+        let expect = cfg.steps as u64 * 2 * (sp as u64 - 1) * state_bytes;
+        assert_eq!(
+            r.ring_bytes, expect,
+            "T={sp} C={chunk}: measured {} vs formula {expect}",
+            r.ring_bytes
+        );
+    }
+}
+
+/// The state message size is B·d²/h elements per layer — check the
+/// manifest-level identity d²/h · L == kv_state_elems (dk = dv = d/h).
+#[test]
+fn state_size_matches_table1_formula() {
+    if !have_artifacts() {
+        return;
+    }
+    let b = load_bundle("tiny", 32).unwrap();
+    let d = b.config.d_model;
+    let h = b.config.n_heads;
+    let l = b.config.n_layers;
+    assert_eq!(b.kv_state_elems(), l * d * d / h);
+}
+
+/// Hybrid parallelism: ring traffic scales with the number of SP groups
+/// (each group runs its own ring) but never with sequence length.
+#[test]
+fn hybrid_ring_traffic_scales_with_groups() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut one = TrainConfig::new("tiny", 32, 2);
+    one.steps = 2;
+    one.warmup = 10;
+    let r1 = train(&one).unwrap();
+    let mut two = one.clone();
+    two.data_groups = 2;
+    let r2 = train(&two).unwrap();
+    assert_eq!(r2.ring_bytes, 2 * r1.ring_bytes);
+}

@@ -1,0 +1,56 @@
+//! Table-2 matrix at test scale: every DDP backend × {LASP, no-LASP}
+//! produces the same loss trajectory on identical data.
+
+use lasp::analytic::DdpBackend;
+use lasp::coordinator::{train, TrainConfig};
+use lasp::runtime::artifact_root;
+
+fn have_artifacts() -> bool {
+    artifact_root().join("tiny_c32/manifest.json").exists()
+        && artifact_root().join("tiny_c64/manifest.json").exists()
+}
+
+fn run(chunk: usize, sp: usize, backend: DdpBackend) -> Vec<f32> {
+    let mut cfg = TrainConfig::new("tiny", chunk, sp);
+    cfg.steps = 3;
+    cfg.warmup = 10;
+    cfg.lr = 1e-3;
+    cfg.backend = backend;
+    train(&cfg).unwrap().losses
+}
+
+#[test]
+fn table2_parity_all_backends() {
+    if !have_artifacts() {
+        eprintln!("skipping: make artifacts");
+        return;
+    }
+    // N = 64 for every cell: T=1 (no SP) vs T=2 (LASP).
+    for backend in DdpBackend::ALL {
+        let base = run(64, 1, backend);
+        let lasp = run(32, 2, backend);
+        for (s, (a, b)) in base.iter().zip(&lasp).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3 * a.abs().max(1.0),
+                "{} step {s}: {a} vs {b}",
+                backend.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn different_seeds_actually_diverge() {
+    if !have_artifacts() {
+        return;
+    }
+    // guard against the parity test passing vacuously
+    let a = run(32, 2, DdpBackend::Ddp);
+    let mut cfg = TrainConfig::new("tiny", 32, 2);
+    cfg.steps = 3;
+    cfg.warmup = 10;
+    cfg.lr = 1e-3;
+    cfg.seed = 99;
+    let b = train(&cfg).unwrap().losses;
+    assert!((a[0] - b[0]).abs() > 1e-4, "seeds do not change the run");
+}
