@@ -1,0 +1,7 @@
+# Optional AOT pipeline: lower the JAX/Pallas chunk programs to HLO text
+# + manifests for the PJRT backend. The default (native) backend needs
+# none of this — see README.md.
+artifacts:
+	cd python && python3 -m compile.aot --out ../rust/artifacts
+
+.PHONY: artifacts

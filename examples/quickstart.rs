@@ -1,7 +1,7 @@
 //! Quickstart: train a tiny linear-attention transformer with LASP over
 //! 4 simulated devices, then evaluate on held-out data.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use lasp::coordinator::{train, TrainConfig};
 use lasp::runtime::{load_bundle, Device};

@@ -12,7 +12,6 @@ use lasp::analytic::{memory_per_gpu, models::TNL_1B, throughput_tokens_per_sec,
                      DdpBackend, SpMethod};
 use lasp::cluster::Topology;
 use lasp::coordinator::{train, TrainConfig};
-use lasp::runtime::artifact_root;
 use lasp::util::stats::{fmt_klen, Table};
 
 fn main() {
@@ -47,8 +46,8 @@ fn main() {
     }
 
     // Measured small-scale anchor on the real substrate.
-    if artifact_root().join("tiny_c32/manifest.json").exists() {
-        println!("-- measured on CPU-PJRT substrate (tiny model) --");
+    {
+        println!("-- measured on the native CPU substrate (tiny model) --");
         let mut tab =
             Table::new(&["N", "T", "tokens/s (measured)", "ring bytes/step"]);
         for (chunk, sp) in [(32usize, 2usize), (32, 4), (64, 4)] {

@@ -1,20 +1,15 @@
-//! §Perf micro-benchmarks of the L3 hot path: executable latency, literal
-//! conversion, ring hop, gradient all-reduce — the numbers behind
-//! EXPERIMENTS.md §Perf.
+//! §Perf micro-benchmarks of the L3 hot path: chunk-program latency,
+//! ring-message serialization, ring hop, gradient all-reduce.
 //!
 //! Run: cargo bench --bench perf_hotpath
 
-use lasp::comm::CommWorld;
+use lasp::comm::{CommWorld, Payload};
 use lasp::model::ParamStore;
-use lasp::runtime::{artifact_root, literals, load_bundle, zero_kv, Device};
+use lasp::runtime::{load_bundle, zero_kv, Device};
 use lasp::tensor::{IntTensor, Tensor, Value};
 use lasp::util::stats::{bench, Table};
 
 fn main() {
-    if !artifact_root().join("tiny_c32/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
     let mut tab = Table::new(&["hot path", "mean", "p50", "p95"]);
     let fmt = |s: f64| {
         if s < 1e-3 {
@@ -46,11 +41,13 @@ fn main() {
     row("chunk_bwd exec (tiny/C=32)",
         bench(3, 20, || { dev.exec("chunk_bwd", &bargs).unwrap(); }));
 
-    // 2) literal conversion of a KV state (per ring message)
+    // 2) ring-message serialization of a KV state (tensor -> payload)
     let kv = zero_kv(&b);
-    let v: Value = kv.clone().into();
-    row("tensor->literal (KV state)",
-        bench(10, 200, || { literals::to_literal(&v).unwrap(); }));
+    row("tensor->payload (KV state)",
+        bench(10, 200, || {
+            let p = Payload::F32(kv.data().to_vec());
+            std::hint::black_box(p.nbytes());
+        }));
 
     // 3) ring hop over the comm substrate (KV-state sized)
     let world = CommWorld::new(2);

@@ -10,7 +10,6 @@
 
 use lasp::analytic::DdpBackend;
 use lasp::coordinator::{train, TrainConfig};
-use lasp::runtime::artifact_root;
 use lasp::util::stats::Table;
 
 fn run(config: &str, chunk: usize, sp: usize, backend: DdpBackend, steps: usize)
@@ -24,10 +23,6 @@ fn run(config: &str, chunk: usize, sp: usize, backend: DdpBackend, steps: usize)
 }
 
 fn main() {
-    if !artifact_root().join("tiny_c32/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
     let steps = 20;
     for (family, cfg_name) in [("TNL", "tiny"), ("Linear Transformer", "tiny_lt")] {
         println!("== Table 2: {family} (N=128, {steps} steps) ==\n");

@@ -9,14 +9,9 @@
 //! Run: cargo bench --bench table5_ablation_fusion
 
 use lasp::coordinator::{train, TrainConfig};
-use lasp::runtime::artifact_root;
 use lasp::util::stats::Table;
 
 fn main() {
-    if !artifact_root().join("tiny_c64/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
     println!("== Table 5: Kernel Fusion x KV State Caching (tiny, T=2, N=128) ==\n");
     let mut tab = Table::new(&["Kernel Fusion", "KV State Cache",
                                "Throughput (tokens/s)", "KV cache peak (bytes)",

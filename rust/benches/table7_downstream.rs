@@ -9,15 +9,11 @@
 //! Run: cargo bench --bench table7_downstream
 
 use lasp::coordinator::{train, TrainConfig};
-use lasp::runtime::{artifact_root, load_bundle, Device};
+use lasp::runtime::{load_bundle, Device};
 use lasp::train::{evaluate, DataGen};
 use lasp::util::stats::Table;
 
 fn main() {
-    if !artifact_root().join("tiny_c32/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
     let steps = 40;
     println!("== Table 7/8: extended training + downstream parity ==");
     println!("tiny TNL, {steps} steps, heldout = 8 chunks of synthetic corpus\n");

@@ -19,7 +19,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::tensor::Tensor;
 
@@ -69,26 +69,35 @@ struct Mailbox {
     cv: Condvar,
 }
 
+/// Deadlock trip-wire for blocking receives: total time a `recv` may
+/// wait for its tag, across *all* condvar wakeups. Spurious or
+/// unrelated-tag wakeups must not restart the clock, or a deadlocked
+/// ring with chatty neighbors never trips it.
+const RECV_TIMEOUT: Duration = Duration::from_secs(600);
+
 impl Mailbox {
     fn push(&self, msg: Msg) {
         self.q.lock().unwrap().push_back(msg);
         self.cv.notify_all();
     }
 
-    fn pop(&self, tag: u64) -> Payload {
+    fn pop(&self, tag: u64, timeout: Duration) -> Payload {
+        let deadline = Instant::now() + timeout;
         let mut q = self.q.lock().unwrap();
         loop {
             if let Some(idx) = q.iter().position(|m| m.tag == tag) {
                 return q.remove(idx).unwrap().payload;
             }
-            let (guard, timed_out) = self
-                .cv
-                .wait_timeout(q, Duration::from_secs(600))
-                .unwrap();
-            q = guard;
-            if timed_out.timed_out() {
-                panic!("comm: recv(tag={tag}) timed out after 600s — ring deadlock?");
+            let now = Instant::now();
+            if now >= deadline {
+                panic!(
+                    "comm: recv(tag={tag}) timed out after {timeout:?} — ring deadlock?"
+                );
             }
+            // Wait only for the *remaining* budget so the total elapsed
+            // time is bounded no matter how often we are woken.
+            let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
         }
     }
 }
@@ -227,16 +236,27 @@ impl Communicator {
 
     /// Blocking receive of the matching tag from `src`.
     pub fn recv_tagged(&self, src: usize, tag: u64) -> Payload {
-        self.shared.mailboxes[self.rank][src].pop(tag)
+        self.shared.mailboxes[self.rank][src].pop(tag, RECV_TIMEOUT)
     }
 
-    /// Untagged convenience pair used by the LASP ring (tag 0).
+    /// Untagged convenience pair (tag 0) for simple P2P exchanges.
     pub fn send(&self, dst: usize, t: &Tensor) {
         self.send_tagged(dst, 0, Payload::F32(t.data().to_vec()), OpKind::P2p);
     }
 
     pub fn recv(&self, src: usize, shape: &[usize]) -> Tensor {
         Tensor::new(shape.to_vec(), self.recv_tagged(src, 0).into_f32())
+    }
+
+    /// Tagged tensor P2P used by the LASP ring: the tag encodes
+    /// (step, phase) so a replayed forward ring can never cross-talk
+    /// with the backward ring (see `coordinator::ring::ring_tag`).
+    pub fn send_tensor(&self, dst: usize, tag: u64, t: &Tensor) {
+        self.send_tagged(dst, tag, Payload::F32(t.data().to_vec()), OpKind::P2p);
+    }
+
+    pub fn recv_tensor(&self, src: usize, tag: u64, shape: &[usize]) -> Tensor {
+        Tensor::new(shape.to_vec(), self.recv_tagged(src, tag).into_f32())
     }
 
     // ---- barrier ---------------------------------------------------------
@@ -653,6 +673,54 @@ mod tests {
         // ring all-reduce wire bytes per rank: 2*(n-1)/n*len*4 = 2*3/4*64
         let per_rank = world.stats().bytes(OpKind::AllReduce) / 4;
         assert_eq!(per_rank, 2 * 3 * 16 / 4 * 4);
+    }
+
+    #[test]
+    fn tagged_tensor_roundtrip() {
+        run_world(2, |c| {
+            if c.rank() == 0 {
+                c.send_tensor(1, 77, &Tensor::new(vec![2], vec![1.0, 2.0]));
+                c.send_tensor(1, 78, &Tensor::new(vec![2], vec![3.0, 4.0]));
+            } else {
+                // tags match out of arrival order
+                let b = c.recv_tensor(0, 78, &[2]);
+                let a = c.recv_tensor(0, 77, &[2]);
+                assert_eq!(a.data(), &[1.0, 2.0]);
+                assert_eq!(b.data(), &[3.0, 4.0]);
+            }
+        });
+    }
+
+    /// Regression: the deadlock timeout must bound the *total* elapsed
+    /// wait. A mailbox woken repeatedly by unrelated-tag messages used to
+    /// restart its timer on every wakeup and never trip.
+    #[test]
+    fn recv_timeout_survives_chatty_neighbors() {
+        use std::sync::Arc;
+        let mb = Arc::new(Mailbox::default());
+        let chatty = {
+            let mb = Arc::clone(&mb);
+            thread::spawn(move || {
+                // unrelated tags arriving faster than the timeout window
+                for _ in 0..30 {
+                    std::thread::sleep(Duration::from_millis(20));
+                    mb.push(Msg { tag: 1, payload: Payload::F32(vec![0.0]) });
+                }
+            })
+        };
+        let t0 = std::time::Instant::now();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            mb.pop(42, Duration::from_millis(150));
+        }));
+        assert!(r.is_err(), "deadlocked recv must panic");
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_millis(600),
+            "timeout restarted on wakeups: waited {waited:?}"
+        );
+        // the pop panic poisons the mailbox mutex; the chatty thread may
+        // observe that and panic too — only completion matters here
+        let _ = chatty.join();
     }
 
     #[test]

@@ -1,16 +1,22 @@
 //! The LASP ring schedules (Algorithms 2 & 3) at the chunk level.
 //!
-//! Forward: chunk `t` receives `KV_{t-1}` from rank `i-1`, caches it,
-//! executes the fused chunk kernel (intra + inter + state update lowered
-//! into one HLO module), and sends `KV_t` to rank `i+1`. The message is a
-//! `(L, H, dk, dv)` stack — **sequence-length independent**, the paper's
-//! central communication claim.
+//! Forward: chunk `t` receives `KV_{t-1}` from its *group-relative*
+//! predecessor, caches it, executes the fused chunk kernel (intra + inter
+//! + state update lowered into one program), and sends `KV_t` to its
+//! successor. The message is a `(L, H, dk, dv)` stack — **sequence-length
+//! independent**, the paper's central communication claim.
 //!
-//! Backward: chunk `t` receives `dKV` from rank `i+1` (the cotangent of
-//! its `KV_out`), loads the cached `KV_{t-1}`, runs the chunk backward
+//! Backward: chunk `t` receives `dKV` from its successor (the cotangent
+//! of its `KV_out`), loads the cached `KV_{t-1}`, runs the chunk backward
 //! (which recomputes the forward *inside* the chunk — per-chunk activation
 //! recomputation — but never recomputes or re-communicates cross-chunk
-//! states), and sends its `dKV_in` to rank `i-1`.
+//! states), and sends its `dKV_in` to its predecessor.
+//!
+//! Ring neighbors are derived from `placement.sp_group(..)` — not from
+//! global `rank ± 1` — so the schedule stays correct for any group
+//! layout, and every message is tagged by `(step, phase)` so the Table-5
+//! kv-cache-ablation replay (a second forward ring between the forward
+//! and backward rings) can never cross-talk with either.
 
 use anyhow::Result;
 
@@ -20,6 +26,27 @@ use crate::comm::Communicator;
 use crate::model::ParamStore;
 use crate::runtime::Device;
 use crate::tensor::{IntTensor, Tensor, Value};
+
+/// Which ring a message belongs to within one training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingPhase {
+    /// Algorithm 2: the KV-state forward ring.
+    Forward = 1,
+    /// Table-5 ablation: forward ring replayed to recompute KV states.
+    Replay = 2,
+    /// Algorithm 3: the dKV backward ring.
+    Backward = 3,
+}
+
+/// Ring message tag for `(step, phase)`.
+///
+/// Stays strictly below the collective tag space (`group_tag` allocates
+/// from `1 << 16` upward) and never collides with the untagged (tag-0)
+/// convenience channel. Steps wrap at 2^14, which is safe because ring
+/// messages never outlive their step.
+pub fn ring_tag(step: usize, phase: RingPhase) -> u64 {
+    ((step as u64 & 0x3FFF) << 2) | phase as u64
+}
 
 /// Forward-ring output for one chunk.
 pub struct ForwardOut {
@@ -40,7 +67,9 @@ pub struct BackwardOut {
 }
 
 /// Algorithm 2 for one rank. `fused` selects the kernel-fusion ablation
-/// twin; `slot` is the micro-batch slot for the KV cache.
+/// twin; `slot` is the micro-batch slot for the KV cache; `phase` is
+/// [`RingPhase::Forward`] for the real ring and [`RingPhase::Replay`]
+/// for the kv-cache-ablation replay.
 #[allow(clippy::too_many_arguments)]
 pub fn forward_chunk(
     dev: &Device,
@@ -52,15 +81,20 @@ pub fn forward_chunk(
     cache: &mut KvCache,
     slot: usize,
     fused: bool,
+    step: usize,
+    phase: RingPhase,
 ) -> Result<ForwardOut> {
     let rank = comm.rank();
+    let group = placement.sp_group(placement.group_of(rank));
     let t_idx = placement.chunk_index(rank);
+    debug_assert_eq!(group.ranks[t_idx], rank, "placement/group mismatch");
     let t_max = placement.sp_size - 1;
     let kv_shape = &dev.bundle().kv_state_shape;
+    let tag = ring_tag(step, phase);
 
-    // Recv KV_{t-1} from rank i-1 (zeros for the first chunk).
+    // Recv KV_{t-1} from the group predecessor (zeros for the first chunk).
     let kv_in = if t_idx > 0 {
-        comm.recv(rank - 1, kv_shape)
+        comm.recv_tensor(group.ranks[t_idx - 1], tag, kv_shape)
     } else {
         Tensor::zeros(kv_shape)
     };
@@ -77,15 +111,16 @@ pub fn forward_chunk(
     let kv_out = out.remove(1).into_f32();
     let loss_sum = out.remove(0).as_f32().item();
 
-    // Send KV_t to rank i+1.
+    // Send KV_t to the group successor.
     if t_idx < t_max {
-        comm.send(rank + 1, &kv_out);
+        comm.send_tensor(group.ranks[t_idx + 1], tag, &kv_out);
     }
     Ok(ForwardOut { loss_sum, kv_in, kv_out })
 }
 
-/// Algorithm 3 for one rank. `kv_in` must be supplied when the cache is
-/// disabled (Table-5 ablation replays the forward ring to obtain it).
+/// Algorithm 3 for one rank. `kv_in_fallback` must be supplied when the
+/// cache is disabled (Table-5 ablation replays the forward ring to
+/// obtain it).
 #[allow(clippy::too_many_arguments)]
 pub fn backward_chunk(
     dev: &Device,
@@ -99,15 +134,19 @@ pub fn backward_chunk(
     kv_in_fallback: Option<&Tensor>,
     loss_scale: f32,
     fused: bool,
+    step: usize,
 ) -> Result<BackwardOut> {
     let rank = comm.rank();
+    let group = placement.sp_group(placement.group_of(rank));
     let t_idx = placement.chunk_index(rank);
+    debug_assert_eq!(group.ranks[t_idx], rank, "placement/group mismatch");
     let t_max = placement.sp_size - 1;
     let kv_shape = &dev.bundle().kv_state_shape;
+    let tag = ring_tag(step, RingPhase::Backward);
 
-    // Recv dKV from rank i+1 (zeros for the last chunk).
+    // Recv dKV from the group successor (zeros for the last chunk).
     let dkv_out = if t_idx < t_max {
-        comm.recv(rank + 1, kv_shape)
+        comm.recv_tensor(group.ranks[t_idx + 1], tag, kv_shape)
     } else {
         Tensor::zeros(kv_shape)
     };
@@ -135,9 +174,28 @@ pub fn backward_chunk(
     let dkv_in = out.pop().unwrap().into_f32();
     let grads: Vec<Tensor> = out.into_iter().map(Value::into_f32).collect();
 
-    // Send dKV_in to rank i-1.
+    // Send dKV_in to the group predecessor.
     if t_idx > 0 {
-        comm.send(rank - 1, &dkv_in);
+        comm.send_tensor(group.ranks[t_idx - 1], tag, &dkv_in);
     }
     Ok(BackwardOut { grads, loss_sum })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_disjoint_across_steps_and_phases() {
+        use std::collections::BTreeSet;
+        let mut seen = BTreeSet::new();
+        for step in 0..64 {
+            for phase in [RingPhase::Forward, RingPhase::Replay, RingPhase::Backward] {
+                let t = ring_tag(step, phase);
+                assert!(t > 0, "must not collide with the untagged channel");
+                assert!(t < 1 << 16, "must stay below the collective tag space");
+                assert!(seen.insert(t), "tag collision at step {step} {phase:?}");
+            }
+        }
+    }
 }

@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 
 use super::data::{distribute, Placement};
 use super::kv_cache::KvCache;
-use super::ring::{backward_chunk, forward_chunk};
+use super::ring::{backward_chunk, forward_chunk, RingPhase};
 use crate::analytic::DdpBackend;
 use crate::comm::{CommWorld, Communicator, OpKind};
 use crate::model::ParamStore;
@@ -183,7 +183,7 @@ fn worker(
         // ---- Algorithm 2: forward ring -------------------------------------
         let fwd = phases.time("forward", || {
             forward_chunk(&dev, &comm, placement, &params, &tokens, &labels,
-                          &mut cache, 0, cfg.fused)
+                          &mut cache, 0, cfg.fused, step, RingPhase::Forward)
         })?;
 
         // ---- KV-cache ablation: replay the forward ring --------------------
@@ -193,7 +193,8 @@ fn worker(
             let mut throwaway = KvCache::new(false, 1);
             let replay = phases.time("kv_recompute", || {
                 forward_chunk(&dev, &comm, placement, &params, &tokens, &labels,
-                              &mut throwaway, 0, cfg.fused)
+                              &mut throwaway, 0, cfg.fused, step,
+                              RingPhase::Replay)
             })?;
             Some(replay.kv_in)
         };
@@ -202,7 +203,7 @@ fn worker(
         let bwd = phases.time("backward", || {
             backward_chunk(&dev, &comm, placement, &params, &tokens, &labels,
                            &cache, 0, kv_fallback.as_ref(), loss_scale,
-                           cfg.fused)
+                           cfg.fused, step)
         })?;
         debug_assert!((bwd.loss_sum - fwd.loss_sum).abs()
             <= 1e-3 * fwd.loss_sum.abs().max(1.0));

@@ -7,11 +7,15 @@
 //!
 //! Layering (see DESIGN.md):
 //!   * `python/compile` authors the model (JAX) and kernels (Pallas) and
-//!     AOT-lowers per-chunk executables to HLO text (`make artifacts`);
-//!   * this crate loads those executables via PJRT (`runtime`), simulates
-//!     a multi-GPU cluster (`cluster`, `comm`), and implements the
-//!     paper's contribution (`coordinator`) plus baselines, optimizers,
-//!     the training loop and the analytic scale model.
+//!     can AOT-lower per-chunk executables to HLO text (`make artifacts`,
+//!     optional);
+//!   * this crate executes the chunk programs through the
+//!     `runtime::Executor` abstraction — the pure-Rust `NativeDevice`
+//!     by default, or the compiled PJRT artifacts behind the `pjrt`
+//!     feature — simulates a multi-GPU cluster (`cluster`, `comm`), and
+//!     implements the paper's contribution (`coordinator`) plus
+//!     baselines, optimizers, the training loop and the analytic scale
+//!     model.
 pub mod analytic;
 pub mod baselines;
 pub mod cluster;

@@ -99,18 +99,11 @@ impl ParamStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{artifact_root, load_bundle};
-
-    fn bundle() -> Option<Bundle> {
-        if !artifact_root().join("tiny_c32/manifest.json").exists() {
-            return None;
-        }
-        Some(load_bundle("tiny", 32).unwrap())
-    }
+    use crate::runtime::load_bundle;
 
     #[test]
     fn init_is_deterministic_and_spec_shaped() {
-        let Some(b) = bundle() else { return };
+        let b = load_bundle("tiny", 32).unwrap();
         let p1 = ParamStore::init(&b, 42);
         let p2 = ParamStore::init(&b, 42);
         assert_eq!(ParamStore::max_abs_diff(&p1, &p2), 0.0);

@@ -1,156 +1,192 @@
-//! PJRT runtime: load the AOT artifacts produced by `make artifacts` and
-//! execute them from the coordinator's hot path.
+//! Execution runtime: artifact bundles + pluggable chunk-program
+//! executors.
 //!
-//! Layout per bundle (see `python/compile/aot.py`):
-//!   artifacts/<cfg>_c<chunk>/manifest.json + *.hlo.txt
+//! A [`Bundle`] carries everything the coordinator knows about a model
+//! config — parameter table, artifact signatures, state shapes, flop
+//! counts. It comes either from a `manifest.json` written by
+//! `python/compile/aot.py` (`make artifacts`) or, for the built-in
+//! configs, from [`synth`], which synthesizes the identical manifest in
+//! memory so nothing on disk is required.
 //!
-//! `Bundle` (manifest metadata) is `Send` and shared across worker
-//! threads; `Device` wraps a `PjRtClient` plus compiled executables and is
-//! **not** `Send` (raw C pointers), so every simulated GPU thread creates
-//! its own `Device` — exactly the one-process-per-GPU shape of the
-//! paper's Metaseq/NCCL stack.
+//! Execution goes through the [`Executor`] trait with two backends:
+//!
+//!  * [`native::NativeDevice`] (default) — evaluates the chunk programs
+//!    (`chunk_fwd`, `chunk_bwd`, their unfused twins, `chunk_logits`,
+//!    `ring_block`) in pure Rust; `Send + Sync`, zero artifacts needed.
+//!  * `pjrt::PjrtDevice` (feature `pjrt`) — compiles the AOT HLO text via
+//!    the `xla` FFI crate; **not** `Send`, so every simulated GPU thread
+//!    creates its own device — the one-process-per-GPU shape of the
+//!    paper's Metaseq/NCCL stack. Selected with `LASP_BACKEND=pjrt`.
+//!
+//! See DESIGN.md §Backends for the layering rationale.
 
-pub mod literals;
 pub mod manifest;
+pub mod native;
+pub mod synth;
+
+#[cfg(feature = "pjrt")]
+pub mod literals;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use manifest::{ArtifactSpec, Bundle, IoSpec, ParamSpec};
+pub use native::NativeDevice;
 
-use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::tensor::{DType, Value};
+use crate::tensor::{DType, Tensor, Value};
 
-/// A compiled PJRT device context for one simulated GPU.
-pub struct Device {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    bundle: Bundle,
+/// The execution-backend abstraction: everything the coordinator needs
+/// from a device — validated execution of named chunk programs against
+/// the manifest ABI.
+pub trait Executor {
+    /// The bundle this executor was built from.
+    fn bundle(&self) -> &Bundle;
+
+    /// Backend/platform name for logs ("native", "cpu", ...).
+    fn platform(&self) -> String;
+
+    /// Execute artifact `name` with the full flattened argument list,
+    /// validating dtypes/shapes against the manifest.
+    fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>>;
+
+    /// Hot-path variant: the (large) parameter prefix is passed by
+    /// reference, skipping a full-model copy per call.
+    fn exec_parts(&self, name: &str, params: &[Tensor], rest: &[Value])
+        -> Result<Vec<Value>>;
+}
+
+/// A device for one simulated GPU, dispatching to the selected backend.
+///
+/// The native backend is the default; when the crate is built with the
+/// `pjrt` feature, setting `LASP_BACKEND=pjrt` routes execution through
+/// the compiled PJRT artifacts instead.
+pub enum Device {
+    Native(NativeDevice),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtDevice),
 }
 
 impl Device {
-    /// Create a CPU PJRT client and compile the named artifacts (or all
-    /// artifacts in the bundle when `names` is empty).
+    /// Build a device for `bundle`, restricted to the named artifacts
+    /// (or all artifacts in the bundle when `names` is empty).
+    ///
+    /// `LASP_BACKEND` selects the backend explicitly; a request that
+    /// cannot be honored is an error, never a silent fallback.
     pub fn new(bundle: &Bundle, names: &[&str]) -> Result<Device> {
-        let client = xla::PjRtClient::cpu()?;
-        let mut exes = HashMap::new();
-        let wanted: Vec<String> = if names.is_empty() {
-            bundle.artifacts.keys().cloned().collect()
-        } else {
-            names.iter().map(|s| s.to_string()).collect()
-        };
-        for name in wanted {
-            let spec = bundle
-                .artifacts
-                .get(&name)
-                .with_context(|| format!("artifact {name} not in manifest"))?;
-            let path = bundle.dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("loading HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            exes.insert(name, exe);
+        match std::env::var("LASP_BACKEND").as_deref() {
+            Ok("pjrt") => {
+                #[cfg(feature = "pjrt")]
+                return Ok(Device::Pjrt(pjrt::PjrtDevice::new(bundle, names)?));
+                #[cfg(not(feature = "pjrt"))]
+                anyhow::bail!(
+                    "LASP_BACKEND=pjrt but this build has no PJRT support \
+                     (rebuild with --features pjrt and the vendored xla crate)"
+                );
+            }
+            Ok("native") | Err(_) => {}
+            Ok(other) => anyhow::bail!(
+                "unknown LASP_BACKEND {other:?} (expected \"native\" or \"pjrt\")"
+            ),
         }
-        Ok(Device { client, exes, bundle: bundle.clone() })
+        Ok(Device::Native(NativeDevice::new(bundle, names)?))
     }
 
     pub fn bundle(&self) -> &Bundle {
-        &self.bundle
+        match self {
+            Device::Native(d) => d.bundle(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(d) => d.bundle(),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match self {
+            Device::Native(d) => d.platform(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(d) => d.platform(),
+        }
     }
 
-    /// Hot-path variant: the (large) parameter prefix is passed by
-    /// reference and converted straight to literals, skipping the
-    /// intermediate `Value` clone of every weight tensor (§Perf: saves
-    /// two full-model memcpys per train step per worker).
+    pub fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        match self {
+            Device::Native(d) => d.exec(name, args),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(d) => d.exec(name, args),
+        }
+    }
+
     pub fn exec_parts(
         &self,
         name: &str,
-        params: &[crate::tensor::Tensor],
+        params: &[Tensor],
         rest: &[Value],
     ) -> Result<Vec<Value>> {
-        let spec = self
-            .bundle
-            .artifacts
-            .get(name)
-            .with_context(|| format!("artifact {name} not compiled on this device"))?;
-        anyhow::ensure!(
-            params.len() + rest.len() == spec.inputs.len(),
-            "{name}: got {}+{} args, manifest expects {}",
-            params.len(),
-            rest.len(),
-            spec.inputs.len()
-        );
-        let mut lits = Vec::with_capacity(spec.inputs.len());
-        for p in params {
-            lits.push(literals::f32_literal(p)?);
+        match self {
+            Device::Native(d) => d.exec_parts(name, params, rest),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(d) => d.exec_parts(name, params, rest),
         }
-        for (arg, ispec) in rest.iter().zip(&spec.inputs[params.len()..]) {
-            anyhow::ensure!(
-                arg.shape() == &ispec.shape[..] && arg.dtype() == ispec.dtype,
-                "{name}: arg {:?}/{:?} vs manifest {:?}/{:?}",
-                arg.shape(), arg.dtype(), ispec.shape, ispec.dtype
-            );
-            lits.push(literals::to_literal(arg)?);
-        }
-        self.run(name, spec, &lits)
+    }
+}
+
+impl Executor for Device {
+    fn bundle(&self) -> &Bundle {
+        Device::bundle(self)
     }
 
-    /// Execute artifact `name` with `args`, validating dtypes/shapes
-    /// against the manifest and decoding the tuple of outputs.
-    pub fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
-        let spec = self
-            .bundle
-            .artifacts
-            .get(name)
-            .with_context(|| format!("artifact {name} not compiled on this device"))?;
-        anyhow::ensure!(
-            args.len() == spec.inputs.len(),
-            "{name}: got {} args, manifest expects {}",
-            args.len(),
-            spec.inputs.len()
-        );
-        let mut lits = Vec::with_capacity(args.len());
-        for (i, (arg, ispec)) in args.iter().zip(&spec.inputs).enumerate() {
-            anyhow::ensure!(
-                arg.shape() == &ispec.shape[..] && arg.dtype() == ispec.dtype,
-                "{name} arg {i}: got {:?}/{:?}, expect {:?}/{:?}",
-                arg.shape(),
-                arg.dtype(),
-                ispec.shape,
-                ispec.dtype
-            );
-            lits.push(literals::to_literal(arg)?);
-        }
-        let spec = self.bundle.artifacts.get(name).unwrap();
-        self.run(name, spec, &lits)
+    fn platform(&self) -> String {
+        Device::platform(self)
     }
 
-    fn run(&self, name: &str, spec: &ArtifactSpec, lits: &[xla::Literal])
-           -> Result<Vec<Value>> {
-        let exe = self.exes.get(name).unwrap();
-        let result = exe.execute::<xla::Literal>(lits)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(
-            parts.len() == spec.outputs.len(),
-            "{name}: {} outputs vs manifest {}",
-            parts.len(),
-            spec.outputs.len()
-        );
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, ospec)| literals::from_literal(&lit, ospec))
-            .collect()
+    fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        Device::exec(self, name, args)
+    }
+
+    fn exec_parts(&self, name: &str, params: &[Tensor], rest: &[Value])
+        -> Result<Vec<Value>> {
+        Device::exec_parts(self, name, params, rest)
+    }
+}
+
+impl Executor for NativeDevice {
+    fn bundle(&self) -> &Bundle {
+        NativeDevice::bundle(self)
+    }
+
+    fn platform(&self) -> String {
+        NativeDevice::platform(self)
+    }
+
+    fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        NativeDevice::exec(self, name, args)
+    }
+
+    fn exec_parts(&self, name: &str, params: &[Tensor], rest: &[Value])
+        -> Result<Vec<Value>> {
+        NativeDevice::exec_parts(self, name, params, rest)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Executor for pjrt::PjrtDevice {
+    fn bundle(&self) -> &Bundle {
+        pjrt::PjrtDevice::bundle(self)
+    }
+
+    fn platform(&self) -> String {
+        pjrt::PjrtDevice::platform(self)
+    }
+
+    fn exec(&self, name: &str, args: &[Value]) -> Result<Vec<Value>> {
+        pjrt::PjrtDevice::exec(self, name, args)
+    }
+
+    fn exec_parts(&self, name: &str, params: &[Tensor], rest: &[Value])
+        -> Result<Vec<Value>> {
+        pjrt::PjrtDevice::exec_parts(self, name, params, rest)
     }
 }
 
@@ -165,9 +201,21 @@ pub fn artifact_root() -> std::path::PathBuf {
 }
 
 /// Load a bundle by config name + chunk length, e.g. `("tiny", 32)`.
+///
+/// An on-disk `manifest.json` (from `make artifacts`) takes precedence;
+/// otherwise the bundle is synthesized in memory for the built-in
+/// configs, which is all the native backend needs.
 pub fn load_bundle(config: &str, chunk: usize) -> Result<Bundle> {
     let dir = artifact_root().join(format!("{config}_c{chunk}"));
-    Bundle::load(&dir)
+    if dir.join("manifest.json").exists() {
+        return Bundle::load(&dir);
+    }
+    synth::synthesize(config, chunk).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown config {config:?}: no artifacts in {dir:?} and not a \
+             built-in config (tiny, tiny_lt, small, small_lt, e2e)"
+        )
+    })
 }
 
 /// Sanity helper used across tests: all-zeros KV state stack.
@@ -185,16 +233,8 @@ mod tests {
     use super::*;
     use crate::tensor::{IntTensor, Tensor};
 
-    fn have_artifacts() -> bool {
-        artifact_root().join("tiny_c32/manifest.json").exists()
-    }
-
     #[test]
     fn bundle_loads_manifest() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
         let b = load_bundle("tiny", 32).unwrap();
         assert_eq!(b.config.name, "tiny");
         assert_eq!(b.chunk_len, 32);
@@ -205,10 +245,12 @@ mod tests {
     }
 
     #[test]
+    fn unknown_config_is_an_error() {
+        assert!(load_bundle("nonexistent_config", 32).is_err());
+    }
+
+    #[test]
     fn device_executes_chunk_fwd() {
-        if !have_artifacts() {
-            return;
-        }
         let b = load_bundle("tiny", 32).unwrap();
         let dev = Device::new(&b, &["chunk_fwd"]).unwrap();
         let params = crate::model::ParamStore::init(&b, 0);
@@ -228,14 +270,31 @@ mod tests {
 
     #[test]
     fn exec_validates_arity_and_shapes() {
-        if !have_artifacts() {
-            return;
-        }
         let b = load_bundle("tiny", 32).unwrap();
         let dev = Device::new(&b, &["chunk_fwd"]).unwrap();
         // wrong arity
         assert!(dev.exec("chunk_fwd", &[Tensor::zeros(&[1]).into()]).is_err());
         // unknown artifact
         assert!(dev.exec("nope", &[]).is_err());
+        // artifact in the bundle but not requested at construction
+        assert!(dev.exec("chunk_logits", &[]).is_err());
+        // out-of-range token ids are an argument error, not a panic
+        let params = crate::model::ParamStore::init(&b, 0);
+        let c = b.chunk_len;
+        let rest: Vec<Value> = vec![
+            IntTensor::new(vec![c], vec![b.config.vocab as i32; c]).into(),
+            IntTensor::new(vec![c], vec![0; c]).into(),
+            zero_kv(&b).into(),
+        ];
+        assert!(dev.exec_parts("chunk_fwd", params.tensors(), &rest).is_err());
+    }
+
+    #[test]
+    fn executor_trait_object_dispatches() {
+        let b = load_bundle("tiny", 16).unwrap();
+        let dev = Device::new(&b, &[]).unwrap();
+        let ex: &dyn Executor = &dev;
+        assert_eq!(ex.bundle().chunk_len, 16);
+        assert_eq!(ex.platform(), "native");
     }
 }

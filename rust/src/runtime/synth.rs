@@ -1,0 +1,265 @@
+//! In-memory bundle synthesis: the Rust twin of `python/compile/configs.py`
+//! + the manifest block of `python/compile/aot.py`.
+//!
+//! The native backend executes the chunk programs directly, so it needs a
+//! `Bundle` (parameter ABI, artifact signatures, state shapes) but no HLO
+//! files. For the named configs below, `runtime::load_bundle` synthesizes
+//! that bundle here whenever no `manifest.json` exists on disk — which is
+//! what lets the whole test suite, the benches and the examples run with
+//! zero external artifacts.
+//!
+//! The tables must stay byte-for-byte consistent with the Python side:
+//! the parameter *order* is the call ABI shared by `model::ParamStore`,
+//! the native executor and (when enabled) the PJRT executables.
+
+use std::collections::BTreeMap;
+
+use super::manifest::{ArtifactSpec, Bundle, IoSpec, ModelConfig, ParamSpec};
+use crate::tensor::DType;
+
+/// Architecture hyper-parameters of one built-in config
+/// (mirrors `configs.ModelConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct BuiltinConfig {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub linear_transformer: bool,
+}
+
+/// The CPU-feasible members of the TNL family (`configs.CONFIGS`).
+pub const BUILTIN_CONFIGS: &[BuiltinConfig] = &[
+    BuiltinConfig { name: "tiny", vocab: 256, d_model: 64, n_layers: 2,
+                    n_heads: 2, ffn_dim: 128, linear_transformer: false },
+    BuiltinConfig { name: "tiny_lt", vocab: 256, d_model: 64, n_layers: 2,
+                    n_heads: 2, ffn_dim: 128, linear_transformer: true },
+    BuiltinConfig { name: "small", vocab: 2048, d_model: 256, n_layers: 4,
+                    n_heads: 4, ffn_dim: 512, linear_transformer: false },
+    BuiltinConfig { name: "small_lt", vocab: 2048, d_model: 256, n_layers: 4,
+                    n_heads: 4, ffn_dim: 512, linear_transformer: true },
+    BuiltinConfig { name: "e2e", vocab: 16384, d_model: 768, n_layers: 12,
+                    n_heads: 12, ffn_dim: 2048, linear_transformer: false },
+];
+
+impl BuiltinConfig {
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Per-head decay rates: the RetNet/TNL schedule `1 - 2^{-5-h}`,
+    /// pinned to 1 for the classical Linear-Transformer variant.
+    pub fn lam(&self) -> Vec<f32> {
+        if self.linear_transformer {
+            return vec![1.0; self.n_heads];
+        }
+        (0..self.n_heads)
+            .map(|h| (1.0 - (2.0f64).powf(-(5.0 + h as f64))) as f32)
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (d, f, l, v) = (self.d_model, self.ffn_dim, self.n_layers, self.vocab);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        l * per_layer + v * d + d
+    }
+
+    /// Ordered parameter table (`model.param_specs`): the ABI between the
+    /// parameter store and every executor.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let (d, f, v) = (self.d_model, self.ffn_dim, self.vocab);
+        let std = 0.02f32;
+        let out_std = std / (2.0 * self.n_layers as f32).sqrt();
+        let mut specs = vec![
+            ParamSpec { name: "embed".into(), shape: vec![v, d],
+                        init: "normal".into(), std },
+            ParamSpec { name: "final_norm".into(), shape: vec![d],
+                        init: "ones".into(), std: 0.0 },
+        ];
+        for l in 0..self.n_layers {
+            let p = format!("layer{l:02}.");
+            let norm = |n: &str| ParamSpec {
+                name: format!("{p}{n}"), shape: vec![d],
+                init: "ones".into(), std: 0.0,
+            };
+            let mat = |n: &str, shape: Vec<usize>, s: f32| ParamSpec {
+                name: format!("{p}{n}"), shape, init: "normal".into(), std: s,
+            };
+            specs.push(norm("attn_norm"));
+            specs.push(mat("wq", vec![d, d], std));
+            specs.push(mat("wk", vec![d, d], std));
+            specs.push(mat("wv", vec![d, d], std));
+            specs.push(mat("wo", vec![d, d], out_std));
+            specs.push(norm("ffn_norm"));
+            specs.push(mat("w1", vec![d, f], std));
+            specs.push(mat("w3", vec![d, f], std));
+            specs.push(mat("w2", vec![f, d], out_std));
+        }
+        specs
+    }
+}
+
+fn f32_spec(shape: Vec<usize>) -> IoSpec {
+    IoSpec { shape, dtype: DType::F32 }
+}
+
+fn i32_spec(shape: Vec<usize>) -> IoSpec {
+    IoSpec { shape, dtype: DType::I32 }
+}
+
+/// Synthesize the bundle `aot.py` would have written for `(name, chunk)`,
+/// or `None` for an unknown config name.
+pub fn synthesize(name: &str, chunk: usize) -> Option<Bundle> {
+    let cfg = BUILTIN_CONFIGS.iter().find(|c| c.name == name)?;
+    assert!(chunk > 0, "chunk length must be positive");
+    let (l, h, dh) = (cfg.n_layers, cfg.n_heads, cfg.head_dim());
+    let (d, f, v, c) = (cfg.d_model, cfg.ffn_dim, cfg.vocab, chunk);
+
+    let params = cfg.param_specs();
+    let n_params = params.len();
+    let kv_shape = vec![l, h, dh, dh];
+    let param_inputs: Vec<IoSpec> =
+        params.iter().map(|p| f32_spec(p.shape.clone())).collect();
+
+    let fwd_inputs = |_: ()| -> Vec<IoSpec> {
+        let mut inp = param_inputs.clone();
+        inp.push(i32_spec(vec![c]));          // tokens
+        inp.push(i32_spec(vec![c]));          // labels
+        inp.push(f32_spec(kv_shape.clone())); // kv_in
+        inp
+    };
+
+    let mut artifacts: BTreeMap<String, ArtifactSpec> = BTreeMap::new();
+
+    let fwd_spec = |file: &str| ArtifactSpec {
+        file: file.to_string(),
+        inputs: fwd_inputs(()),
+        outputs: vec![f32_spec(vec![]), f32_spec(kv_shape.clone())],
+        n_params,
+    };
+    let bwd_spec = |file: &str| {
+        let mut inputs = fwd_inputs(());
+        inputs.push(f32_spec(kv_shape.clone())); // dkv_out
+        inputs.push(f32_spec(vec![]));           // loss_scale
+        let mut outputs: Vec<IoSpec> =
+            params.iter().map(|p| f32_spec(p.shape.clone())).collect();
+        outputs.push(f32_spec(kv_shape.clone())); // dkv_in
+        outputs.push(f32_spec(vec![]));           // loss
+        ArtifactSpec { file: file.to_string(), inputs, outputs, n_params }
+    };
+
+    artifacts.insert("chunk_fwd".into(), fwd_spec("chunk_fwd.hlo.txt"));
+    artifacts.insert("chunk_bwd".into(), bwd_spec("chunk_bwd.hlo.txt"));
+    // The 100M e2e bundle skips the Table-5 ablation twins (as aot.py does).
+    if name != "e2e" {
+        artifacts.insert("chunk_fwd_unfused".into(),
+                         fwd_spec("chunk_fwd_unfused.hlo.txt"));
+        artifacts.insert("chunk_bwd_unfused".into(),
+                         bwd_spec("chunk_bwd_unfused.hlo.txt"));
+    }
+
+    let mut logits_inputs = param_inputs.clone();
+    logits_inputs.push(i32_spec(vec![c]));
+    logits_inputs.push(f32_spec(kv_shape.clone()));
+    artifacts.insert("chunk_logits".into(), ArtifactSpec {
+        file: "chunk_logits.hlo.txt".into(),
+        inputs: logits_inputs,
+        outputs: vec![f32_spec(vec![c, v]), f32_spec(kv_shape.clone())],
+        n_params,
+    });
+
+    let hcd = vec![h, c, dh];
+    artifacts.insert("ring_block".into(), ArtifactSpec {
+        file: "ring_block.hlo.txt".into(),
+        inputs: vec![
+            f32_spec(hcd.clone()), f32_spec(hcd.clone()), f32_spec(hcd.clone()),
+            f32_spec(hcd.clone()), f32_spec(vec![]),
+        ],
+        outputs: vec![f32_spec(hcd)],
+        n_params: 0,
+    });
+
+    // FLOP estimate per chunk forward — same closed form as aot.py.
+    let (cf, df, ff, vf, lf, hf, dhf) =
+        (c as f64, d as f64, f as f64, v as f64, l as f64, h as f64, dh as f64);
+    let flops_fwd = cf * (4.0 * df * df + 3.0 * df * ff) * 2.0 * lf
+        + lf * hf * (cf * cf * dhf * 4.0 + cf * dhf * dhf * 6.0)
+        + cf * df * vf * 2.0;
+
+    Some(Bundle {
+        dir: super::artifact_root().join(format!("{name}_c{chunk}")),
+        config: ModelConfig {
+            name: cfg.name.to_string(),
+            vocab: v,
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            head_dim: dh,
+            ffn_dim: f,
+            lam: cfg.lam(),
+            linear_transformer: cfg.linear_transformer,
+            param_count: cfg.param_count(),
+        },
+        chunk_len: c,
+        kv_state_shape: kv_shape,
+        flops_fwd_per_chunk: flops_fwd,
+        params,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_config_is_none() {
+        assert!(synthesize("nope", 32).is_none());
+    }
+
+    #[test]
+    fn synthesized_bundle_is_consistent() {
+        let b = synthesize("tiny", 32).unwrap();
+        // param table sums to the declared count
+        assert_eq!(b.param_count(), b.config.param_count);
+        // chunk_fwd signature: params + tokens + labels + kv
+        let f = &b.artifacts["chunk_fwd"];
+        assert_eq!(f.inputs.len(), f.n_params + 3);
+        assert_eq!(f.outputs.len(), 2);
+        // kv shape is (L, H, dh, dh)
+        assert_eq!(
+            b.kv_state_shape,
+            vec![b.config.n_layers, b.config.n_heads, b.config.head_dim,
+                 b.config.head_dim]
+        );
+        // chunk_bwd returns dparams + dkv + loss
+        let bwd = &b.artifacts["chunk_bwd"];
+        assert_eq!(bwd.outputs.len(), bwd.n_params + 2);
+        // ablation twins present for the non-e2e configs
+        assert!(b.artifacts.contains_key("chunk_fwd_unfused"));
+        assert!(!synthesize("e2e", 128).unwrap()
+            .artifacts.contains_key("chunk_fwd_unfused"));
+    }
+
+    #[test]
+    fn lam_schedule_matches_paper() {
+        let tnl = synthesize("tiny", 32).unwrap();
+        assert!((tnl.config.lam[0] - (1.0 - 1.0 / 32.0)).abs() < 1e-6);
+        assert!((tnl.config.lam[1] - (1.0 - 1.0 / 64.0)).abs() < 1e-6);
+        let lt = synthesize("tiny_lt", 32).unwrap();
+        assert!(lt.config.lam.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn every_builtin_synthesizes() {
+        for c in BUILTIN_CONFIGS {
+            let b = synthesize(c.name, 16).unwrap();
+            assert_eq!(b.param_count(), b.config.param_count, "{}", c.name);
+            assert!(b.artifacts.contains_key("chunk_logits"));
+            assert!(b.artifacts.contains_key("ring_block"));
+        }
+    }
+}

@@ -3,9 +3,8 @@
 //! Set `LASP_LOG=debug|info|warn|error` (default `info`).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
 #[repr(u8)]
@@ -17,7 +16,7 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 fn level() -> u8 {
     let cur = LEVEL.load(Ordering::Relaxed);
@@ -43,7 +42,7 @@ pub fn log(lv: Level, args: std::fmt::Arguments<'_>) {
     if (lv as u8) < level() {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let tag = match lv {
         Level::Debug => "DBG",
         Level::Info => "INF",

@@ -2,19 +2,12 @@
 //! through the *real training path* (not just the schedule driver).
 
 use lasp::coordinator::{train, TrainConfig};
-use lasp::runtime::{artifact_root, load_bundle};
-
-fn have_artifacts() -> bool {
-    artifact_root().join("tiny_c32/manifest.json").exists()
-}
+use lasp::runtime::load_bundle;
 
 /// LASP's per-step ring traffic is exactly 2·(T-1) KV-state messages
 /// (KV forward + dKV backward at every chunk boundary), independent of C.
 #[test]
 fn lasp_ring_bytes_closed_form() {
-    if !have_artifacts() {
-        return;
-    }
     for (chunk, sp) in [(32usize, 2usize), (32, 4), (64, 2)] {
         let bundle = load_bundle("tiny", chunk).unwrap();
         let state_bytes = (bundle.kv_state_elems() * 4) as u64;
@@ -35,9 +28,6 @@ fn lasp_ring_bytes_closed_form() {
 /// manifest-level identity d²/h · L == kv_state_elems (dk = dv = d/h).
 #[test]
 fn state_size_matches_table1_formula() {
-    if !have_artifacts() {
-        return;
-    }
     let b = load_bundle("tiny", 32).unwrap();
     let d = b.config.d_model;
     let h = b.config.n_heads;
@@ -49,9 +39,6 @@ fn state_size_matches_table1_formula() {
 /// (each group runs its own ring) but never with sequence length.
 #[test]
 fn hybrid_ring_traffic_scales_with_groups() {
-    if !have_artifacts() {
-        return;
-    }
     let mut one = TrainConfig::new("tiny", 32, 2);
     one.steps = 2;
     one.warmup = 10;

@@ -3,12 +3,6 @@
 
 use lasp::analytic::DdpBackend;
 use lasp::coordinator::{train, TrainConfig};
-use lasp::runtime::artifact_root;
-
-fn have_artifacts() -> bool {
-    artifact_root().join("tiny_c32/manifest.json").exists()
-        && artifact_root().join("tiny_c64/manifest.json").exists()
-}
 
 fn run(chunk: usize, sp: usize, backend: DdpBackend) -> Vec<f32> {
     let mut cfg = TrainConfig::new("tiny", chunk, sp);
@@ -21,10 +15,6 @@ fn run(chunk: usize, sp: usize, backend: DdpBackend) -> Vec<f32> {
 
 #[test]
 fn table2_parity_all_backends() {
-    if !have_artifacts() {
-        eprintln!("skipping: make artifacts");
-        return;
-    }
     // N = 64 for every cell: T=1 (no SP) vs T=2 (LASP).
     for backend in DdpBackend::ALL {
         let base = run(64, 1, backend);
@@ -41,9 +31,6 @@ fn table2_parity_all_backends() {
 
 #[test]
 fn different_seeds_actually_diverge() {
-    if !have_artifacts() {
-        return;
-    }
     // guard against the parity test passing vacuously
     let a = run(32, 2, DdpBackend::Ddp);
     let mut cfg = TrainConfig::new("tiny", 32, 2);

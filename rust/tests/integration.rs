@@ -1,4 +1,6 @@
-//! End-to-end integration: the LASP trainer over real PJRT executables.
+//! End-to-end integration: the LASP trainer over real chunk executables
+//! (the native backend by default; PJRT when built with `--features
+//! pjrt` and `LASP_BACKEND=pjrt`).
 //!
 //! The paper's Table-2 claim at small scale: training with LASP (T>1)
 //! produces the same loss trajectory as training without it (T=1), for
@@ -7,12 +9,6 @@
 use lasp::analytic::DdpBackend;
 use lasp::coordinator::{train, TrainConfig};
 use lasp::model::ParamStore;
-use lasp::runtime::artifact_root;
-
-fn have_artifacts() -> bool {
-    artifact_root().join("tiny_c32/manifest.json").exists()
-        && artifact_root().join("tiny_c128/manifest.json").exists()
-}
 
 fn cfg(chunk: usize, sp: usize, steps: usize) -> TrainConfig {
     let mut c = TrainConfig::new("tiny", chunk, sp);
@@ -24,10 +20,6 @@ fn cfg(chunk: usize, sp: usize, steps: usize) -> TrainConfig {
 
 #[test]
 fn lasp_t4_matches_single_device() {
-    if !have_artifacts() {
-        eprintln!("skipping: make artifacts");
-        return;
-    }
     let base = train(&cfg(128, 1, 5)).unwrap(); // T=1: no SP
     let lasp = train(&cfg(32, 4, 5)).unwrap(); // T=4 over the ring
     for (a, b) in base.losses.iter().zip(&lasp.losses) {
@@ -46,9 +38,6 @@ fn lasp_t4_matches_single_device() {
 
 #[test]
 fn lasp_t2_matches_t4() {
-    if !have_artifacts() {
-        return;
-    }
     let t2 = train(&cfg(64, 2, 4)).unwrap();
     let t4 = train(&cfg(32, 4, 4)).unwrap();
     for (a, b) in t2.losses.iter().zip(&t4.losses) {
@@ -58,9 +47,6 @@ fn lasp_t2_matches_t4() {
 
 #[test]
 fn loss_decreases_under_training() {
-    if !have_artifacts() {
-        return;
-    }
     let r = train(&cfg(32, 4, 12)).unwrap();
     let first = r.losses[0];
     let last = *r.losses.last().unwrap();
@@ -73,9 +59,6 @@ fn loss_decreases_under_training() {
 
 #[test]
 fn zero_backends_match_ddp() {
-    if !have_artifacts() {
-        return;
-    }
     let mut base = cfg(32, 4, 4);
     base.backend = DdpBackend::Ddp;
     let ddp = train(&base).unwrap();
@@ -94,9 +77,6 @@ fn zero_backends_match_ddp() {
 
 #[test]
 fn hybrid_data_sequence_parallelism() {
-    if !have_artifacts() {
-        return;
-    }
     // W=4 split as T=2 × G=2: two SP groups on different batches.
     let mut c = cfg(64, 2, 4);
     c.data_groups = 2;
@@ -109,9 +89,6 @@ fn hybrid_data_sequence_parallelism() {
 
 #[test]
 fn unfused_kernels_match_fused() {
-    if !have_artifacts() {
-        return;
-    }
     let fused = train(&cfg(32, 2, 3)).unwrap();
     let mut c = cfg(32, 2, 3);
     c.fused = false;
@@ -123,9 +100,6 @@ fn unfused_kernels_match_fused() {
 
 #[test]
 fn kv_cache_ablation_same_numerics_more_work() {
-    if !have_artifacts() {
-        return;
-    }
     let cached = train(&cfg(32, 4, 3)).unwrap();
     let mut c = cfg(32, 4, 3);
     c.kv_cache = false;
@@ -142,9 +116,6 @@ fn kv_cache_ablation_same_numerics_more_work() {
 
 #[test]
 fn ring_traffic_is_sequence_length_independent() {
-    if !have_artifacts() {
-        return;
-    }
     // Same T, same steps, different chunk length (sequence 64 vs 256):
     // LASP's P2P bytes must be identical (the paper's Table-1 property).
     let short = train(&cfg(32, 2, 2)).unwrap();
@@ -154,9 +125,6 @@ fn ring_traffic_is_sequence_length_independent() {
 
 #[test]
 fn linear_transformer_variant_trains() {
-    if !have_artifacts() {
-        return;
-    }
     // lam = 1 (Katharopoulos et al.) — the paper's second model family.
     let mut c = TrainConfig::new("tiny_lt", 32, 4);
     c.steps = 3;
