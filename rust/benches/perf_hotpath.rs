@@ -1,16 +1,28 @@
-//! §Perf micro-benchmarks of the L3 hot path: chunk-program latency,
-//! ring-message serialization, ring hop, gradient all-reduce.
+//! §Perf micro-benchmarks of the L3 hot path: chunk-program latency
+//! (GEMM engine vs the pre-refactor scalar reference), ring-message
+//! serialization, ring hop, gradient all-reduce.
 //!
 //! Run: cargo bench --bench perf_hotpath
+//!
+//! Besides the rendered table, writes `BENCH_perf.json` at the repo root
+//! (per-row mean/p50/p95 in seconds plus the fwd/bwd speedups) so the
+//! perf trajectory is machine-readable across PRs. The "pre-refactor"
+//! rows run `runtime::kernel::reference` — the scalar kernels and
+//! per-call parameter conversion the backend shipped before the kernel
+//! engine — so before and after come from one binary on one machine.
+
+use std::time::Instant;
 
 use lasp::comm::{CommWorld, Payload};
 use lasp::model::ParamStore;
+use lasp::runtime::kernel::reference;
 use lasp::runtime::{load_bundle, zero_kv, Device};
 use lasp::tensor::{IntTensor, Tensor, Value};
-use lasp::util::stats::{bench, Table};
+use lasp::util::stats::{bench, Summary, Table};
 
 fn main() {
     let mut tab = Table::new(&["hot path", "mean", "p50", "p95"]);
+    let mut json_rows: Vec<(String, Summary)> = Vec::new();
     let fmt = |s: f64| {
         if s < 1e-3 {
             format!("{:.1} us", s * 1e6)
@@ -18,36 +30,101 @@ fn main() {
             format!("{:.2} ms", s * 1e3)
         }
     };
-    let mut row = |name: &str, s: lasp::util::stats::Summary| {
+    let mut row = |tab: &mut Table,
+                   json_rows: &mut Vec<(String, Summary)>,
+                   name: &str,
+                   s: Summary| {
         tab.row(&[name.into(), fmt(s.mean), fmt(s.p50), fmt(s.p95)]);
+        json_rows.push((name.to_string(), s));
     };
 
-    // 1) chunk_fwd / chunk_bwd executable latency (the per-step compute)
+    // 1) chunk_fwd / chunk_bwd latency (the per-step compute), tiny/C=32.
+    //    "pre-refactor scalar" rows are the old backend verbatim
+    //    (scalar kernels + per-call f64 conversion + forward recompute
+    //    in the backward); the engine rows are the trainer path
+    //    (versioned: cached parameters, §4.2 activation cache).
     let b = load_bundle("tiny", 32).unwrap();
     let dev = Device::new(&b, &["chunk_fwd", "chunk_bwd"]).unwrap();
     let params = ParamStore::init(&b, 0);
+    let v = params.version();
     let c = b.chunk_len;
-    let mut args: Vec<Value> =
-        params.tensors().iter().cloned().map(Value::F32).collect();
-    args.push(IntTensor::new(vec![c], vec![1; c]).into());
-    args.push(IntTensor::new(vec![c], vec![2; c]).into());
-    args.push(zero_kv(&b).into());
-    row("chunk_fwd exec (tiny/C=32)",
-        bench(3, 20, || { dev.exec("chunk_fwd", &args).unwrap(); }));
+    let tokens = vec![1i32; c];
+    let labels = vec![2i32; c];
+    let kv_in = zero_kv(&b);
+    let dkv_out = zero_kv(&b);
+    let loss_scale = 1.0 / c as f32;
+    let frest: Vec<Value> = vec![
+        IntTensor::new(vec![c], tokens.clone()).into(),
+        IntTensor::new(vec![c], labels.clone()).into(),
+        kv_in.clone().into(),
+    ];
+    let mut brest = frest.clone();
+    brest.push(dkv_out.clone().into());
+    brest.push(Tensor::scalar(loss_scale).into());
 
-    let mut bargs = args.clone();
-    bargs.push(zero_kv(&b).into());
-    bargs.push(Tensor::scalar(1.0 / c as f32).into());
-    row("chunk_bwd exec (tiny/C=32)",
-        bench(3, 20, || { dev.exec("chunk_bwd", &bargs).unwrap(); }));
+    let ref_fwd = bench(3, 30, || {
+        std::hint::black_box(reference::chunk_fwd(
+            &b,
+            params.tensors(),
+            &tokens,
+            &labels,
+            &kv_in,
+        ));
+    });
+    row(&mut tab, &mut json_rows, "chunk_fwd pre-refactor scalar (tiny/C=32)", ref_fwd.clone());
+
+    let eng_fwd = bench(3, 30, || {
+        dev.exec_versioned("chunk_fwd", params.tensors(), v, &frest).unwrap();
+    });
+    row(&mut tab, &mut json_rows, "chunk_fwd (tiny/C=32)", eng_fwd.clone());
+    dev.clear_acts_cache();
+
+    let ref_bwd = bench(2, 15, || {
+        std::hint::black_box(reference::chunk_bwd(
+            &b,
+            params.tensors(),
+            &tokens,
+            &labels,
+            &kv_in,
+            &dkv_out,
+            loss_scale,
+        ));
+    });
+    row(&mut tab, &mut json_rows, "chunk_bwd pre-refactor scalar (tiny/C=32)", ref_bwd.clone());
+
+    // cached-activation backward (the fused trainer path): retain a
+    // forward untimed, then time only the paired backward.
+    let hits0 = dev.acts_cache_hits();
+    let (warm, iters) = (3usize, 15usize);
+    let mut samples = Vec::with_capacity(iters);
+    for i in 0..warm + iters {
+        dev.exec_versioned("chunk_fwd", params.tensors(), v, &frest).unwrap();
+        let t = Instant::now();
+        dev.exec_versioned("chunk_bwd", params.tensors(), v, &brest).unwrap();
+        if i >= warm {
+            samples.push(t.elapsed().as_secs_f64());
+        }
+    }
+    assert_eq!(
+        dev.acts_cache_hits() - hits0,
+        (warm + iters) as u64,
+        "cached-acts bench did not take the cached path"
+    );
+    let eng_bwd = Summary::of(&samples);
+    row(&mut tab, &mut json_rows, "chunk_bwd cached-acts (tiny/C=32)", eng_bwd.clone());
+
+    let eng_bwd_rec = bench(2, 15, || {
+        dev.exec_versioned("chunk_bwd", params.tensors(), v, &brest).unwrap();
+    });
+    row(&mut tab, &mut json_rows, "chunk_bwd recompute (tiny/C=32)", eng_bwd_rec);
 
     // 2) ring-message serialization of a KV state (tensor -> payload)
     let kv = zero_kv(&b);
-    row("tensor->payload (KV state)",
-        bench(10, 200, || {
-            let p = Payload::F32(kv.data().to_vec());
-            std::hint::black_box(p.nbytes());
-        }));
+    let s = bench(10, 200, || {
+        let p = Payload::F32(kv.data().to_vec());
+        std::hint::black_box(p.nbytes());
+    });
+    row(&mut tab, &mut json_rows, "tensor->payload (KV state)", s);
 
     // 3) ring hop over the comm substrate (KV-state sized)
     let world = CommWorld::new(2);
@@ -60,8 +137,10 @@ fn main() {
             c1.recv(0, &shape);
         }
     });
-    row("ring hop send (KV state)",
-        bench(0, 1000, || { c0.send(1, &kv2); }));
+    let s = bench(0, 1000, || {
+        c0.send(1, &kv2);
+    });
+    row(&mut tab, &mut json_rows, "ring hop send (KV state)", s);
     h.join().unwrap();
 
     // 4) gradient all-reduce (tiny model, W=4)
@@ -85,9 +164,38 @@ fn main() {
         .collect();
     for hd in handles {
         if let Some(s) = hd.join().unwrap() {
-            row(&format!("all_reduce {} f32 (W=4)", n), s);
+            row(&mut tab, &mut json_rows, &format!("all_reduce {} f32 (W=4)", n), s);
         }
     }
 
     println!("{}", tab.render());
+    let fwd_speedup = ref_fwd.mean / eng_fwd.mean;
+    let bwd_speedup = ref_bwd.mean / eng_bwd.mean;
+    println!("speedup vs pre-refactor  chunk_fwd {fwd_speedup:.2}x  chunk_bwd {bwd_speedup:.2}x");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
+    std::fs::write(path, render_json(&json_rows, fwd_speedup, bwd_speedup)).unwrap();
+    println!("wrote {path}");
+}
+
+/// Hand-rolled JSON (no serde in the offline vendor set). Seconds
+/// throughout; `{:e}` emits valid JSON number syntax.
+fn render_json(rows: &[(String, Summary)], fwd_speedup: f64, bwd_speedup: f64) -> String {
+    let mut s = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"rows\": [\n");
+    for (i, (name, sum)) in rows.iter().enumerate() {
+        s += &format!(
+            "    {{\"name\": \"{}\", \"n\": {}, \"mean\": {:e}, \"p50\": {:e}, \"p95\": {:e}}}{}\n",
+            name,
+            sum.n,
+            sum.mean,
+            sum.p50,
+            sum.p95,
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    s += &format!(
+        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}}\n}}\n",
+        fwd_speedup, bwd_speedup
+    );
+    s
 }

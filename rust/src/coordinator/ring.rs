@@ -8,9 +8,11 @@
 //!
 //! Backward: chunk `t` receives `dKV` from its successor (the cotangent
 //! of its `KV_out`), loads the cached `KV_{t-1}`, runs the chunk backward
-//! (which recomputes the forward *inside* the chunk — per-chunk activation
-//! recomputation — but never recomputes or re-communicates cross-chunk
-//! states), and sends its `dKV_in` to its predecessor.
+//! — on the fused path it consumes the activations the forward ring
+//! retained (paper §4.2, intermediate state caching); the unfused twin
+//! recomputes the forward inside the chunk instead. Neither recomputes
+//! or re-communicates cross-chunk states. It then sends its `dKV_in` to
+//! its predecessor.
 //!
 //! Ring neighbors are derived from `placement.sp_group(..)` — not from
 //! global `rank ± 1` — so the schedule stays correct for any group
@@ -107,7 +109,11 @@ pub fn forward_chunk(
         kv_in.clone().into(),
     ];
     let name = if fused { "chunk_fwd" } else { "chunk_fwd_unfused" };
-    let mut out = dev.exec_parts(name, params.tensors(), &rest)?;
+    // versioned call: the fused kernel retains its activations (§4.2)
+    // for the paired backward, and the backend reuses its cached f64
+    // parameter conversion across the whole step
+    let mut out =
+        dev.exec_versioned(name, params.tensors(), params.version(), &rest)?;
     let kv_out = out.remove(1).into_f32();
     let loss_sum = out.remove(0).as_f32().item();
 
@@ -167,7 +173,10 @@ pub fn backward_chunk(
         Tensor::scalar(loss_scale).into(),
     ];
     let name = if fused { "chunk_bwd" } else { "chunk_bwd_unfused" };
-    let mut out = dev.exec_parts(name, params.tensors(), &rest)?;
+    // versioned call: the fused backward consumes the activations the
+    // forward ring retained (freeing them), instead of recomputing
+    let mut out =
+        dev.exec_versioned(name, params.tensors(), params.version(), &rest)?;
 
     // outputs: dparams…, dkv_in, loss
     let loss_sum = out.pop().unwrap().as_f32().item();

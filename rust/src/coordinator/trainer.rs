@@ -8,6 +8,7 @@
 //! Metaseq stack, with OS threads standing in for GPUs.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -94,8 +95,12 @@ pub struct TrainResult {
 
 /// Run a training job; blocks until all workers finish.
 pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
-    let bundle = load_bundle(&cfg.config, cfg.chunk)
-        .with_context(|| format!("bundle {}_c{}", cfg.config, cfg.chunk))?;
+    // one shared bundle: workers (and their devices) take Arc clones
+    // instead of copying the whole parameter/artifact table per rank
+    let bundle = Arc::new(
+        load_bundle(&cfg.config, cfg.chunk)
+            .with_context(|| format!("bundle {}_c{}", cfg.config, cfg.chunk))?,
+    );
     let world = cfg.world();
     let placement = Placement::new(world, cfg.sp_size);
     let comm_world = CommWorld::new(world);
@@ -106,11 +111,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     let mut handles = Vec::new();
     for comm in comms {
         let cfg = cfg.clone();
-        let bundle = bundle.clone();
+        let bundle = Arc::clone(&bundle);
         let placement = placement.clone();
         let tx = tx.clone();
         handles.push(std::thread::spawn(move || -> Result<()> {
-            worker(&cfg, &bundle, &placement, comm, tx)
+            worker(&cfg, bundle, &placement, comm, tx)
         }));
     }
     drop(tx);
@@ -137,7 +142,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
 
 fn worker(
     cfg: &TrainConfig,
-    bundle: &Bundle,
+    bundle: Arc<Bundle>,
     placement: &Placement,
     comm: Communicator,
     tx: mpsc::Sender<(Vec<f32>, ParamStore, PhaseTimer, usize)>,
@@ -147,16 +152,18 @@ fn worker(
     let world_group = placement.world_group();
     let is_rank0 = rank == 0;
 
-    // Each thread compiles its own executables (PJRT objects are !Send).
+    // Each thread compiles its own executables (PJRT objects are !Send);
+    // the bundle itself is shared, not cloned.
     let names: Vec<&str> = if cfg.fused {
         vec!["chunk_fwd", "chunk_bwd"]
     } else {
         vec!["chunk_fwd_unfused", "chunk_bwd_unfused"]
     };
     let mut phases = PhaseTimer::default();
-    let dev = phases.time("compile", || Device::new(bundle, &names))?;
+    let dev =
+        phases.time("compile", || Device::from_arc(Arc::clone(&bundle), &names))?;
 
-    let mut params = ParamStore::init(bundle, cfg.seed);
+    let mut params = ParamStore::init(&bundle, cfg.seed);
     let mut optim =
         DistOptimizer::new(cfg.backend, &params, comm.world_size(), cfg.lr, cfg.warmup);
     let datagen = DataGen::new(cfg.seed, bundle.config.vocab);
@@ -207,6 +214,18 @@ fn worker(
         })?;
         debug_assert!((bwd.loss_sum - fwd.loss_sum).abs()
             <= 1e-3 * fwd.loss_sum.abs().max(1.0));
+
+        // §4.2 cache hygiene: on the fused path the backward consumed the
+        // activations the forward ring retained, so nothing may stay
+        // resident across steps; clearing covers forwards that never got
+        // their paired backward (and the unfused path, which retains
+        // nothing to begin with).
+        debug_assert_eq!(
+            dev.acts_cache_bytes(),
+            0,
+            "activation cache not drained by the backward ring"
+        );
+        dev.clear_acts_cache();
 
         // ---- gradient sync + optimizer (hybrid: sum over chunks ∧ groups) ---
         let mut grads = bwd.grads;

@@ -7,15 +7,28 @@
 //! experiment) see bit-identical starting points regardless of worker
 //! count or evaluation order.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::runtime::Bundle;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Globally unique version ids: every init and every mutable access
+/// draws a fresh one, so a version value identifies parameter *content*
+/// — equal versions imply byte-identical tensors (clones share the
+/// version until either side is mutated).
+static NEXT_VERSION: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_version() -> u64 {
+    NEXT_VERSION.fetch_add(1, Ordering::Relaxed)
+}
 
 /// The full parameter set of one model replica, in manifest order.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     tensors: Vec<Tensor>,
     names: Vec<String>,
+    version: u64,
 }
 
 impl ParamStore {
@@ -37,7 +50,17 @@ impl ParamStore {
             tensors.push(t);
             names.push(spec.name.clone());
         }
-        ParamStore { tensors, names }
+        ParamStore { tensors, names, version: fresh_version() }
+    }
+
+    /// Cache key for per-parameter-set work in the execution backends
+    /// (`Executor::exec_versioned`): bumped on every mutable access, so
+    /// the native backend's f64 conversion and activation cache can
+    /// trust it. The optimizer's update path goes through
+    /// [`tensors_mut`](ParamStore::tensors_mut), which is what makes
+    /// "once per step" the effective cache cadence.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// All-zeros gradients with matching shapes.
@@ -49,7 +72,10 @@ impl ParamStore {
         &self.tensors
     }
 
+    /// Mutable access conservatively invalidates the version key — the
+    /// caller may change any byte.
     pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        self.version = fresh_version();
         &mut self.tensors
     }
 
@@ -116,6 +142,28 @@ mod tests {
                 assert!(t.data().iter().all(|&x| x == 1.0), "{name}");
             }
         }
+    }
+
+    #[test]
+    fn version_tracks_mutation_and_survives_clone() {
+        let b = load_bundle("tiny", 8).unwrap();
+        let mut p = ParamStore::init(&b, 0);
+        let v0 = p.version();
+        let _ = p.tensors(); // read access keeps the key
+        assert_eq!(p.version(), v0);
+        // clones share content, hence the key — until one mutates
+        let mut q = p.clone();
+        assert_eq!(q.version(), v0);
+        q.tensors_mut()[0].data_mut()[0] += 1.0;
+        assert_ne!(q.version(), v0);
+        assert_eq!(p.version(), v0);
+        let _ = p.tensors_mut();
+        assert_ne!(p.version(), v0);
+        // distinct inits never collide, even with equal seeds
+        assert_ne!(
+            ParamStore::init(&b, 0).version(),
+            ParamStore::init(&b, 0).version()
+        );
     }
 
     #[test]

@@ -1,0 +1,471 @@
+//! GEMM-formulated LASP chunk attention.
+//!
+//! The old backend evaluated the right-product decomposition with
+//! per-(i, j) scalar dot products — O(C²·dh) branchy scalar work per
+//! head. Here every term is a blocked GEMM over precomputed decay
+//! tables:
+//!
+//!  * intra-chunk  — `[(Q Kᵀ) ⊙ Λ-mask] V` as a C×C score GEMM, a decay
+//!    mask sweep, and a C×dh product GEMM            (Eq. 7)
+//!  * inter-chunk  — one `diag(λ^{i+1}) Q · KV_in` GEMM      (Eq. 9)
+//!  * state update — `λ^C KV_in + (diag(λ^{C-1-p}) K)ᵀ V`, a rank-C
+//!    GEMM                                           (Eq. 10)
+//!
+//! and the backward mirrors it (Eqs. 14–22): the masked score cotangent
+//! `dS = (dO Vᵀ) ⊙ Λ-mask` drives dQ/dK, `Sᵀ dO` drives dV, and the
+//! inter-chunk/state terms are four more dh-sized GEMMs. Head columns
+//! are gathered into contiguous (C, dh) panels first, so every GEMM runs
+//! on unit-stride rows.
+//!
+//! `ring_block` (the Ring Attention baseline) gets the same treatment,
+//! with the per-pair `λ.powf(p + moff - r)` of the old backend replaced
+//! by a per-diagonal table indexed by the integer offset `p - r`.
+
+use super::gemm::{matmul_into, matmul_nt_into, matmul_tn_into};
+use super::workspace::Workspace;
+use super::Kernel;
+
+/// Gather head columns `[off, off+dh)` of a merged (c, d) buffer into a
+/// contiguous (c, dh) panel.
+fn gather_head(src: &[f64], dst: &mut [f64], c: usize, d: usize, off: usize, dh: usize) {
+    for i in 0..c {
+        dst[i * dh..(i + 1) * dh]
+            .copy_from_slice(&src[i * d + off..i * d + off + dh]);
+    }
+}
+
+/// Scatter-add a contiguous (c, dh) panel back into head columns of a
+/// merged (c, d) buffer.
+fn scatter_head_add(src: &[f64], dst: &mut [f64], c: usize, d: usize, off: usize, dh: usize) {
+    for i in 0..c {
+        let drow = &mut dst[i * d + off..i * d + off + dh];
+        for (slot, &x) in drow.iter_mut().zip(&src[i * dh..(i + 1) * dh]) {
+            *slot += x;
+        }
+    }
+}
+
+/// `dst[i] = scales[i] * src[i]` row-wise over a (c, dh) panel.
+fn scale_rows(dst: &mut [f64], src: &[f64], scales: &[f64], c: usize, dh: usize) {
+    for i in 0..c {
+        let s = scales[i];
+        let drow = &mut dst[i * dh..(i + 1) * dh];
+        for (slot, &x) in drow.iter_mut().zip(&src[i * dh..(i + 1) * dh]) {
+            *slot = s * x;
+        }
+    }
+}
+
+/// Row `p` scaled by `pw[c-1-p]` — the state-update decay schedule.
+fn scale_rows_rev(dst: &mut [f64], src: &[f64], pw: &[f64], c: usize, dh: usize) {
+    for p in 0..c {
+        let s = pw[c - 1 - p];
+        let drow = &mut dst[p * dh..(p + 1) * dh];
+        for (slot, &x) in drow.iter_mut().zip(&src[p * dh..(p + 1) * dh]) {
+            *slot = s * x;
+        }
+    }
+}
+
+/// In-place causal decay mask on a (c, c) score matrix:
+/// `s[i][j] *= λ^{i-j}` for `j ≤ i`, zero above the diagonal.
+fn apply_decay_mask(s: &mut [f64], pw: &[f64], c: usize) {
+    for i in 0..c {
+        let row = &mut s[i * c..(i + 1) * c];
+        for j in 0..=i {
+            row[j] *= pw[i - j];
+        }
+        for x in row[i + 1..].iter_mut() {
+            *x = 0.0;
+        }
+    }
+}
+
+impl Kernel {
+    /// One head of the LASP chunk forward, GEMM form. `q`, `k`, `v` are
+    /// merged (C, d); head `hh` occupies columns `[hh*dh, (hh+1)*dh)`.
+    /// `kv` is this head's (dk, dv) incoming state; `kv_out` arrives
+    /// zeroed and receives the outgoing state.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn attention_head(
+        &self,
+        hh: usize,
+        q: &[f64],
+        k: &[f64],
+        v: &[f64],
+        kv: &[f64],
+        o: &mut [f64],
+        kv_out: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let (c, d, dh) = (self.c, self.d, self.dh);
+        let off = hh * dh;
+        let pw = &self.pw[hh];
+
+        let mut qh = ws.take(c * dh);
+        let mut kh = ws.take(c * dh);
+        let mut vh = ws.take(c * dh);
+        gather_head(q, &mut qh, c, d, off, dh);
+        gather_head(k, &mut kh, c, d, off, dh);
+        gather_head(v, &mut vh, c, d, off, dh);
+
+        // intra-chunk: S = (Qh Khᵀ) ⊙ Λ-mask, Oh = S Vh          (Eq. 7)
+        let mut s = ws.take(c * c);
+        matmul_nt_into(&mut s, &qh, &kh, c, dh, c, false);
+        apply_decay_mask(&mut s, pw, c);
+        let mut oh = ws.take(c * dh);
+        matmul_into(&mut oh, &s, &vh, c, c, dh, false);
+
+        // inter-chunk: Oh += diag(λ^{i+1}) Qh · KV_in            (Eq. 9)
+        let mut qs = ws.take(c * dh);
+        scale_rows(&mut qs, &qh, &pw[1..], c, dh);
+        matmul_into(&mut oh, &qs, kv, c, dh, dh, true);
+        scatter_head_add(&oh, o, c, d, off, dh);
+
+        // state update: KV_out = λ^C KV_in + (diag(λ^{C-1-p}) Kh)ᵀ Vh
+        // — a rank-C GEMM                                        (Eq. 10)
+        for (slot, &x) in kv_out.iter_mut().zip(kv) {
+            *slot = pw[c] * x;
+        }
+        let mut kd = ws.take(c * dh);
+        scale_rows_rev(&mut kd, &kh, pw, c, dh);
+        matmul_tn_into(kv_out, &kd, &vh, c, dh, dh, true);
+
+        ws.put(qh);
+        ws.put(kh);
+        ws.put(vh);
+        ws.put(s);
+        ws.put(oh);
+        ws.put(qs);
+        ws.put(kd);
+    }
+
+    /// One head of the mirrored backward (Eqs. 14–22, single block):
+    /// given `do_` (cotangent of o) and `dkv` (cotangent of KV_out),
+    /// accumulates dq/dk/dv into the merged buffers and adds into
+    /// `dkv_in`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn attention_head_bwd(
+        &self,
+        hh: usize,
+        q: &[f64],
+        k: &[f64],
+        v: &[f64],
+        kv: &[f64],
+        do_: &[f64],
+        dkv: &[f64],
+        dq: &mut [f64],
+        dk: &mut [f64],
+        dv: &mut [f64],
+        dkv_in: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let (c, d, dh) = (self.c, self.d, self.dh);
+        let off = hh * dh;
+        let pw = &self.pw[hh];
+
+        let mut qh = ws.take(c * dh);
+        let mut kh = ws.take(c * dh);
+        let mut vh = ws.take(c * dh);
+        let mut doh = ws.take(c * dh);
+        gather_head(q, &mut qh, c, d, off, dh);
+        gather_head(k, &mut kh, c, d, off, dh);
+        gather_head(v, &mut vh, c, d, off, dh);
+        gather_head(do_, &mut doh, c, d, off, dh);
+
+        // masked scores and their cotangent
+        let mut s = ws.take(c * c);
+        matmul_nt_into(&mut s, &qh, &kh, c, dh, c, false);
+        apply_decay_mask(&mut s, pw, c);
+        let mut ds = ws.take(c * c);
+        matmul_nt_into(&mut ds, &doh, &vh, c, dh, c, false);
+        apply_decay_mask(&mut ds, pw, c);
+
+        // intra-chunk: dQh = dS Kh (Eq. 14), dKh = dSᵀ Qh (Eq. 17),
+        // dVh = Sᵀ dOh (Algorithm 3 l.10)
+        let mut dqh = ws.take(c * dh);
+        matmul_into(&mut dqh, &ds, &kh, c, c, dh, false);
+        let mut dkh = ws.take(c * dh);
+        matmul_tn_into(&mut dkh, &ds, &qh, c, c, dh, false);
+        let mut dvh = ws.take(c * dh);
+        matmul_tn_into(&mut dvh, &s, &doh, c, c, dh, false);
+
+        // inter-chunk: dQh += diag(λ^{i+1}) dOh KVᵀ              (Eq. 16)
+        let mut dos = ws.take(c * dh);
+        scale_rows(&mut dos, &doh, &pw[1..], c, dh);
+        matmul_nt_into(&mut dqh, &dos, kv, c, dh, dh, true);
+        // dKV_in += (diag(λ^{i+1}) Qh)ᵀ dOh                      (Eq. 20)
+        let mut qs = ws.take(c * dh);
+        scale_rows(&mut qs, &qh, &pw[1..], c, dh);
+        matmul_tn_into(dkv_in, &qs, &doh, c, dh, dh, true);
+
+        // state-update cotangents:
+        // dKh += diag(λ^{C-1-p}) Vh Dᵀ                           (Eq. 19)
+        let mut vd = ws.take(c * dh);
+        scale_rows_rev(&mut vd, &vh, pw, c, dh);
+        matmul_nt_into(&mut dkh, &vd, dkv, c, dh, dh, true);
+        // dVh += diag(λ^{C-1-p}) Kh D                            (Eq. 22)
+        let mut kd = ws.take(c * dh);
+        scale_rows_rev(&mut kd, &kh, pw, c, dh);
+        matmul_into(&mut dvh, &kd, dkv, c, dh, dh, true);
+
+        // dKV_in += λ^C D
+        for (slot, &x) in dkv_in.iter_mut().zip(dkv) {
+            *slot += pw[c] * x;
+        }
+
+        scatter_head_add(&dqh, dq, c, d, off, dh);
+        scatter_head_add(&dkh, dk, c, d, off, dh);
+        scatter_head_add(&dvh, dv, c, d, off, dh);
+
+        ws.put(qh);
+        ws.put(kh);
+        ws.put(vh);
+        ws.put(doh);
+        ws.put(s);
+        ws.put(ds);
+        ws.put(dqh);
+        ws.put(dkh);
+        ws.put(dvh);
+        ws.put(dos);
+        ws.put(qs);
+        ws.put(vd);
+        ws.put(kd);
+    }
+
+    /// Ring Attention baseline block step (left-product manner):
+    /// `acc += [(Q Kᵀ) ⊙ D] V` with `D_pr = λ^{p + moff - r}` (0 when the
+    /// exponent is negative). Shapes (H, C, dh).
+    ///
+    /// The decay weight depends on (p, r) only through the diagonal
+    /// offset `t = p - r ∈ [-(C-1), C-1]`, so one 2C-1 entry table per
+    /// head replaces the old per-pair `powf` — and the block product
+    /// becomes a masked score GEMM like the intra-chunk term.
+    pub fn ring_block(
+        &self,
+        q: &[f64],
+        k: &[f64],
+        v: &[f64],
+        acc: &[f64],
+        moff: f64,
+        ws: &mut Workspace,
+    ) -> Vec<f64> {
+        let (c, dh) = (self.c, self.dh);
+        let mut out = acc.to_vec();
+        let mut w = ws.take(2 * c - 1);
+        let mut s = ws.take(c * c);
+        for hh in 0..self.n_heads {
+            let lam = self.lam[hh];
+            let hb = hh * c * dh;
+            // w[t + C-1] = λ^{moff + t}, 0 where the exponent is negative
+            for (idx, slot) in w.iter_mut().enumerate() {
+                let t = idx as f64 - (c as f64 - 1.0);
+                let e = moff + t;
+                *slot = if e < 0.0 { 0.0 } else { lam.powf(e) };
+            }
+            matmul_nt_into(
+                &mut s,
+                &q[hb..hb + c * dh],
+                &k[hb..hb + c * dh],
+                c,
+                dh,
+                c,
+                false,
+            );
+            for p in 0..c {
+                let row = &mut s[p * c..(p + 1) * c];
+                for (r, x) in row.iter_mut().enumerate() {
+                    *x *= w[p + c - 1 - r];
+                }
+            }
+            matmul_into(
+                &mut out[hb..hb + c * dh],
+                &s,
+                &v[hb..hb + c * dh],
+                c,
+                c,
+                dh,
+                true,
+            );
+        }
+        ws.put(w);
+        ws.put(s);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{f64_of, Kernel};
+    use super::*;
+    use crate::runtime::load_bundle;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(shape: &[usize], std: f32, stream: u64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        Rng::new(5).fork(stream).fill_normal(t.data_mut(), std);
+        t
+    }
+
+    /// lam = 1 (linear transformer) reduces the state update to a plain
+    /// running sum — an easy closed form to cross-check one head against.
+    #[test]
+    fn unit_decay_state_is_plain_kv_sum() {
+        let b = load_bundle("tiny_lt", 8).unwrap();
+        let kern = Kernel::new(&b);
+        let mut ws = Workspace::new();
+        let (c, d, dh) = (kern.c, kern.d, kern.dh);
+        let q = f64_of(&rand_tensor(&[c, d], 0.5, 1));
+        let k = f64_of(&rand_tensor(&[c, d], 0.5, 2));
+        let v = f64_of(&rand_tensor(&[c, d], 0.5, 3));
+        let kv = vec![0.0; dh * dh];
+        let mut o = vec![0.0; c * d];
+        let mut kv_out = vec![0.0; dh * dh];
+        kern.attention_head(0, &q, &k, &v, &kv, &mut o, &mut kv_out, &mut ws);
+        // kv_out == Σ_p k_p ⊗ v_p over head-0 columns
+        for a in 0..dh {
+            for bcol in 0..dh {
+                let expect: f64 =
+                    (0..c).map(|p| k[p * d + a] * v[p * d + bcol]).sum();
+                assert!((kv_out[a * dh + bcol] - expect).abs() < 1e-9);
+            }
+        }
+        // o_i == q_i Σ_{j<=i} k_j ⊗ v_j
+        for i in 0..c {
+            for bcol in 0..dh {
+                let mut expect = 0.0;
+                for j in 0..=i {
+                    let qk: f64 =
+                        (0..dh).map(|a| q[i * d + a] * k[j * d + a]).sum();
+                    expect += qk * v[j * d + bcol];
+                }
+                assert!((o[i * d + bcol] - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    /// The GEMM head must agree with the scalar reference head on a
+    /// decayed (λ < 1) config, forward and backward.
+    #[test]
+    fn gemm_head_matches_scalar_reference_head() {
+        let b = load_bundle("tiny", 16).unwrap();
+        let kern = Kernel::new(&b);
+        let mut ws = Workspace::new();
+        let (c, d, dh) = (kern.c, kern.d, kern.dh);
+        let q = f64_of(&rand_tensor(&[c, d], 0.5, 11));
+        let k = f64_of(&rand_tensor(&[c, d], 0.5, 12));
+        let v = f64_of(&rand_tensor(&[c, d], 0.5, 13));
+        let kv = f64_of(&rand_tensor(&[dh, dh], 0.2, 14));
+        let do_ = f64_of(&rand_tensor(&[c, d], 0.3, 15));
+        let dkv = f64_of(&rand_tensor(&[dh, dh], 0.2, 16));
+
+        for hh in 0..kern.n_heads {
+            let mut o = vec![0.0; c * d];
+            let mut kv_out = vec![0.0; dh * dh];
+            kern.attention_head(hh, &q, &k, &v, &kv, &mut o, &mut kv_out, &mut ws);
+            let mut o_ref = vec![0.0; c * d];
+            let mut kv_out_ref = vec![0.0; dh * dh];
+            super::super::reference::attention_head_ref(
+                &kern, hh, &q, &k, &v, &kv, &mut o_ref, &mut kv_out_ref,
+            );
+            for (a, b) in o.iter().zip(&o_ref) {
+                assert!((a - b).abs() < 1e-10, "o: {a} vs {b}");
+            }
+            for (a, b) in kv_out.iter().zip(&kv_out_ref) {
+                assert!((a - b).abs() < 1e-10, "kv: {a} vs {b}");
+            }
+
+            let mut dq = vec![0.0; c * d];
+            let mut dk = vec![0.0; c * d];
+            let mut dv = vec![0.0; c * d];
+            let mut dkv_in = vec![0.0; dh * dh];
+            kern.attention_head_bwd(
+                hh, &q, &k, &v, &kv, &do_, &dkv, &mut dq, &mut dk, &mut dv,
+                &mut dkv_in, &mut ws,
+            );
+            let mut dq_r = vec![0.0; c * d];
+            let mut dk_r = vec![0.0; c * d];
+            let mut dv_r = vec![0.0; c * d];
+            let mut dkv_r = vec![0.0; dh * dh];
+            super::super::reference::attention_head_bwd_ref(
+                &kern, hh, &q, &k, &v, &kv, &do_, &dkv, &mut dq_r, &mut dk_r,
+                &mut dv_r, &mut dkv_r,
+            );
+            for (name, got, want) in [
+                ("dq", &dq, &dq_r),
+                ("dk", &dk, &dk_r),
+                ("dv", &dv, &dv_r),
+                ("dkv_in", &dkv_in, &dkv_r),
+            ] {
+                for (a, b) in got.iter().zip(want.iter()) {
+                    assert!((a - b).abs() < 1e-10, "{name}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_block_accumulates_causal_decay() {
+        let b = load_bundle("tiny", 4).unwrap();
+        let kern = Kernel::new(&b);
+        let mut ws = Workspace::new();
+        let (c, dh, h) = (kern.c, kern.dh, kern.n_heads);
+        let q = f64_of(&rand_tensor(&[h, c, dh], 0.5, 21));
+        let k = f64_of(&rand_tensor(&[h, c, dh], 0.5, 22));
+        let v = f64_of(&rand_tensor(&[h, c, dh], 0.5, 23));
+        let acc = vec![0.0; h * c * dh];
+        // moff = 0: strictly causal within the block
+        let out = kern.ring_block(&q, &k, &v, &acc, 0.0, &mut ws);
+        // position 0 attends only to position 0
+        let hb = 0;
+        let qk: f64 = (0..dh).map(|a| q[hb + a] * k[hb + a]).sum();
+        for bcol in 0..dh {
+            assert!((out[hb + bcol] - qk * v[hb + bcol]).abs() < 1e-9);
+        }
+        // moff >= C: every pair contributes (no masking)
+        let out2 = kern.ring_block(&q, &k, &v, &out, c as f64, &mut ws);
+        assert!(out2.iter().zip(&out).any(|(a, b)| (a - b).abs() > 1e-12));
+    }
+
+    /// The per-diagonal weight table must reproduce the per-pair powf
+    /// of the old backend bit-for-bit-close, including the causal mask.
+    #[test]
+    fn ring_block_matches_per_pair_powf() {
+        let b = load_bundle("tiny", 8).unwrap();
+        let kern = Kernel::new(&b);
+        let mut ws = Workspace::new();
+        let (c, dh, h) = (kern.c, kern.dh, kern.n_heads);
+        let q = f64_of(&rand_tensor(&[h, c, dh], 0.5, 31));
+        let k = f64_of(&rand_tensor(&[h, c, dh], 0.5, 32));
+        let v = f64_of(&rand_tensor(&[h, c, dh], 0.5, 33));
+        let acc = f64_of(&rand_tensor(&[h, c, dh], 0.1, 34));
+        for moff in [0.0, 3.0, c as f64, 4.0 * c as f64] {
+            let got = kern.ring_block(&q, &k, &v, &acc, moff, &mut ws);
+            // scalar reference: the old per-pair loop
+            let mut want = acc.clone();
+            for hh in 0..h {
+                let lam = kern.lam[hh];
+                let hb = hh * c * dh;
+                for p in 0..c {
+                    for r in 0..c {
+                        let e = p as f64 + moff - r as f64;
+                        if e < 0.0 {
+                            continue;
+                        }
+                        let qk: f64 = (0..dh)
+                            .map(|a| q[hb + p * dh + a] * k[hb + r * dh + a])
+                            .sum();
+                        let wgt = lam.powf(e) * qk;
+                        for bcol in 0..dh {
+                            want[hb + p * dh + bcol] += wgt * v[hb + r * dh + bcol];
+                        }
+                    }
+                }
+            }
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "moff={moff}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Cache-blocked f64 GEMM primitives — the compute core of the native
+//! kernel engine.
+//!
+//! Three layouts cover every contraction in the chunk programs:
+//!
+//!  * [`matmul_into`]    — `(m, k) @ (k, n)`          (projections, FFN)
+//!  * [`matmul_nt_into`] — `(m, k) @ (n, k)ᵀ`         (logits, score GEMMs)
+//!  * [`matmul_tn_into`] — `(k, m)ᵀ @ (k, n)`         (weight grads, rank-C
+//!    state updates)
+//!
+//! All kernels are branch-free in the inner loop (the old backend skipped
+//! zero elements of `a`, which costs a compare per element on dense
+//! data), accumulate into independent lanes so the FP dependence chain
+//! never serializes, and walk `b` in row panels of [`KB`] rows so the
+//! panel stays resident in cache across output rows. Every kernel takes
+//! an `add` flag: `false` overwrites `out`, `true` accumulates — which is
+//! what lets callers fuse "+=" terms without a temporary.
+//!
+//! Numerics: reassociating the reduction changes results only at f64
+//! rounding (~1e-16 relative), invisible at the f32 ABI; the
+//! `kernel_parity` suite pins the GEMM path against the scalar reference
+//! oracle.
+
+/// Rows of `b` processed per panel: a `KB × n` panel stays hot in cache
+/// while every output row is updated against it.
+const KB: usize = 64;
+
+/// Branch-free dot product with four independent accumulators.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let ra = a.chunks_exact(4).remainder();
+    let rb = b.chunks_exact(4).remainder();
+    for (x, y) in a.chunks_exact(4).zip(b.chunks_exact(4)) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += a * x` over equal-length slices (vectorizes to FMA).
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * *xi;
+    }
+}
+
+/// `(m, k) @ (k, n) -> (m, n)`; accumulates when `add`.
+pub fn matmul_into(
+    out: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    add: bool,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    if !add {
+        out.fill(0.0);
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                axpy(orow, arow[kk], &b[kk * n..(kk + 1) * n]);
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// `(m, k) @ (n, k)ᵀ -> (m, n)`; accumulates when `add`.
+///
+/// Four output columns per pass share each load of the `a` row, so the
+/// reduction runs four independent chains wide instead of one serial one.
+pub fn matmul_nt_into(
+    out: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    add: bool,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for ((((&av, &x0), &x1), &x2), &x3) in
+                arow.iter().zip(b0).zip(b1).zip(b2).zip(b3)
+            {
+                s0 += av * x0;
+                s1 += av * x1;
+                s2 += av * x2;
+                s3 += av * x3;
+            }
+            if add {
+                orow[j] += s0;
+                orow[j + 1] += s1;
+                orow[j + 2] += s2;
+                orow[j + 3] += s3;
+            } else {
+                orow[j] = s0;
+                orow[j + 1] = s1;
+                orow[j + 2] = s2;
+                orow[j + 3] = s3;
+            }
+            j += 4;
+        }
+        while j < n {
+            let s = dot(arow, &b[j * k..(j + 1) * k]);
+            if add {
+                orow[j] += s;
+            } else {
+                orow[j] = s;
+            }
+            j += 1;
+        }
+    }
+}
+
+/// `(k, m)ᵀ @ (k, n) -> (m, n)`; accumulates when `add`.
+pub fn matmul_tn_into(
+    out: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    k: usize,
+    m: usize,
+    n: usize,
+    add: bool,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    if !add {
+        out.fill(0.0);
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                axpy(orow, a[kk * m + i], &b[kk * n..(kk + 1) * n]);
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Allocating convenience wrappers (cold paths and gradient outputs).
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    matmul_into(&mut out, a, b, m, k, n, false);
+    out
+}
+
+pub fn matmul_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    matmul_nt_into(&mut out, a, b, m, k, n, false);
+    out
+}
+
+pub fn matmul_tn(a: &[f64], b: &[f64], k: usize, m: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    matmul_tn_into(&mut out, a, b, k, m, n, false);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    out[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn seq(n: usize, salt: f64) -> Vec<f64> {
+        // deterministic, sign-alternating, irrational-ish values
+        (0..n)
+            .map(|i| ((i as f64 * 0.37 + salt).sin()) * 1.5)
+            .collect()
+    }
+
+    fn assert_close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-10, "[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// Odd shapes exercise the remainder paths of every kernel.
+    #[test]
+    fn blocked_kernels_match_naive_reference() {
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 7), (8, 70, 4), (5, 130, 9), (16, 16, 16)]
+        {
+            let a = seq(m * k, 0.1);
+            let b = seq(k * n, 0.7);
+            assert_close(&matmul(&a, &b, m, k, n), &naive(&a, &b, m, k, n));
+
+            // nt: b given as (n, k) row-major == bᵀ in the naive layout
+            let bt = seq(n * k, 0.3);
+            let mut b_std = vec![0.0; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    b_std[kk * n + j] = bt[j * k + kk];
+                }
+            }
+            assert_close(&matmul_nt(&a, &bt, m, k, n), &naive(&a, &b_std, m, k, n));
+
+            // tn: a given as (k, m) row-major == aᵀ in the naive layout
+            let at = seq(k * m, 0.9);
+            let mut a_std = vec![0.0; m * k];
+            for kk in 0..k {
+                for i in 0..m {
+                    a_std[i * k + kk] = at[kk * m + i];
+                }
+            }
+            assert_close(&matmul_tn(&at, &b, k, m, n), &naive(&a_std, &b, m, k, n));
+        }
+    }
+
+    #[test]
+    fn add_flag_accumulates() {
+        let (m, k, n) = (3, 6, 5);
+        let a = seq(m * k, 0.2);
+        let b = seq(k * n, 0.4);
+        let base = seq(m * n, 0.6);
+
+        let mut out = base.clone();
+        matmul_into(&mut out, &a, &b, m, k, n, true);
+        let expect: Vec<f64> = naive(&a, &b, m, k, n)
+            .iter()
+            .zip(&base)
+            .map(|(x, y)| x + y)
+            .collect();
+        assert_close(&out, &expect);
+
+        // add = false must fully overwrite stale contents
+        let mut out = vec![1e9; m * n];
+        matmul_into(&mut out, &a, &b, m, k, n, false);
+        assert_close(&out, &naive(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in [0usize, 1, 3, 4, 5, 8, 11] {
+            let a = seq(n, 0.5);
+            let b = seq(n, 1.5);
+            let expect: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - expect).abs() < 1e-12, "n={n}");
+        }
+    }
+}

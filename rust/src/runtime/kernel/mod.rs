@@ -1,0 +1,599 @@
+//! The native kernel engine: f64 chunk-program kernels behind the
+//! [`NativeDevice`](super::native::NativeDevice) backend.
+//!
+//! Layering (DESIGN.md §2):
+//!
+//!  * [`gemm`]      — cache-blocked, branch-free matmul primitives;
+//!  * [`attention`] — the LASP chunk attention (Eqs. 7–10 forward,
+//!    Eqs. 14–22 backward) formulated as GEMMs over precomputed decay
+//!    tables, plus the Ring-Attention baseline block;
+//!  * [`workspace`] — per-device scratch arena, version-keyed f64
+//!    parameter cache, and the §4.2 forward-activation cache;
+//!  * [`reference`] — the pre-refactor scalar kernels, kept verbatim as
+//!    the numerical oracle for `tests/kernel_parity.rs` (and as the
+//!    "before" engine in the perf bench). Never on the hot path.
+//!
+//! This module owns the orchestration: the full transformer forward over
+//! one chunk (embedding → L × [attention + FFN] → final norm → tied CE
+//! head) and the hand-derived backward, both in f64 with the f32 `Tensor`
+//! ABI applied only at the device boundary.
+
+pub mod attention;
+pub mod gemm;
+pub mod reference;
+pub mod workspace;
+
+use crate::runtime::manifest::Bundle;
+use crate::tensor::Tensor;
+
+use workspace::Workspace;
+
+pub(crate) const RMSNORM_EPS: f64 = 1e-6;
+
+// parameter indices in manifest order (see model.param_specs)
+pub(crate) const P_EMBED: usize = 0;
+pub(crate) const P_FINAL_NORM: usize = 1;
+pub(crate) const L_ATTN_NORM: usize = 0;
+pub(crate) const L_WQ: usize = 1;
+pub(crate) const L_WK: usize = 2;
+pub(crate) const L_WV: usize = 3;
+pub(crate) const L_WO: usize = 4;
+pub(crate) const L_FFN_NORM: usize = 5;
+pub(crate) const L_W1: usize = 6;
+pub(crate) const L_W3: usize = 7;
+pub(crate) const L_W2: usize = 8;
+pub(crate) const PER_LAYER: usize = 9;
+
+pub(crate) fn layer_base(l: usize) -> usize {
+    2 + PER_LAYER * l
+}
+
+/// Per-layer forward activations retained for the hand-derived backward.
+/// With the activation cache on (fused path), these survive from
+/// `chunk_fwd` to the paired `chunk_bwd`; otherwise the backward
+/// recomputes them (the real recompute-vs-reuse distinction behind the
+/// Table-5 fusion ablation).
+#[derive(Debug)]
+pub struct LayerActs {
+    pub(crate) x_in: Vec<f64>,  // (C, d) residual stream entering the layer
+    pub(crate) h: Vec<f64>,     // (C, d) attn-normed input
+    pub(crate) zq: Vec<f64>,    // (C, d) pre-SiLU query projection
+    pub(crate) zk: Vec<f64>,    // (C, d) pre-SiLU key projection
+    pub(crate) q: Vec<f64>,     // (C, d) SiLU(zq)
+    pub(crate) k: Vec<f64>,     // (C, d) SiLU(zk)
+    pub(crate) v: Vec<f64>,     // (C, d)
+    pub(crate) o: Vec<f64>,     // (C, d) merged attention output, pre-norm
+    pub(crate) on: Vec<f64>,    // (C, d) gain-free RMSNormed o
+    pub(crate) x_mid: Vec<f64>, // (C, d) after attention residual
+    pub(crate) h2: Vec<f64>,    // (C, d) ffn-normed
+    pub(crate) z1: Vec<f64>,    // (C, f)
+    pub(crate) z3: Vec<f64>,    // (C, f)
+}
+
+#[derive(Debug)]
+pub struct Acts {
+    pub(crate) layers: Vec<LayerActs>,
+    pub(crate) x_final: Vec<f64>, // (C, d) pre final norm
+    pub(crate) y: Vec<f64>,       // (C, d) final-normed hidden
+}
+
+impl Acts {
+    /// Resident bytes — the per-worker activation-cache bound.
+    pub fn nbytes(&self) -> usize {
+        let per_layer: usize = self
+            .layers
+            .iter()
+            .map(|l| {
+                l.x_in.len()
+                    + l.h.len()
+                    + l.zq.len()
+                    + l.zk.len()
+                    + l.q.len()
+                    + l.k.len()
+                    + l.v.len()
+                    + l.o.len()
+                    + l.on.len()
+                    + l.x_mid.len()
+                    + l.h2.len()
+                    + l.z1.len()
+                    + l.z3.len()
+            })
+            .sum();
+        8 * (per_layer + self.x_final.len() + self.y.len())
+    }
+}
+
+/// The chunk-kernel engine for one bundle: model dimensions plus the
+/// per-head decay powers table `λ_h^0 .. λ_h^C`, precomputed once at
+/// device construction (the old backend rebuilt this on every dispatch).
+#[derive(Debug)]
+pub struct Kernel {
+    pub(crate) c: usize,
+    pub(crate) d: usize,
+    pub(crate) f: usize,
+    pub(crate) v: usize,
+    pub(crate) n_layers: usize,
+    pub(crate) n_heads: usize,
+    pub(crate) dh: usize,
+    pub(crate) lam: Vec<f64>,
+    /// `pw[h][e] = λ_h^e` for `e ∈ 0..=C`.
+    pub(crate) pw: Vec<Vec<f64>>,
+}
+
+impl Kernel {
+    pub fn new(bundle: &Bundle) -> Kernel {
+        let cfg = &bundle.config;
+        let c = bundle.chunk_len;
+        let lam: Vec<f64> = cfg.lam.iter().map(|&x| x as f64).collect();
+        let pw = lam.iter().map(|&l| powers(l, c)).collect();
+        Kernel {
+            c,
+            d: cfg.d_model,
+            f: cfg.ffn_dim,
+            v: cfg.vocab,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            dh: cfg.head_dim,
+            lam,
+            pw,
+        }
+    }
+
+    /// Full transformer forward over one chunk; returns the retained
+    /// activations and the outgoing (L, H, dk, dv) state stack.
+    pub fn forward_full(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        kv_in: &[f64],
+        ws: &mut Workspace,
+    ) -> (Acts, Vec<f64>) {
+        let (c, d, f) = (self.c, self.d, self.f);
+        let head_elems = self.dh * self.dh;
+        let layer_elems = self.n_heads * head_elems;
+
+        // embedding lookup
+        let embed = &p[P_EMBED];
+        let mut x = vec![0.0; c * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = t as usize * d;
+            x[i * d..(i + 1) * d].copy_from_slice(&embed[row..row + d]);
+        }
+
+        let mut kv_out = vec![0.0; kv_in.len()];
+        let mut layers = Vec::with_capacity(self.n_layers);
+        for l in 0..self.n_layers {
+            let b = layer_base(l);
+            let x_in = x;
+            let h = rmsnorm(&x_in, Some(&p[b + L_ATTN_NORM]), c, d);
+            let mut zq = vec![0.0; c * d];
+            gemm::matmul_into(&mut zq, &h, &p[b + L_WQ], c, d, d, false);
+            let mut zk = vec![0.0; c * d];
+            gemm::matmul_into(&mut zk, &h, &p[b + L_WK], c, d, d, false);
+            let mut v = vec![0.0; c * d];
+            gemm::matmul_into(&mut v, &h, &p[b + L_WV], c, d, d, false);
+            let q: Vec<f64> = zq.iter().map(|&z| silu(z)).collect();
+            let k: Vec<f64> = zk.iter().map(|&z| silu(z)).collect();
+
+            let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
+            let kv_out_l = &mut kv_out[l * layer_elems..(l + 1) * layer_elems];
+            let mut o = vec![0.0; c * d];
+            for hh in 0..self.n_heads {
+                self.attention_head(
+                    hh,
+                    &q,
+                    &k,
+                    &v,
+                    &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                    &mut o,
+                    &mut kv_out_l[hh * head_elems..(hh + 1) * head_elems],
+                    ws,
+                );
+            }
+
+            let on = rmsnorm(&o, None, c, d);
+            // x_mid = x_in + on · Wo  (residual fused into the GEMM)
+            let mut x_mid = x_in.clone();
+            gemm::matmul_into(&mut x_mid, &on, &p[b + L_WO], c, d, d, true);
+
+            let h2 = rmsnorm(&x_mid, Some(&p[b + L_FFN_NORM]), c, d);
+            let mut z1 = vec![0.0; c * f];
+            gemm::matmul_into(&mut z1, &h2, &p[b + L_W1], c, d, f, false);
+            let mut z3 = vec![0.0; c * f];
+            gemm::matmul_into(&mut z3, &h2, &p[b + L_W3], c, d, f, false);
+            let mut gate = ws.take(c * f);
+            for ((g, &za), &zb) in gate.iter_mut().zip(&z1).zip(&z3) {
+                *g = silu(za) * zb;
+            }
+            let mut x_out = x_mid.clone();
+            gemm::matmul_into(&mut x_out, &gate, &p[b + L_W2], c, f, d, true);
+            ws.put(gate);
+
+            layers.push(LayerActs {
+                x_in, h, zq, zk, q, k, v, o, on, x_mid, h2, z1, z3,
+            });
+            x = x_out;
+        }
+
+        let y = rmsnorm(&x, Some(&p[P_FINAL_NORM]), c, d);
+        (Acts { layers, x_final: x, y }, kv_out)
+    }
+
+    /// Logits (C, V) from the final-normed hidden states (tied head).
+    pub fn logits(&self, p: &[Vec<f64>], acts: &Acts) -> Vec<f64> {
+        gemm::matmul_nt(&acts.y, &p[P_EMBED], self.c, self.d, self.v)
+    }
+
+    /// Summed next-token NLL; when `scale` is given, also the scaled
+    /// softmax-CE cotangent `scale * (softmax - onehot)` as (C, V).
+    /// The returned cotangent buffer comes from `ws` — the caller returns
+    /// it with `ws.put` once consumed.
+    pub fn loss_and_dlogits(
+        &self,
+        p: &[Vec<f64>],
+        acts: &Acts,
+        labels: &[i32],
+        scale: Option<f64>,
+        ws: &mut Workspace,
+    ) -> (f64, Option<Vec<f64>>) {
+        let (c, v) = (self.c, self.v);
+        let mut logits = ws.take(c * v);
+        gemm::matmul_nt_into(&mut logits, &acts.y, &p[P_EMBED], c, self.d, v, false);
+        let mut loss = 0.0;
+        let mut dlogits = scale.map(|_| ws.take(c * v));
+        for i in 0..c {
+            let row = &logits[i * v..(i + 1) * v];
+            let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let sum: f64 = row.iter().map(|&x| (x - max).exp()).sum();
+            let lse = sum.ln() + max;
+            let label = labels[i] as usize;
+            loss += lse - row[label];
+            if let (Some(dl), Some(s)) = (dlogits.as_mut(), scale) {
+                let drow = &mut dl[i * v..(i + 1) * v];
+                for (j, slot) in drow.iter_mut().enumerate() {
+                    *slot = s * (row[j] - max).exp() / sum;
+                }
+                drow[label] -= s;
+            }
+        }
+        ws.put(logits);
+        (loss, dlogits)
+    }
+
+    /// Hand-derived reverse pass for the objective
+    /// `loss_scale * loss_sum + <kv_out, dkv_out>`.
+    ///
+    /// When `acts` is supplied (the §4.2 activation-cache path) the
+    /// forward is NOT recomputed — the cached intermediates are
+    /// differentiated directly, exactly like the lowered fused HLO shares
+    /// its forward. With `None` the forward runs here first (the unfused
+    /// twin's behavior).
+    ///
+    /// Returns (dparams in manifest order, dkv_in stack, raw loss_sum).
+    pub fn backward(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        labels: &[i32],
+        kv_in: &[f64],
+        dkv_out: &[f64],
+        loss_scale: f64,
+        acts: Option<Acts>,
+        ws: &mut Workspace,
+    ) -> (Vec<Vec<f64>>, Vec<f64>, f64) {
+        let (c, d, f) = (self.c, self.d, self.f);
+        let head_elems = self.dh * self.dh;
+        let layer_elems = self.n_heads * head_elems;
+
+        let acts = match acts {
+            Some(a) => a,
+            None => self.forward_full(p, tokens, kv_in, ws).0,
+        };
+        let (loss, dlogits) =
+            self.loss_and_dlogits(p, &acts, labels, Some(loss_scale), ws);
+        let dlogits = dlogits.unwrap();
+
+        let mut dparams: Vec<Vec<f64>> =
+            p.iter().map(|t| vec![0.0; t.len()]).collect();
+        let mut dkv_in = vec![0.0; kv_in.len()];
+
+        // tied LM head: logits = y embedᵀ
+        let mut dy = ws.take(c * d);
+        gemm::matmul_into(&mut dy, &dlogits, &p[P_EMBED], c, self.v, d, false);
+        gemm::matmul_tn_into(
+            &mut dparams[P_EMBED],
+            &dlogits,
+            &acts.y,
+            c,
+            self.v,
+            d,
+            false,
+        );
+        ws.put(dlogits);
+
+        // final RMSNorm
+        let (dgain, mut dx) =
+            rmsnorm_bwd(&dy, &acts.x_final, Some(&p[P_FINAL_NORM]), c, d);
+        dparams[P_FINAL_NORM] = dgain.unwrap();
+        ws.put(dy);
+
+        for l in (0..self.n_layers).rev() {
+            let b = layer_base(l);
+            let a = &acts.layers[l];
+
+            // ---- FFN block: x_out = x_mid + (SiLU(z1) ⊙ z3) W2 ----------
+            let mut gate = ws.take(c * f);
+            for ((g, &za), &zb) in gate.iter_mut().zip(&a.z1).zip(&a.z3) {
+                *g = silu(za) * zb;
+            }
+            gemm::matmul_tn_into(&mut dparams[b + L_W2], &gate, &dx, c, f, d, false);
+            // gate is fully consumed — reuse its buffer for dgate
+            let mut dgate = gate;
+            gemm::matmul_nt_into(&mut dgate, &dx, &p[b + L_W2], c, d, f, false);
+            let mut dz1 = ws.take(c * f);
+            let mut dz3 = ws.take(c * f);
+            for i in 0..c * f {
+                dz1[i] = dgate[i] * a.z3[i] * dsilu(a.z1[i]);
+                dz3[i] = dgate[i] * silu(a.z1[i]);
+            }
+            ws.put(dgate);
+            gemm::matmul_tn_into(&mut dparams[b + L_W1], &a.h2, &dz1, c, d, f, false);
+            gemm::matmul_tn_into(&mut dparams[b + L_W3], &a.h2, &dz3, c, d, f, false);
+            let mut dh2 = ws.take(c * d);
+            gemm::matmul_nt_into(&mut dh2, &dz1, &p[b + L_W1], c, f, d, false);
+            gemm::matmul_nt_into(&mut dh2, &dz3, &p[b + L_W3], c, f, d, true);
+            ws.put(dz1);
+            ws.put(dz3);
+            let (dgain, dxn) =
+                rmsnorm_bwd(&dh2, &a.x_mid, Some(&p[b + L_FFN_NORM]), c, d);
+            dparams[b + L_FFN_NORM] = dgain.unwrap();
+            ws.put(dh2);
+            let mut dx_mid = dx; // residual path
+            for (slot, &g) in dx_mid.iter_mut().zip(&dxn) {
+                *slot += g;
+            }
+            ws.put(dxn);
+
+            // ---- attention block: x_mid = x_in + RMSNorm(o) Wo ----------
+            gemm::matmul_tn_into(&mut dparams[b + L_WO], &a.on, &dx_mid, c, d, d, false);
+            let mut don = ws.take(c * d);
+            gemm::matmul_nt_into(&mut don, &dx_mid, &p[b + L_WO], c, d, d, false);
+            let (_, do_) = rmsnorm_bwd(&don, &a.o, None, c, d);
+            ws.put(don);
+
+            let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
+            let dkv_l = &dkv_out[l * layer_elems..(l + 1) * layer_elems];
+            let dkv_in_l =
+                &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
+            let mut dq = ws.take(c * d);
+            let mut dk = ws.take(c * d);
+            let mut dv = ws.take(c * d);
+            for hh in 0..self.n_heads {
+                self.attention_head_bwd(
+                    hh,
+                    &a.q,
+                    &a.k,
+                    &a.v,
+                    &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                    &do_,
+                    &dkv_l[hh * head_elems..(hh + 1) * head_elems],
+                    &mut dq,
+                    &mut dk,
+                    &mut dv,
+                    &mut dkv_in_l[hh * head_elems..(hh + 1) * head_elems],
+                    ws,
+                );
+            }
+            ws.put(do_);
+
+            // SiLU feature maps on q/k
+            let mut dzq = ws.take(c * d);
+            let mut dzk = ws.take(c * d);
+            for i in 0..c * d {
+                dzq[i] = dq[i] * dsilu(a.zq[i]);
+                dzk[i] = dk[i] * dsilu(a.zk[i]);
+            }
+            gemm::matmul_tn_into(&mut dparams[b + L_WQ], &a.h, &dzq, c, d, d, false);
+            gemm::matmul_tn_into(&mut dparams[b + L_WK], &a.h, &dzk, c, d, d, false);
+            gemm::matmul_tn_into(&mut dparams[b + L_WV], &a.h, &dv, c, d, d, false);
+            let mut dh = ws.take(c * d);
+            gemm::matmul_nt_into(&mut dh, &dzq, &p[b + L_WQ], c, d, d, false);
+            gemm::matmul_nt_into(&mut dh, &dzk, &p[b + L_WK], c, d, d, true);
+            gemm::matmul_nt_into(&mut dh, &dv, &p[b + L_WV], c, d, d, true);
+            ws.put(dq);
+            ws.put(dk);
+            ws.put(dv);
+            ws.put(dzq);
+            ws.put(dzk);
+            let (dgain, dxn) =
+                rmsnorm_bwd(&dh, &a.x_in, Some(&p[b + L_ATTN_NORM]), c, d);
+            dparams[b + L_ATTN_NORM] = dgain.unwrap();
+            ws.put(dh);
+            let mut dx_in = dx_mid; // residual path
+            for (slot, &g) in dx_in.iter_mut().zip(&dxn) {
+                *slot += g;
+            }
+            ws.put(dxn);
+            dx = dx_in;
+        }
+
+        // embedding lookup backward (accumulates into the tied embed grad)
+        let dembed = &mut dparams[P_EMBED];
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = t as usize * d;
+            gemm::axpy(&mut dembed[row..row + d], 1.0, &dx[i * d..(i + 1) * d]);
+        }
+        ws.put(dx);
+
+        (dparams, dkv_in, loss)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared math helpers (used by both the GEMM engine and the reference
+// oracle, so the two paths differ only in kernel formulation)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn f64_of(t: &Tensor) -> Vec<f64> {
+    t.data().iter().map(|&x| x as f64).collect()
+}
+
+pub(crate) fn tensor_of(shape: &[usize], v: &[f64]) -> Tensor {
+    Tensor::new(shape.to_vec(), v.iter().map(|&x| x as f32).collect())
+}
+
+/// λ^0 .. λ^C inclusive.
+pub(crate) fn powers(lam: f64, c: usize) -> Vec<f64> {
+    let mut pw = Vec::with_capacity(c + 1);
+    let mut cur = 1.0;
+    for _ in 0..=c {
+        pw.push(cur);
+        cur *= lam;
+    }
+    pw
+}
+
+pub(crate) fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+pub(crate) fn silu(z: f64) -> f64 {
+    z * sigmoid(z)
+}
+
+/// d SiLU(z) / dz = σ(z) (1 + z (1 - σ(z)))
+pub(crate) fn dsilu(z: f64) -> f64 {
+    let s = sigmoid(z);
+    s * (1.0 + z * (1.0 - s))
+}
+
+/// RMSNorm over the last dim of (c, d); `gain = None` is the gain-free
+/// form used on merged attention outputs.
+pub(crate) fn rmsnorm(
+    x: &[f64],
+    gain: Option<&[f64]>,
+    c: usize,
+    d: usize,
+) -> Vec<f64> {
+    let mut y = vec![0.0; c * d];
+    for i in 0..c {
+        let row = &x[i * d..(i + 1) * d];
+        let ms = row.iter().map(|&v| v * v).sum::<f64>() / d as f64;
+        let r = 1.0 / (ms + RMSNORM_EPS).sqrt();
+        let yrow = &mut y[i * d..(i + 1) * d];
+        match gain {
+            Some(g) => {
+                for j in 0..d {
+                    yrow[j] = row[j] * r * g[j];
+                }
+            }
+            None => {
+                for j in 0..d {
+                    yrow[j] = row[j] * r;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// RMSNorm backward. Returns `(dgain, dx)`; `dgain` is `Some` iff a gain
+/// was supplied.
+///
+///   dx_ij = r_i g_j dy_ij - x_ij r_i³ / d · Σ_k dy_ik g_k x_ik
+///   dg_j  = Σ_i dy_ij x_ij r_i
+pub(crate) fn rmsnorm_bwd(
+    dy: &[f64],
+    x: &[f64],
+    gain: Option<&[f64]>,
+    c: usize,
+    d: usize,
+) -> (Option<Vec<f64>>, Vec<f64>) {
+    let mut dx = vec![0.0; c * d];
+    let mut dgain = gain.map(|_| vec![0.0; d]);
+    for i in 0..c {
+        let xrow = &x[i * d..(i + 1) * d];
+        let dyrow = &dy[i * d..(i + 1) * d];
+        let ms = xrow.iter().map(|&v| v * v).sum::<f64>() / d as f64;
+        let r = 1.0 / (ms + RMSNORM_EPS).sqrt();
+        let mut s = 0.0;
+        for j in 0..d {
+            let g = gain.map_or(1.0, |g| g[j]);
+            s += dyrow[j] * g * xrow[j];
+        }
+        let coef = r * r * r * s / d as f64;
+        let dxrow = &mut dx[i * d..(i + 1) * d];
+        for j in 0..d {
+            let g = gain.map_or(1.0, |g| g[j]);
+            dxrow[j] = r * g * dyrow[j] - xrow[j] * coef;
+        }
+        if let Some(dg) = dgain.as_mut() {
+            for j in 0..d {
+                dg[j] += dyrow[j] * xrow[j] * r;
+            }
+        }
+    }
+    (dgain, dx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, std: f32, stream: u64) -> Vec<f64> {
+        let mut t = Tensor::zeros(&[n]);
+        Rng::new(5).fork(stream).fill_normal(t.data_mut(), std);
+        f64_of(&t)
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let (c, d) = (3, 8);
+        let x = rand_vec(c * d, 0.7, 11);
+        let g = vec![1.1; d];
+        let dy = rand_vec(c * d, 0.3, 12);
+        let (dgain, dx) = rmsnorm_bwd(&dy, &x, Some(&g), c, d);
+        let obj = |x: &[f64], g: &[f64]| -> f64 {
+            let y = rmsnorm(x, Some(g), c, d);
+            gemm::dot(&y, &dy)
+        };
+        let h = 1e-6;
+        for idx in [0usize, 5, c * d - 1] {
+            let mut xp = x.clone();
+            xp[idx] += h;
+            let mut xm = x.clone();
+            xm[idx] -= h;
+            let fd = (obj(&xp, &g) - obj(&xm, &g)) / (2.0 * h);
+            assert!((dx[idx] - fd).abs() < 1e-6, "dx[{idx}]: {} vs {fd}", dx[idx]);
+        }
+        let dgain = dgain.unwrap();
+        for idx in [0usize, d - 1] {
+            let mut gp = g.clone();
+            gp[idx] += h;
+            let mut gm = g.clone();
+            gm[idx] -= h;
+            let fd = (obj(&x, &gp) - obj(&x, &gm)) / (2.0 * h);
+            assert!((dgain[idx] - fd).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn powers_table_is_cumulative() {
+        let pw = powers(0.5, 4);
+        assert_eq!(pw, vec![1.0, 0.5, 0.25, 0.125, 0.0625]);
+        assert_eq!(powers(1.0, 3), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn kernel_precomputes_per_head_decay_tables() {
+        let b = crate::runtime::load_bundle("tiny", 16).unwrap();
+        let kern = Kernel::new(&b);
+        assert_eq!(kern.pw.len(), kern.n_heads);
+        for (h, pw) in kern.pw.iter().enumerate() {
+            assert_eq!(pw.len(), kern.c + 1);
+            assert_eq!(pw[0], 1.0);
+            assert!((pw[1] - kern.lam[h]).abs() < 1e-12);
+        }
+    }
+}

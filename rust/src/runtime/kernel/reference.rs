@@ -1,0 +1,520 @@
+//! The pre-refactor scalar chunk kernels, kept verbatim as the numerical
+//! oracle for the GEMM engine.
+//!
+//! This is the exact per-(i, j) scalar-dot formulation (and the naive,
+//! zero-skipping matmul helpers) that `runtime::native` shipped before
+//! the kernel-engine refactor. It exists for two purposes only:
+//!
+//!  * `tests/kernel_parity.rs` pins the GEMM-formulated forward/backward
+//!    against it on every config × chunking it covers;
+//!  * `benches/perf_hotpath.rs` runs it as the "before" engine so
+//!    `BENCH_perf.json` records the pre/post-refactor latencies from a
+//!    single binary.
+//!
+//! It would be `#[cfg(test)]` if integration tests could link
+//! test-gated items — they cannot, so it is a plain module; nothing on
+//! the hot path calls into it. It shares the pointwise helpers
+//! (SiLU/RMSNorm/softmax) with the engine so the two paths differ only
+//! in kernel formulation.
+
+use crate::runtime::manifest::Bundle;
+use crate::tensor::Tensor;
+
+use super::{
+    dsilu, f64_of, layer_base, powers, rmsnorm, rmsnorm_bwd, silu, tensor_of,
+    Acts, Kernel, LayerActs, L_ATTN_NORM, L_FFN_NORM, L_W1, L_W2, L_W3, L_WK,
+    L_WO, L_WQ, L_WV, P_EMBED, P_FINAL_NORM,
+};
+
+/// Pre-refactor `chunk_fwd`: scalar kernels, parameters converted on
+/// every call (the old per-dispatch behavior). Returns `(loss_sum,
+/// kv_out)` exactly like the artifact.
+pub fn chunk_fwd(
+    bundle: &Bundle,
+    params: &[Tensor],
+    tokens: &[i32],
+    labels: &[i32],
+    kv_in: &Tensor,
+) -> (f32, Tensor) {
+    let kern = Kernel::new(bundle);
+    let p64: Vec<Vec<f64>> = params.iter().map(f64_of).collect();
+    let kv = f64_of(kv_in);
+    let (acts, kv_out) = forward_full_ref(&kern, &p64, tokens, &kv);
+    let (loss, _) = loss_and_dlogits_ref(&kern, &p64, &acts, labels, None);
+    (loss as f32, tensor_of(&bundle.kv_state_shape, &kv_out))
+}
+
+/// Pre-refactor `chunk_bwd`: recomputes the forward internally (the old
+/// backend had no activation cache), then runs the scalar backward.
+/// Returns `(dparams, dkv_in, loss_sum)` in artifact output order.
+#[allow(clippy::too_many_arguments)]
+pub fn chunk_bwd(
+    bundle: &Bundle,
+    params: &[Tensor],
+    tokens: &[i32],
+    labels: &[i32],
+    kv_in: &Tensor,
+    dkv_out: &Tensor,
+    loss_scale: f32,
+) -> (Vec<Tensor>, Tensor, f32) {
+    let kern = Kernel::new(bundle);
+    let p64: Vec<Vec<f64>> = params.iter().map(f64_of).collect();
+    let kv = f64_of(kv_in);
+    let dkv = f64_of(dkv_out);
+    let (dparams, dkv_in, loss) =
+        backward_ref(&kern, &p64, tokens, labels, &kv, &dkv, loss_scale as f64);
+    let grads: Vec<Tensor> = dparams
+        .iter()
+        .zip(params)
+        .map(|(g, t)| tensor_of(t.shape(), g))
+        .collect();
+    (grads, tensor_of(&bundle.kv_state_shape, &dkv_in), loss as f32)
+}
+
+/// Scalar transformer forward (pre-refactor `forward_full`).
+pub(crate) fn forward_full_ref(
+    kern: &Kernel,
+    p: &[Vec<f64>],
+    tokens: &[i32],
+    kv_in: &[f64],
+) -> (Acts, Vec<f64>) {
+    let (c, d) = (kern.c, kern.d);
+    let head_elems = kern.dh * kern.dh;
+    let layer_elems = kern.n_heads * head_elems;
+
+    let embed = &p[P_EMBED];
+    let mut x = vec![0.0; c * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        let row = t as usize * d;
+        x[i * d..(i + 1) * d].copy_from_slice(&embed[row..row + d]);
+    }
+
+    let mut kv_out = vec![0.0; kv_in.len()];
+    let mut layers = Vec::with_capacity(kern.n_layers);
+    for l in 0..kern.n_layers {
+        let b = layer_base(l);
+        let x_in = x.clone();
+        let h = rmsnorm(&x_in, Some(&p[b + L_ATTN_NORM]), c, d);
+        let zq = matmul(&h, &p[b + L_WQ], c, d, d);
+        let zk = matmul(&h, &p[b + L_WK], c, d, d);
+        let q: Vec<f64> = zq.iter().map(|&z| silu(z)).collect();
+        let k: Vec<f64> = zk.iter().map(|&z| silu(z)).collect();
+        let v = matmul(&h, &p[b + L_WV], c, d, d);
+
+        let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
+        let mut o = vec![0.0; c * d];
+        let mut kv_out_l = vec![0.0; layer_elems];
+        for hh in 0..kern.n_heads {
+            attention_head_ref(
+                kern,
+                hh,
+                &q,
+                &k,
+                &v,
+                &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                &mut o,
+                &mut kv_out_l[hh * head_elems..(hh + 1) * head_elems],
+            );
+        }
+        kv_out[l * layer_elems..(l + 1) * layer_elems]
+            .copy_from_slice(&kv_out_l);
+
+        let on = rmsnorm(&o, None, c, d);
+        let attn_out = matmul(&on, &p[b + L_WO], c, d, d);
+        let mut x_mid = x_in.clone();
+        for (a, g) in x_mid.iter_mut().zip(&attn_out) {
+            *a += *g;
+        }
+
+        let h2 = rmsnorm(&x_mid, Some(&p[b + L_FFN_NORM]), c, d);
+        let z1 = matmul(&h2, &p[b + L_W1], c, d, kern.f);
+        let z3 = matmul(&h2, &p[b + L_W3], c, d, kern.f);
+        let gate: Vec<f64> =
+            z1.iter().zip(&z3).map(|(&a, &g)| silu(a) * g).collect();
+        let ffn = matmul(&gate, &p[b + L_W2], c, kern.f, d);
+        let mut x_out = x_mid.clone();
+        for (a, g) in x_out.iter_mut().zip(&ffn) {
+            *a += *g;
+        }
+
+        layers.push(LayerActs {
+            x_in, h, zq, zk, q, k, v, o, on, x_mid, h2, z1, z3,
+        });
+        x = x_out;
+    }
+
+    let y = rmsnorm(&x, Some(&p[P_FINAL_NORM]), c, d);
+    (Acts { layers, x_final: x, y }, kv_out)
+}
+
+/// One head of the scalar chunk forward (pre-refactor
+/// `attention_head`): per-(i, j) dots, per-call powers table.
+pub(crate) fn attention_head_ref(
+    kern: &Kernel,
+    hh: usize,
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    kv: &[f64],
+    o: &mut [f64],
+    kv_out: &mut [f64],
+) {
+    let (c, d, dh) = (kern.c, kern.d, kern.dh);
+    let off = hh * dh;
+    let pw = powers(kern.lam[hh], c);
+
+    for i in 0..c {
+        let qi = &q[i * d + off..i * d + off + dh];
+        // intra-chunk: masked left product [(Q Kᵀ) ⊙ M] V
+        for j in 0..=i {
+            let kj = &k[j * d + off..j * d + off + dh];
+            let w = pw[i - j] * dot(qi, kj);
+            let vj = &v[j * d + off..j * d + off + dh];
+            let oi = &mut o[i * d + off..i * d + off + dh];
+            for (ob, &vb) in oi.iter_mut().zip(vj) {
+                *ob += w * vb;
+            }
+        }
+        // inter-chunk: λ^{i+1} q_i KV_in
+        let w = pw[i + 1];
+        for bcol in 0..dh {
+            let mut s = 0.0;
+            for (a, &qa) in qi.iter().enumerate() {
+                s += qa * kv[a * dh + bcol];
+            }
+            o[i * d + off + bcol] += w * s;
+        }
+    }
+    // state update: KV_out = λ^C KV_in + Σ_p λ^{C-1-p} k_p ⊗ v_p
+    for a in 0..dh {
+        for bcol in 0..dh {
+            kv_out[a * dh + bcol] = pw[c] * kv[a * dh + bcol];
+        }
+    }
+    for pp in 0..c {
+        let w = pw[c - 1 - pp];
+        let kp = &k[pp * d + off..pp * d + off + dh];
+        let vp = &v[pp * d + off..pp * d + off + dh];
+        for (a, &ka) in kp.iter().enumerate() {
+            let row = &mut kv_out[a * dh..(a + 1) * dh];
+            for (slot, &vb) in row.iter_mut().zip(vp) {
+                *slot += w * ka * vb;
+            }
+        }
+    }
+}
+
+/// One head of the scalar backward (pre-refactor `attention_head_bwd`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_head_bwd_ref(
+    kern: &Kernel,
+    hh: usize,
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    kv: &[f64],
+    do_: &[f64],
+    dkv: &[f64],
+    dq: &mut [f64],
+    dk: &mut [f64],
+    dv: &mut [f64],
+    dkv_in: &mut [f64],
+) {
+    let (c, d, dh) = (kern.c, kern.d, kern.dh);
+    let off = hh * dh;
+    let pw = powers(kern.lam[hh], c);
+
+    for i in 0..c {
+        let doi = &do_[i * d + off..i * d + off + dh];
+        let qi = &q[i * d + off..i * d + off + dh];
+        for j in 0..=i {
+            let w = pw[i - j];
+            let kj = &k[j * d + off..j * d + off + dh];
+            let vj = &v[j * d + off..j * d + off + dh];
+            // dq_i += λ^{i-j} (do_i · v_j) k_j   (Eq. 14)
+            let dv_dot = w * dot(doi, vj);
+            let dqi = &mut dq[i * d + off..i * d + off + dh];
+            for (slot, &kb) in dqi.iter_mut().zip(kj) {
+                *slot += dv_dot * kb;
+            }
+            // dk_j += λ^{i-j} (do_i · v_j) q_i   (Eq. 17)
+            let dkj = &mut dk[j * d + off..j * d + off + dh];
+            for (slot, &qb) in dkj.iter_mut().zip(qi) {
+                *slot += dv_dot * qb;
+            }
+            // dv_j += λ^{i-j} (q_i · k_j) do_i   (Algorithm 3 l.10)
+            let qk = w * dot(qi, kj);
+            let dvj = &mut dv[j * d + off..j * d + off + dh];
+            for (slot, &ob) in dvj.iter_mut().zip(doi) {
+                *slot += qk * ob;
+            }
+        }
+        // inter-chunk terms
+        let wq = pw[i + 1];
+        // dq_i += λ^{i+1} KV do_iᵀ   (Eq. 16)
+        for a in 0..dh {
+            let mut s = 0.0;
+            for (bcol, &ob) in doi.iter().enumerate() {
+                s += kv[a * dh + bcol] * ob;
+            }
+            dq[i * d + off + a] += wq * s;
+        }
+        // dkv_in += λ^{i+1} q_iᵀ ⊗ do_i   (Eq. 20)
+        for (a, &qa) in qi.iter().enumerate() {
+            let row = &mut dkv_in[a * dh..(a + 1) * dh];
+            for (slot, &ob) in row.iter_mut().zip(doi) {
+                *slot += wq * qa * ob;
+            }
+        }
+    }
+    // state-update cotangents
+    for pp in 0..c {
+        let w = pw[c - 1 - pp];
+        let kp = &k[pp * d + off..pp * d + off + dh];
+        let vp = &v[pp * d + off..pp * d + off + dh];
+        // dk_p += λ^{C-1-p} D v_p   (Eq. 19)
+        for a in 0..dh {
+            let mut s = 0.0;
+            for (bcol, &vb) in vp.iter().enumerate() {
+                s += dkv[a * dh + bcol] * vb;
+            }
+            dk[pp * d + off + a] += w * s;
+        }
+        // dv_p += λ^{C-1-p} k_p D   (Eq. 22)
+        for bcol in 0..dh {
+            let mut s = 0.0;
+            for (a, &ka) in kp.iter().enumerate() {
+                s += ka * dkv[a * dh + bcol];
+            }
+            dv[pp * d + off + bcol] += w * s;
+        }
+    }
+    // dkv_in += λ^C D
+    for (slot, &db) in dkv_in.iter_mut().zip(dkv) {
+        *slot += pw[c] * db;
+    }
+}
+
+fn logits_ref(kern: &Kernel, p: &[Vec<f64>], acts: &Acts) -> Vec<f64> {
+    matmul_nt(&acts.y, &p[P_EMBED], kern.c, kern.d, kern.v)
+}
+
+pub(crate) fn loss_and_dlogits_ref(
+    kern: &Kernel,
+    p: &[Vec<f64>],
+    acts: &Acts,
+    labels: &[i32],
+    scale: Option<f64>,
+) -> (f64, Option<Vec<f64>>) {
+    let (c, v) = (kern.c, kern.v);
+    let logits = logits_ref(kern, p, acts);
+    let mut loss = 0.0;
+    let mut dlogits = scale.map(|_| vec![0.0; c * v]);
+    for i in 0..c {
+        let row = &logits[i * v..(i + 1) * v];
+        let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let sum: f64 = row.iter().map(|&x| (x - max).exp()).sum();
+        let lse = sum.ln() + max;
+        let label = labels[i] as usize;
+        loss += lse - row[label];
+        if let (Some(dl), Some(s)) = (dlogits.as_mut(), scale) {
+            let drow = &mut dl[i * v..(i + 1) * v];
+            for (j, slot) in drow.iter_mut().enumerate() {
+                *slot = s * (row[j] - max).exp() / sum;
+            }
+            drow[label] -= s;
+        }
+    }
+    (loss, dlogits)
+}
+
+/// Scalar reverse pass (pre-refactor `backward`): always recomputes the
+/// forward first.
+pub(crate) fn backward_ref(
+    kern: &Kernel,
+    p: &[Vec<f64>],
+    tokens: &[i32],
+    labels: &[i32],
+    kv_in: &[f64],
+    dkv_out: &[f64],
+    loss_scale: f64,
+) -> (Vec<Vec<f64>>, Vec<f64>, f64) {
+    let (c, d, f) = (kern.c, kern.d, kern.f);
+    let head_elems = kern.dh * kern.dh;
+    let layer_elems = kern.n_heads * head_elems;
+
+    let (acts, _kv_out) = forward_full_ref(kern, p, tokens, kv_in);
+    let (loss, dlogits) =
+        loss_and_dlogits_ref(kern, p, &acts, labels, Some(loss_scale));
+    let dlogits = dlogits.unwrap();
+
+    let mut dparams: Vec<Vec<f64>> =
+        p.iter().map(|t| vec![0.0; t.len()]).collect();
+    let mut dkv_in = vec![0.0; kv_in.len()];
+
+    // tied LM head: logits = y embedᵀ
+    let embed = &p[P_EMBED];
+    let dy = matmul(&dlogits, embed, c, kern.v, d);
+    dparams[P_EMBED] = matmul_tn(&dlogits, &acts.y, c, kern.v, d);
+
+    // final RMSNorm
+    let mut dx = {
+        let (dgain, dxv) =
+            rmsnorm_bwd(&dy, &acts.x_final, Some(&p[P_FINAL_NORM]), c, d);
+        dparams[P_FINAL_NORM] = dgain.unwrap();
+        dxv
+    };
+
+    for l in (0..kern.n_layers).rev() {
+        let b = layer_base(l);
+        let a = &acts.layers[l];
+
+        // ---- FFN block: x_out = x_mid + (SiLU(z1) ⊙ z3) W2 ----------
+        let gate: Vec<f64> =
+            a.z1.iter().zip(&a.z3).map(|(&z, &g)| silu(z) * g).collect();
+        dparams[b + L_W2] = matmul_tn(&gate, &dx, c, f, d);
+        let dgate = matmul_nt(&dx, &p[b + L_W2], c, d, f);
+        let mut dz1 = vec![0.0; c * f];
+        let mut dz3 = vec![0.0; c * f];
+        for i in 0..c * f {
+            dz1[i] = dgate[i] * a.z3[i] * dsilu(a.z1[i]);
+            dz3[i] = dgate[i] * silu(a.z1[i]);
+        }
+        dparams[b + L_W1] = matmul_tn(&a.h2, &dz1, c, d, f);
+        dparams[b + L_W3] = matmul_tn(&a.h2, &dz3, c, d, f);
+        let mut dh2 = matmul_nt(&dz1, &p[b + L_W1], c, f, d);
+        let dh2b = matmul_nt(&dz3, &p[b + L_W3], c, f, d);
+        for (slot, &g) in dh2.iter_mut().zip(&dh2b) {
+            *slot += g;
+        }
+        let (dgain, dxn) =
+            rmsnorm_bwd(&dh2, &a.x_mid, Some(&p[b + L_FFN_NORM]), c, d);
+        dparams[b + L_FFN_NORM] = dgain.unwrap();
+        let mut dx_mid = dx; // residual path
+        for (slot, &g) in dx_mid.iter_mut().zip(&dxn) {
+            *slot += g;
+        }
+
+        // ---- attention block: x_mid = x_in + RMSNorm(o) Wo ----------
+        dparams[b + L_WO] = matmul_tn(&a.on, &dx_mid, c, d, d);
+        let don = matmul_nt(&dx_mid, &p[b + L_WO], c, d, d);
+        let (_, do_) = rmsnorm_bwd(&don, &a.o, None, c, d);
+
+        let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
+        let dkv_l = &dkv_out[l * layer_elems..(l + 1) * layer_elems];
+        let dkv_in_l = &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
+        let mut dq = vec![0.0; c * d];
+        let mut dk = vec![0.0; c * d];
+        let mut dv = vec![0.0; c * d];
+        for hh in 0..kern.n_heads {
+            attention_head_bwd_ref(
+                kern,
+                hh,
+                &a.q,
+                &a.k,
+                &a.v,
+                &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                &do_,
+                &dkv_l[hh * head_elems..(hh + 1) * head_elems],
+                &mut dq,
+                &mut dk,
+                &mut dv,
+                &mut dkv_in_l[hh * head_elems..(hh + 1) * head_elems],
+            );
+        }
+
+        // SiLU feature maps on q/k
+        let mut dzq = vec![0.0; c * d];
+        let mut dzk = vec![0.0; c * d];
+        for i in 0..c * d {
+            dzq[i] = dq[i] * dsilu(a.zq[i]);
+            dzk[i] = dk[i] * dsilu(a.zk[i]);
+        }
+        dparams[b + L_WQ] = matmul_tn(&a.h, &dzq, c, d, d);
+        dparams[b + L_WK] = matmul_tn(&a.h, &dzk, c, d, d);
+        dparams[b + L_WV] = matmul_tn(&a.h, &dv, c, d, d);
+        let mut dh = matmul_nt(&dzq, &p[b + L_WQ], c, d, d);
+        let dhb = matmul_nt(&dzk, &p[b + L_WK], c, d, d);
+        let dhc = matmul_nt(&dv, &p[b + L_WV], c, d, d);
+        for i in 0..c * d {
+            dh[i] += dhb[i] + dhc[i];
+        }
+        let (dgain, dxn) =
+            rmsnorm_bwd(&dh, &a.x_in, Some(&p[b + L_ATTN_NORM]), c, d);
+        dparams[b + L_ATTN_NORM] = dgain.unwrap();
+        let mut dx_in = dx_mid; // residual path
+        for (slot, &g) in dx_in.iter_mut().zip(&dxn) {
+            *slot += g;
+        }
+        dx = dx_in;
+    }
+
+    // embedding lookup backward (accumulates into the tied embed grad)
+    let dembed = &mut dparams[P_EMBED];
+    for (i, &t) in tokens.iter().enumerate() {
+        let row = t as usize * d;
+        for j in 0..d {
+            dembed[row + j] += dx[i * d + j];
+        }
+    }
+
+    (dparams, dkv_in, loss)
+}
+
+// ---------------------------------------------------------------------------
+// the pre-refactor naive matmul helpers (zero-skip branch and all)
+// ---------------------------------------------------------------------------
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// (m, k) @ (k, n) -> (m, n)
+fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (slot, &bv) in orow.iter_mut().zip(brow) {
+                *slot += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// (m, k) @ (n, k)ᵀ -> (m, n)
+fn matmul_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            out[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+    out
+}
+
+/// (k, m)ᵀ @ (k, n) -> (m, n)
+fn matmul_tn(a: &[f64], b: &[f64], k: usize, m: usize, n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (slot, &bv) in orow.iter_mut().zip(brow) {
+                *slot += av * bv;
+            }
+        }
+    }
+    out
+}

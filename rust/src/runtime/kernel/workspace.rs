@@ -1,0 +1,249 @@
+//! Per-device reusable state: scratch arena, f64 parameter cache, and
+//! the forward-activation cache (paper §4.2).
+//!
+//! One [`DeviceScratch`]-shaped bundle of these lives behind a mutex in
+//! every `NativeDevice`; dispatch locks it once per artifact call, so the
+//! dozens of transient `vec![0.0; …]` allocations and the full-model
+//! f32→f64 parameter conversion of the old backend happen at most once
+//! per training step instead of once per call.
+
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+
+use super::{f64_of, Acts};
+
+/// Free-list arena for f64 scratch buffers.
+///
+/// `take(n)` hands out a zeroed buffer of length `n`, reusing the
+/// capacity of a previously returned one when possible; `put` returns a
+/// buffer to the pool. The pool is bounded ([`MAX_POOLED`] buffers), so a
+/// device's resident scratch stays proportional to one kernel
+/// invocation's working set.
+#[derive(Default, Debug)]
+pub struct Workspace {
+    free: Vec<Vec<f64>>,
+}
+
+/// Upper bound on pooled buffers (the chunk kernels keep well under
+/// this many live scratch buffers at once).
+const MAX_POOLED: usize = 64;
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zeroed scratch buffer of length `n` (recycled when possible).
+    pub fn take(&mut self, n: usize) -> Vec<f64> {
+        let pos = self
+            .free
+            .iter()
+            .position(|b| b.capacity() >= n)
+            .or(if self.free.is_empty() { None } else { Some(0) });
+        match pos {
+            Some(i) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b.resize(n, 0.0);
+                b
+            }
+            None => vec![0.0; n],
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<f64>) {
+        if self.free.len() < MAX_POOLED {
+            self.free.push(buf);
+        }
+    }
+}
+
+/// f32→f64 parameter conversion cached by the [`ParamStore`] version
+/// counter (bumped on every mutable access, i.e. after each optimizer
+/// step), so the O(model) conversion runs once per step instead of once
+/// per artifact call. Unversioned calls (the plain `exec`/`exec_parts`
+/// paths) convert fresh and never touch the cache.
+///
+/// [`ParamStore`]: crate::model::ParamStore
+#[derive(Default, Debug)]
+pub struct ParamCache {
+    entry: Option<(u64, Arc<Vec<Vec<f64>>>)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ParamCache {
+    pub fn get(
+        &mut self,
+        version: Option<u64>,
+        params: &[&Tensor],
+    ) -> Arc<Vec<Vec<f64>>> {
+        if let Some(v) = version {
+            if let Some((key, cached)) = &self.entry {
+                if *key == v {
+                    self.hits += 1;
+                    return Arc::clone(cached);
+                }
+            }
+            let conv: Arc<Vec<Vec<f64>>> =
+                Arc::new(params.iter().map(|t| f64_of(t)).collect());
+            self.misses += 1;
+            self.entry = Some((v, Arc::clone(&conv)));
+            conv
+        } else {
+            Arc::new(params.iter().map(|t| f64_of(t)).collect())
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// One retained forward (paper §4.2, intermediate state caching): the
+/// fused `chunk_fwd` stores its activations here; the paired fused
+/// `chunk_bwd` on the same device consumes them instead of recomputing
+/// the forward. Validity is self-checked — parameter version, tokens and
+/// incoming KV state must all match bitwise (activations do not depend
+/// on labels) — so a stale entry can never corrupt a backward.
+///
+/// Memory is bounded by construction: at most ONE chunk's activations
+/// are held per device (each forward overwrites, each matching backward
+/// consumes), mirroring how a real fused backward holds exactly one
+/// in-flight forward's intermediates.
+#[derive(Default, Debug)]
+pub struct ActCache {
+    entry: Option<ActEntry>,
+    hits: u64,
+}
+
+#[derive(Debug)]
+pub struct ActEntry {
+    pub param_version: u64,
+    pub tokens: Vec<i32>,
+    pub kv_in: Vec<f64>,
+    pub acts: Acts,
+}
+
+impl ActCache {
+    /// Retain a forward's activations (overwrites any previous entry).
+    pub fn store(&mut self, entry: ActEntry) {
+        self.entry = Some(entry);
+    }
+
+    /// Consume the cached activations iff they were produced by the same
+    /// parameters/tokens/state this backward is about to differentiate.
+    pub fn take_match(
+        &mut self,
+        version: Option<u64>,
+        tokens: &[i32],
+        kv_in: &[f64],
+    ) -> Option<Acts> {
+        let v = version?;
+        let matches = match &self.entry {
+            Some(e) => {
+                e.param_version == v && e.tokens == tokens && e.kv_in == kv_in
+            }
+            None => false,
+        };
+        if matches {
+            self.hits += 1;
+            Some(self.entry.take().unwrap().acts)
+        } else {
+            None
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entry = None;
+    }
+
+    /// Times a backward reused a cached forward.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Bytes currently held (0 once the paired backward has consumed the
+    /// entry — the per-worker bound the trainer relies on).
+    pub fn held_bytes(&self) -> usize {
+        self.entry.as_ref().map_or(0, |e| {
+            e.acts.nbytes() + e.kv_in.len() * 8 + e.tokens.len() * 4
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_recycles_capacity() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(128);
+        a[0] = 5.0;
+        let cap = a.capacity();
+        ws.put(a);
+        let b = ws.take(64);
+        // recycled allocation, zeroed content
+        assert!(b.capacity() >= 64 && cap >= b.capacity());
+        assert!(b.iter().all(|&x| x == 0.0));
+        assert_eq!(b.len(), 64);
+    }
+
+    #[test]
+    fn workspace_grows_a_too_small_buffer() {
+        let mut ws = Workspace::new();
+        ws.put(vec![1.0; 4]);
+        let b = ws.take(32);
+        assert_eq!(b.len(), 32);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn param_cache_keys_by_version() {
+        let t = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let refs = [&t];
+        let mut pc = ParamCache::default();
+        let a = pc.get(Some(7), &refs);
+        let b = pc.get(Some(7), &refs);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((pc.hits(), pc.misses()), (1, 1));
+        let c = pc.get(Some(8), &refs);
+        assert!(!Arc::ptr_eq(&a, &c));
+        // unversioned calls never cache
+        let d = pc.get(None, &refs);
+        assert!(!Arc::ptr_eq(&c, &d));
+        assert_eq!((pc.hits(), pc.misses()), (1, 2));
+        assert_eq!(a[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn act_cache_validates_and_consumes() {
+        let acts = Acts { layers: vec![], x_final: vec![0.0; 4], y: vec![0.0; 4] };
+        let mut ac = ActCache::default();
+        ac.store(ActEntry {
+            param_version: 3,
+            tokens: vec![1, 2],
+            kv_in: vec![0.5],
+            acts,
+        });
+        assert!(ac.held_bytes() > 0);
+        // wrong version / tokens / state: no reuse, entry kept
+        assert!(ac.take_match(Some(4), &[1, 2], &[0.5]).is_none());
+        assert!(ac.take_match(Some(3), &[9, 2], &[0.5]).is_none());
+        assert!(ac.take_match(Some(3), &[1, 2], &[0.6]).is_none());
+        assert!(ac.take_match(None, &[1, 2], &[0.5]).is_none());
+        assert_eq!(ac.hits(), 0);
+        // exact match: consumed and freed
+        assert!(ac.take_match(Some(3), &[1, 2], &[0.5]).is_some());
+        assert_eq!(ac.hits(), 1);
+        assert_eq!(ac.held_bytes(), 0);
+        assert!(ac.take_match(Some(3), &[1, 2], &[0.5]).is_none());
+    }
+}

@@ -12,7 +12,9 @@
 //!
 //!  * [`native::NativeDevice`] (default) — evaluates the chunk programs
 //!    (`chunk_fwd`, `chunk_bwd`, their unfused twins, `chunk_logits`,
-//!    `ring_block`) in pure Rust; `Send + Sync`, zero artifacts needed.
+//!    `ring_block`) on the pure-Rust kernel engine ([`kernel`]:
+//!    GEMM-formulated attention, workspace arena, parameter/activation
+//!    caches); `Send + Sync`, zero artifacts needed.
 //!  * `pjrt::PjrtDevice` (feature `pjrt`) — compiles the AOT HLO text via
 //!    the `xla` FFI crate; **not** `Send`, so every simulated GPU thread
 //!    creates its own device — the one-process-per-GPU shape of the
@@ -20,6 +22,7 @@
 //!
 //! See DESIGN.md §Backends for the layering rationale.
 
+pub mod kernel;
 pub mod manifest;
 pub mod native;
 pub mod synth;
@@ -33,6 +36,7 @@ pub use manifest::{ArtifactSpec, Bundle, IoSpec, ParamSpec};
 pub use native::NativeDevice;
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -56,6 +60,22 @@ pub trait Executor {
     /// reference, skipping a full-model copy per call.
     fn exec_parts(&self, name: &str, params: &[Tensor], rest: &[Value])
         -> Result<Vec<Value>>;
+
+    /// Trainer path: like [`exec_parts`](Executor::exec_parts), plus a
+    /// parameter-version key (`ParamStore::version()`) that lets a
+    /// backend cache per-parameter-set work — the native backend keys
+    /// its f64 conversion and the §4.2 activation cache on it. Backends
+    /// without such caches fall back to `exec_parts`.
+    fn exec_versioned(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        version: u64,
+        rest: &[Value],
+    ) -> Result<Vec<Value>> {
+        let _ = version;
+        self.exec_parts(name, params, rest)
+    }
 }
 
 /// A device for one simulated GPU, dispatching to the selected backend.
@@ -76,10 +96,17 @@ impl Device {
     /// `LASP_BACKEND` selects the backend explicitly; a request that
     /// cannot be honored is an error, never a silent fallback.
     pub fn new(bundle: &Bundle, names: &[&str]) -> Result<Device> {
+        Device::from_arc(Arc::new(bundle.clone()), names)
+    }
+
+    /// Like [`Device::new`] but sharing an existing `Arc<Bundle>` — the
+    /// trainer hands one bundle to every simulated GPU instead of
+    /// cloning the whole parameter/artifact table per worker.
+    pub fn from_arc(bundle: Arc<Bundle>, names: &[&str]) -> Result<Device> {
         match std::env::var("LASP_BACKEND").as_deref() {
             Ok("pjrt") => {
                 #[cfg(feature = "pjrt")]
-                return Ok(Device::Pjrt(pjrt::PjrtDevice::new(bundle, names)?));
+                return Ok(Device::Pjrt(pjrt::PjrtDevice::new(&bundle, names)?));
                 #[cfg(not(feature = "pjrt"))]
                 anyhow::bail!(
                     "LASP_BACKEND=pjrt but this build has no PJRT support \
@@ -91,7 +118,7 @@ impl Device {
                 "unknown LASP_BACKEND {other:?} (expected \"native\" or \"pjrt\")"
             ),
         }
-        Ok(Device::Native(NativeDevice::new(bundle, names)?))
+        Ok(Device::Native(NativeDevice::from_arc(bundle, names)?))
     }
 
     pub fn bundle(&self) -> &Bundle {
@@ -130,6 +157,51 @@ impl Device {
             Device::Pjrt(d) => d.exec_parts(name, params, rest),
         }
     }
+
+    pub fn exec_versioned(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        version: u64,
+        rest: &[Value],
+    ) -> Result<Vec<Value>> {
+        match self {
+            Device::Native(d) => d.exec_versioned(name, params, version, rest),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(d) => d.exec_parts(name, params, rest),
+        }
+    }
+
+    /// Bytes retained by the §4.2 activation cache (0 for backends
+    /// without one, and 0 on the native backend once the paired backward
+    /// has consumed the retained forward).
+    pub fn acts_cache_bytes(&self) -> usize {
+        match self {
+            Device::Native(d) => d.acts_cache_bytes(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => 0,
+        }
+    }
+
+    /// Times a fused backward reused a retained forward instead of
+    /// recomputing it (0 for backends without an activation cache).
+    pub fn acts_cache_hits(&self) -> u64 {
+        match self {
+            Device::Native(d) => d.acts_cache_hits(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => 0,
+        }
+    }
+
+    /// Drop any retained forward activations (end-of-step hygiene for
+    /// forwards that never got a paired backward).
+    pub fn clear_acts_cache(&self) {
+        match self {
+            Device::Native(d) => d.clear_acts_cache(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => {}
+        }
+    }
 }
 
 impl Executor for Device {
@@ -149,6 +221,16 @@ impl Executor for Device {
         -> Result<Vec<Value>> {
         Device::exec_parts(self, name, params, rest)
     }
+
+    fn exec_versioned(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        version: u64,
+        rest: &[Value],
+    ) -> Result<Vec<Value>> {
+        Device::exec_versioned(self, name, params, version, rest)
+    }
 }
 
 impl Executor for NativeDevice {
@@ -167,6 +249,16 @@ impl Executor for NativeDevice {
     fn exec_parts(&self, name: &str, params: &[Tensor], rest: &[Value])
         -> Result<Vec<Value>> {
         NativeDevice::exec_parts(self, name, params, rest)
+    }
+
+    fn exec_versioned(
+        &self,
+        name: &str,
+        params: &[Tensor],
+        version: u64,
+        rest: &[Value],
+    ) -> Result<Vec<Value>> {
+        NativeDevice::exec_versioned(self, name, params, version, rest)
     }
 }
 

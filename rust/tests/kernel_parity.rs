@@ -1,0 +1,204 @@
+//! Parity suite for the native kernel engine (the PR-4 refactor).
+//!
+//! Two pins, per ISSUE 4:
+//!
+//!  (a) the §4.2 activation-cache path — a fused `chunk_bwd` that
+//!      consumes the activations retained by the paired `chunk_fwd` —
+//!      must match the recompute-mode `chunk_bwd` to ≤ 1e-6 on every
+//!      output;
+//!  (b) the GEMM-formulated forward/backward must match the
+//!      pre-refactor scalar reference (`runtime::kernel::reference`,
+//!      kept verbatim as the oracle) on `tiny` and `tiny_lt` at
+//!      C ∈ {8, 32}.
+//!
+//! Both engines run f64 internally and differ only in reduction order,
+//! so the agreement demanded here is far tighter than the trainer-level
+//! tolerances — any kernel-formulation bug shows up as a gross failure,
+//! not a tolerance nudge.
+
+use lasp::model::ParamStore;
+use lasp::runtime::kernel::reference;
+use lasp::runtime::{load_bundle, Bundle, NativeDevice};
+use lasp::tensor::{IntTensor, Tensor, Value};
+use lasp::util::rng::Rng;
+
+const TOL: f32 = 1e-6;
+
+/// |a - b| ≤ tol · (1 + |b|) per element — absolute near zero, relative
+/// for large entries (loss sums reach ~C·ln V ≈ 180 at C=32).
+fn assert_close(ctx: &str, got: &Tensor, want: &Tensor, tol: f32) {
+    assert_eq!(got.shape(), want.shape(), "{ctx}: shape mismatch");
+    for (i, (a, b)) in got.data().iter().zip(want.data()).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{ctx}[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+/// Deterministic non-trivial problem: random tokens/labels, a *nonzero*
+/// incoming KV state (exercises the inter-chunk term) and a nonzero
+/// outgoing-state cotangent (exercises the state-update backward).
+fn problem(b: &Bundle, salt: u64) -> (Vec<i32>, Vec<i32>, Tensor, Tensor) {
+    let c = b.chunk_len;
+    let mut rng = Rng::new(17).fork(salt);
+    let vocab = b.config.vocab as u64;
+    let tokens: Vec<i32> = (0..c).map(|_| rng.below(vocab) as i32).collect();
+    let labels: Vec<i32> = (0..c).map(|_| rng.below(vocab) as i32).collect();
+    let mut kv_in = Tensor::zeros(&b.kv_state_shape);
+    Rng::new(17).fork(salt + 1).fill_normal(kv_in.data_mut(), 0.1);
+    let mut dkv_out = Tensor::zeros(&b.kv_state_shape);
+    Rng::new(17).fork(salt + 2).fill_normal(dkv_out.data_mut(), 0.1);
+    (tokens, labels, kv_in, dkv_out)
+}
+
+fn fwd_rest(c: usize, tokens: &[i32], labels: &[i32], kv_in: &Tensor) -> Vec<Value> {
+    vec![
+        IntTensor::new(vec![c], tokens.to_vec()).into(),
+        IntTensor::new(vec![c], labels.to_vec()).into(),
+        kv_in.clone().into(),
+    ]
+}
+
+fn bwd_rest(
+    c: usize,
+    tokens: &[i32],
+    labels: &[i32],
+    kv_in: &Tensor,
+    dkv_out: &Tensor,
+    loss_scale: f32,
+) -> Vec<Value> {
+    let mut rest = fwd_rest(c, tokens, labels, kv_in);
+    rest.push(dkv_out.clone().into());
+    rest.push(Tensor::scalar(loss_scale).into());
+    rest
+}
+
+/// (b): the GEMM engine against the scalar oracle, forward and backward,
+/// on both built-in model families and two chunkings.
+#[test]
+fn gemm_engine_matches_scalar_reference() {
+    for config in ["tiny", "tiny_lt"] {
+        for c in [8usize, 32] {
+            let b = load_bundle(config, c).unwrap();
+            let dev = NativeDevice::new(&b, &[]).unwrap();
+            let params = ParamStore::init(&b, 2);
+            let (tokens, labels, kv_in, dkv_out) = problem(&b, c as u64);
+            let ctx = format!("{config}/C={c}");
+            let loss_scale = 1.0 / c as f32;
+
+            // forward
+            let mut out = dev
+                .exec_parts("chunk_fwd", params.tensors(), &fwd_rest(c, &tokens, &labels, &kv_in))
+                .unwrap();
+            let kv_out = out.remove(1).into_f32();
+            let loss = out.remove(0).into_f32();
+            let (loss_ref, kv_out_ref) =
+                reference::chunk_fwd(&b, params.tensors(), &tokens, &labels, &kv_in);
+            assert_close(&format!("{ctx} loss"), &loss, &Tensor::scalar(loss_ref), TOL);
+            assert_close(&format!("{ctx} kv_out"), &kv_out, &kv_out_ref, TOL);
+
+            // backward
+            let mut out = dev
+                .exec_parts(
+                    "chunk_bwd",
+                    params.tensors(),
+                    &bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, loss_scale),
+                )
+                .unwrap();
+            let loss = out.pop().unwrap().into_f32();
+            let dkv_in = out.pop().unwrap().into_f32();
+            let grads: Vec<Tensor> = out.into_iter().map(Value::into_f32).collect();
+            let (grads_ref, dkv_in_ref, loss_ref) = reference::chunk_bwd(
+                &b,
+                params.tensors(),
+                &tokens,
+                &labels,
+                &kv_in,
+                &dkv_out,
+                loss_scale,
+            );
+            assert_close(&format!("{ctx} bwd loss"), &loss, &Tensor::scalar(loss_ref), TOL);
+            assert_close(&format!("{ctx} dkv_in"), &dkv_in, &dkv_in_ref, TOL);
+            assert_eq!(grads.len(), grads_ref.len(), "{ctx}: grad arity");
+            for (i, (g, gr)) in grads.iter().zip(&grads_ref).enumerate() {
+                assert_close(&format!("{ctx} dparam[{i}]"), g, gr, TOL);
+            }
+        }
+    }
+}
+
+/// (a): a fused backward consuming cached activations must agree with a
+/// recompute-mode backward on every output — and actually take the
+/// cached path (hit counted, memory freed afterwards).
+#[test]
+fn cached_activation_backward_matches_recompute() {
+    for config in ["tiny", "tiny_lt"] {
+        for c in [8usize, 32] {
+            let b = load_bundle(config, c).unwrap();
+            let dev = NativeDevice::new(&b, &[]).unwrap();
+            let params = ParamStore::init(&b, 3);
+            let v = params.version();
+            let (tokens, labels, kv_in, dkv_out) = problem(&b, 100 + c as u64);
+            let ctx = format!("{config}/C={c}");
+            let loss_scale = 1.0 / c as f32;
+            let brest = bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, loss_scale);
+
+            // trainer path: versioned forward retains acts, versioned
+            // backward consumes them (no forward recompute)
+            dev.exec_versioned(
+                "chunk_fwd",
+                params.tensors(),
+                v,
+                &fwd_rest(c, &tokens, &labels, &kv_in),
+            )
+            .unwrap();
+            assert!(dev.acts_cache_bytes() > 0, "{ctx}: forward retained nothing");
+            let cached = dev
+                .exec_versioned("chunk_bwd", params.tensors(), v, &brest)
+                .unwrap();
+            assert_eq!(dev.acts_cache_hits(), 1, "{ctx}: backward did not reuse");
+            assert_eq!(dev.acts_cache_bytes(), 0, "{ctx}: cache not freed");
+
+            // recompute mode: unversioned call cannot see the cache
+            let recomputed = dev.exec_parts("chunk_bwd", params.tensors(), &brest).unwrap();
+            assert_eq!(dev.acts_cache_hits(), 1, "{ctx}: recompute path hit the cache");
+
+            assert_eq!(cached.len(), recomputed.len());
+            for (i, (a, b)) in cached.iter().zip(&recomputed).enumerate() {
+                assert_close(&format!("{ctx} out[{i}]"), a.as_f32(), b.as_f32(), TOL);
+            }
+        }
+    }
+}
+
+/// The unfused twins (the Table-5 ablation baseline) must never touch
+/// the activation cache, even on the versioned trainer path — that is
+/// precisely what makes fused-vs-unfused a real recompute distinction.
+#[test]
+fn unfused_twins_never_use_the_activation_cache() {
+    let b = load_bundle("tiny", 8).unwrap();
+    let c = b.chunk_len;
+    let dev =
+        NativeDevice::new(&b, &["chunk_fwd_unfused", "chunk_bwd_unfused"]).unwrap();
+    let params = ParamStore::init(&b, 4);
+    let v = params.version();
+    let (tokens, labels, kv_in, dkv_out) = problem(&b, 7);
+
+    dev.exec_versioned(
+        "chunk_fwd_unfused",
+        params.tensors(),
+        v,
+        &fwd_rest(c, &tokens, &labels, &kv_in),
+    )
+    .unwrap();
+    assert_eq!(dev.acts_cache_bytes(), 0, "unfused forward retained activations");
+    dev.exec_versioned(
+        "chunk_bwd_unfused",
+        params.tensors(),
+        v,
+        &bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, 0.5),
+    )
+    .unwrap();
+    assert_eq!(dev.acts_cache_hits(), 0, "unfused backward used the cache");
+}
