@@ -1,24 +1,109 @@
 //! §Perf micro-benchmarks of the L3 hot path: chunk-program latency
-//! (GEMM engine vs the pre-refactor scalar reference), ring-message
-//! serialization, ring hop, gradient all-reduce.
+//! (GEMM engine vs the pre-refactor scalar reference), the forward+
+//! backward ring under the sequential vs overlapped (two-phase)
+//! schedule, ring-message serialization, ring hop, gradient all-reduce.
 //!
 //! Run: cargo bench --bench perf_hotpath
 //!
 //! Besides the rendered table, writes `BENCH_perf.json` at the repo root
-//! (per-row mean/p50/p95 in seconds plus the fwd/bwd speedups) so the
-//! perf trajectory is machine-readable across PRs. The "pre-refactor"
-//! rows run `runtime::kernel::reference` — the scalar kernels and
-//! per-call parameter conversion the backend shipped before the kernel
-//! engine — so before and after come from one binary on one machine.
+//! (per-row mean/p50/p95 in seconds plus the fwd/bwd speedups and the
+//! ring-overlap speedup) so the perf trajectory is machine-readable
+//! across PRs. The "pre-refactor" rows run `runtime::kernel::reference`
+//! — the scalar kernels and per-call parameter conversion the backend
+//! shipped before the kernel engine — so before and after come from one
+//! binary on one machine.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use lasp::comm::{CommWorld, Payload};
+use lasp::coordinator::{
+    backward_chunk, forward_chunk, KvCache, Placement, RingCtx, RingPhase,
+};
 use lasp::model::ParamStore;
 use lasp::runtime::kernel::reference;
 use lasp::runtime::{load_bundle, zero_kv, Device};
 use lasp::tensor::{IntTensor, Tensor, Value};
-use lasp::util::stats::{bench, Summary, Table};
+use lasp::util::stats::{bench, PhaseTimer, Summary, Table};
+
+/// Wall-clock of one full fwd+bwd ring step over T simulated devices
+/// (barrier-to-barrier on rank 0), sequential vs overlapped schedule.
+/// The critical path of the sequential forward ring is ~T full chunk
+/// computations; the overlapped one hides the KV-independent intra work
+/// of every waiting rank behind its predecessors' compute.
+fn ring_wallclock(overlap: bool, warmup: usize, iters: usize) -> Summary {
+    let t = 4usize;
+    let bundle = Arc::new(load_bundle("tiny", 32).unwrap());
+    let placement = Placement::new(t, t);
+    let world = CommWorld::new(t);
+    let handles: Vec<_> = world
+        .communicators()
+        .into_iter()
+        .map(|comm| {
+            let bundle = Arc::clone(&bundle);
+            let placement = placement.clone();
+            std::thread::spawn(move || -> Option<Vec<f64>> {
+                let names = [
+                    "chunk_fwd",
+                    "chunk_bwd",
+                    "chunk_intra_fwd",
+                    "chunk_inter_fwd",
+                    "chunk_bwd_intra",
+                    "chunk_bwd_inter",
+                ];
+                let dev = Device::from_arc(Arc::clone(&bundle), &names).unwrap();
+                let params = ParamStore::init(&bundle, 0);
+                let rank = comm.rank();
+                let c = bundle.chunk_len;
+                let tokens: Vec<i32> =
+                    (0..c as i32).map(|i| (i + rank as i32) % 23).collect();
+                let labels: Vec<i32> =
+                    (0..c as i32).map(|i| (i + 1 + rank as i32) % 23).collect();
+                let loss_scale = 1.0 / (c * t) as f32;
+                let mut cache = KvCache::new(true, 1);
+                let mut timer = PhaseTimer::default();
+                let mut samples = Vec::with_capacity(iters);
+                for it in 0..warmup + iters {
+                    comm.barrier();
+                    let t0 = Instant::now();
+                    let ctx = RingCtx {
+                        dev: &dev,
+                        comm: &comm,
+                        placement: &placement,
+                        params: &params,
+                        step: it,
+                        fused: true,
+                        overlap,
+                    };
+                    forward_chunk(&ctx, &tokens, &labels, &mut cache, 0,
+                                  RingPhase::Forward, &mut timer)
+                        .unwrap();
+                    backward_chunk(&ctx, &tokens, &labels, &cache, 0, None,
+                                   loss_scale, &mut timer)
+                        .unwrap();
+                    comm.barrier();
+                    if it >= warmup {
+                        samples.push(t0.elapsed().as_secs_f64());
+                    }
+                    cache.clear();
+                    dev.clear_acts_cache();
+                }
+                if rank == 0 {
+                    Some(samples)
+                } else {
+                    None
+                }
+            })
+        })
+        .collect();
+    let mut samples = None;
+    for h in handles {
+        if let Some(s) = h.join().unwrap() {
+            samples = Some(s);
+        }
+    }
+    Summary::of(&samples.unwrap())
+}
 
 fn main() {
     let mut tab = Table::new(&["hot path", "mean", "p50", "p95"]);
@@ -118,7 +203,16 @@ fn main() {
     });
     row(&mut tab, &mut json_rows, "chunk_bwd recompute (tiny/C=32)", eng_bwd_rec);
 
-    // 2) ring-message serialization of a KV state (tensor -> payload)
+    // 2) the full fwd+bwd ring, sequential vs overlapped schedule — the
+    //    forward-ring critical path is what the two-phase split shrinks
+    let ring_seq = ring_wallclock(false, 2, 12);
+    row(&mut tab, &mut json_rows, "ring fwd+bwd sequential (tiny/C=32,T=4)",
+        ring_seq.clone());
+    let ring_ovl = ring_wallclock(true, 2, 12);
+    row(&mut tab, &mut json_rows, "ring fwd+bwd overlapped (tiny/C=32,T=4)",
+        ring_ovl.clone());
+
+    // 3) ring-message serialization of a KV state (tensor -> payload)
     let kv = zero_kv(&b);
     let s = bench(10, 200, || {
         let p = Payload::F32(kv.data().to_vec());
@@ -126,7 +220,7 @@ fn main() {
     });
     row(&mut tab, &mut json_rows, "tensor->payload (KV state)", s);
 
-    // 3) ring hop over the comm substrate (KV-state sized)
+    // 4) ring hop over the comm substrate (KV-state sized)
     let world = CommWorld::new(2);
     let comms = world.communicators();
     let (c0, c1) = (comms[0].clone(), comms[1].clone());
@@ -143,7 +237,7 @@ fn main() {
     row(&mut tab, &mut json_rows, "ring hop send (KV state)", s);
     h.join().unwrap();
 
-    // 4) gradient all-reduce (tiny model, W=4)
+    // 5) gradient all-reduce (tiny model, W=4)
     let world = CommWorld::new(4);
     let n = params.numel();
     let handles: Vec<_> = world
@@ -171,16 +265,27 @@ fn main() {
     println!("{}", tab.render());
     let fwd_speedup = ref_fwd.mean / eng_fwd.mean;
     let bwd_speedup = ref_bwd.mean / eng_bwd.mean;
+    let ring_speedup = ring_seq.mean / ring_ovl.mean;
     println!("speedup vs pre-refactor  chunk_fwd {fwd_speedup:.2}x  chunk_bwd {bwd_speedup:.2}x");
+    println!("ring overlap speedup (fwd+bwd ring, T=4)  {ring_speedup:.2}x");
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
-    std::fs::write(path, render_json(&json_rows, fwd_speedup, bwd_speedup)).unwrap();
+    std::fs::write(
+        path,
+        render_json(&json_rows, fwd_speedup, bwd_speedup, ring_speedup),
+    )
+    .unwrap();
     println!("wrote {path}");
 }
 
 /// Hand-rolled JSON (no serde in the offline vendor set). Seconds
 /// throughout; `{:e}` emits valid JSON number syntax.
-fn render_json(rows: &[(String, Summary)], fwd_speedup: f64, bwd_speedup: f64) -> String {
+fn render_json(
+    rows: &[(String, Summary)],
+    fwd_speedup: f64,
+    bwd_speedup: f64,
+    ring_speedup: f64,
+) -> String {
     let mut s = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"rows\": [\n");
     for (i, (name, sum)) in rows.iter().enumerate() {
         s += &format!(
@@ -194,8 +299,8 @@ fn render_json(rows: &[(String, Summary)], fwd_speedup: f64, bwd_speedup: f64) -
         );
     }
     s += &format!(
-        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}}\n}}\n",
-        fwd_speedup, bwd_speedup
+        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}},\n  \"ring_overlap_speedup\": {:.3}\n}}\n",
+        fwd_speedup, bwd_speedup, ring_speedup
     );
     s
 }

@@ -97,7 +97,6 @@ impl MemoryBreakdown {
 /// Per-GPU memory for training `shape` on sequence length `n` with
 /// sequence-parallel size `t` (t=1 ⇒ no SP), data-parallel width `dp`,
 /// the given backend, method, and optional activation checkpointing.
-#[allow(clippy::too_many_arguments)]
 pub fn memory_per_gpu(
     shape: &ModelShape,
     method: SpMethod,
@@ -155,7 +154,6 @@ pub fn memory_per_gpu(
 }
 
 /// Largest sequence length (in 2K steps) trainable under `hbm` bytes.
-#[allow(clippy::too_many_arguments)]
 pub fn max_seq_len(
     shape: &ModelShape,
     method: SpMethod,

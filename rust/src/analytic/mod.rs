@@ -16,4 +16,7 @@ pub mod speed;
 pub use comm_volume::{volume_elements, SpMethod};
 pub use memory::{max_seq_len, memory_per_gpu, DdpBackend, MemoryBreakdown};
 pub use models::ModelShape;
-pub use speed::{step_time, throughput_tokens_per_sec};
+pub use speed::{
+    step_time, step_time_scheduled, throughput_tokens_per_sec,
+    throughput_tokens_per_sec_scheduled, RingSchedule,
+};

@@ -261,8 +261,14 @@ impl Communicator {
 
     // ---- barrier ---------------------------------------------------------
 
+    /// Sense-reversing barrier with the same total-elapsed deadlock
+    /// trip-wire as the blocking recv: a rank that dies before reaching
+    /// the barrier must turn into a bounded panic on the waiters, not an
+    /// unbounded hang (the trainer joins workers before reading results,
+    /// so a silent hang here would never surface the real error).
     pub fn barrier(&self) {
         let shared = &self.shared;
+        let deadline = Instant::now() + RECV_TIMEOUT;
         let mut g = shared.barrier_count.lock().unwrap();
         let gen = g.1;
         g.0 += 1;
@@ -272,7 +278,18 @@ impl Communicator {
             shared.barrier_cv.notify_all();
         } else {
             while g.1 == gen {
-                g = shared.barrier_cv.wait(g).unwrap();
+                let now = Instant::now();
+                if now >= deadline {
+                    panic!(
+                        "comm: barrier timed out after {RECV_TIMEOUT:?} — \
+                         a rank died before reaching it?"
+                    );
+                }
+                let (guard, _) = shared
+                    .barrier_cv
+                    .wait_timeout(g, deadline - now)
+                    .unwrap();
+                g = guard;
             }
         }
     }

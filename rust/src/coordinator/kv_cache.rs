@@ -32,11 +32,25 @@ impl KvCache {
         self.enabled
     }
 
+    /// Number of micro-batch slots this cache was constructed with.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
     /// Store the incoming state for `slot` (no-op when disabled).
+    ///
+    /// An out-of-range slot is a coordinator bug; `put` and `get` report
+    /// it with the same clear assert instead of `put` panicking on a raw
+    /// index while `get` silently returned `None`.
     pub fn put(&mut self, slot: usize, kv_in: &Tensor) {
         if !self.enabled {
             return;
         }
+        assert!(
+            slot < self.slots.len(),
+            "KvCache::put: slot {slot} out of range (n_slots = {})",
+            self.slots.len()
+        );
         self.slots[slot] = Some(kv_in.clone());
         let held: usize = self
             .slots
@@ -47,9 +61,16 @@ impl KvCache {
         self.peak_bytes = self.peak_bytes.max(held);
     }
 
-    /// Retrieve (and keep) the cached state for `slot`.
+    /// Retrieve (and keep) the cached state for `slot`. `None` means the
+    /// slot is valid but empty (cache disabled, or never filled);
+    /// out-of-range slots assert exactly like [`KvCache::put`].
     pub fn get(&self, slot: usize) -> Option<&Tensor> {
-        self.slots.get(slot).and_then(|s| s.as_ref())
+        assert!(
+            slot < self.slots.len(),
+            "KvCache::get: slot {slot} out of range (n_slots = {})",
+            self.slots.len()
+        );
+        self.slots[slot].as_ref()
     }
 
     /// Drop all cached states (end of step).
@@ -85,6 +106,48 @@ mod tests {
         let mut c = KvCache::new(false, 1);
         c.put(0, &Tensor::zeros(&[4]));
         assert!(c.get(0).is_none());
+        assert_eq!(c.peak_bytes(), 0);
+    }
+
+    #[test]
+    fn multi_slot_states_are_independent() {
+        let mut c = KvCache::new(true, 3);
+        assert_eq!(c.n_slots(), 3);
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]);
+        c.put(0, &a);
+        c.put(2, &b);
+        assert_eq!(c.get(0).unwrap().data(), &[1.0, 2.0]);
+        assert!(c.get(1).is_none());
+        assert_eq!(c.get(2).unwrap().data(), &[3.0, 4.0]);
+        // overwriting one slot leaves the others intact
+        c.put(0, &b);
+        assert_eq!(c.get(0).unwrap().data(), &[3.0, 4.0]);
+        assert_eq!(c.get(2).unwrap().data(), &[3.0, 4.0]);
+        // peak accounts for all resident slots together
+        assert_eq!(c.peak_bytes(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "KvCache::put: slot 1 out of range")]
+    fn put_out_of_range_asserts_clearly() {
+        let mut c = KvCache::new(true, 1);
+        c.put(1, &Tensor::zeros(&[2]));
+    }
+
+    #[test]
+    #[should_panic(expected = "KvCache::get: slot 5 out of range")]
+    fn get_out_of_range_asserts_clearly() {
+        let c = KvCache::new(true, 2);
+        let _ = c.get(5);
+    }
+
+    #[test]
+    fn disabled_put_never_indexes_out_of_range() {
+        // disabled put is a no-op even for wild slots (nothing stored,
+        // so there is nothing to range-check against)
+        let mut c = KvCache::new(false, 1);
+        c.put(7, &Tensor::zeros(&[2]));
         assert_eq!(c.peak_bytes(), 0);
     }
 

@@ -13,5 +13,5 @@ pub mod trainer;
 
 pub use data::{distribute, Placement};
 pub use kv_cache::KvCache;
-pub use ring::{backward_chunk, forward_chunk, RingPhase};
+pub use ring::{backward_chunk, forward_chunk, RingCtx, RingPhase};
 pub use trainer::{train, TrainConfig, TrainResult};

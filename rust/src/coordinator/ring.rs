@@ -1,10 +1,29 @@
 //! The LASP ring schedules (Algorithms 2 & 3) at the chunk level.
 //!
 //! Forward: chunk `t` receives `KV_{t-1}` from its *group-relative*
-//! predecessor, caches it, executes the fused chunk kernel (intra + inter
-//! + state update lowered into one program), and sends `KV_t` to its
-//! successor. The message is a `(L, H, dk, dv)` stack — **sequence-length
-//! independent**, the paper's central communication claim.
+//! predecessor, caches it, executes the chunk kernel, and sends `KV_t`
+//! to its successor. The message is a `(L, H, dk, dv)` stack —
+//! **sequence-length independent**, the paper's central communication
+//! claim.
+//!
+//! Two schedules share this file and are bitwise-identical in results
+//! (`tests/overlap_parity.rs`); they differ only in *when* work runs:
+//!
+//!  * **sequential** (`overlap = false`, the oracle): one fused
+//!    `chunk_fwd` call after the recv — rank `t` idles for `t` full
+//!    chunk computations even though only the inter-chunk term needs
+//!    the incoming state;
+//!  * **overlapped** (`overlap = true`, the paper's intent): the
+//!    KV-independent `chunk_intra_fwd` is issued *before* the recv, so
+//!    the state transfer and the predecessor's compute hide behind it;
+//!    `chunk_inter_fwd` completes the chunk once the state lands. The
+//!    backward mirrors it: `chunk_bwd_intra` (loss head, final norm,
+//!    top-layer parameter grads) runs while `dKV` is in flight,
+//!    `chunk_bwd_inter` finishes after the recv.
+//!
+//! Every blocking recv is accounted under the `comm_wait` phase and
+//! every kernel call under `compute`, so the overlap is directly
+//! measurable in the trainer's [`PhaseTimer`] breakdown.
 //!
 //! Backward: chunk `t` receives `dKV` from its successor (the cotangent
 //! of its `KV_out`), loads the cached `KV_{t-1}`, runs the chunk backward
@@ -28,6 +47,7 @@ use crate::comm::Communicator;
 use crate::model::ParamStore;
 use crate::runtime::Device;
 use crate::tensor::{IntTensor, Tensor, Value};
+use crate::util::stats::PhaseTimer;
 
 /// Which ring a message belongs to within one training step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,6 +70,43 @@ pub fn ring_tag(step: usize, phase: RingPhase) -> u64 {
     ((step as u64 & 0x3FFF) << 2) | phase as u64
 }
 
+/// Everything that is constant across one rank's ring calls within a
+/// training step — bundled so the per-chunk entry points stay readable.
+pub struct RingCtx<'a> {
+    pub dev: &'a Device,
+    pub comm: &'a Communicator,
+    pub placement: &'a Placement,
+    pub params: &'a ParamStore,
+    pub step: usize,
+    /// kernel-fusion ablation (Table 5): selects the `_unfused` twins
+    pub fused: bool,
+    /// two-phase overlapped schedule; requires the fused kernels, so it
+    /// silently degrades to sequential when `fused` is off
+    pub overlap: bool,
+}
+
+impl RingCtx<'_> {
+    fn overlapped(&self) -> bool {
+        self.overlap && self.fused
+    }
+
+    fn exec(
+        &self,
+        timer: &mut PhaseTimer,
+        name: &str,
+        rest: &[Value],
+    ) -> Result<Vec<Value>> {
+        timer.time("compute", || {
+            self.dev.exec_versioned(
+                name,
+                self.params.tensors(),
+                self.params.version(),
+                rest,
+            )
+        })
+    }
+}
+
 /// Forward-ring output for one chunk.
 pub struct ForwardOut {
     /// summed next-token NLL over this chunk
@@ -68,58 +125,69 @@ pub struct BackwardOut {
     pub loss_sum: f32,
 }
 
-/// Algorithm 2 for one rank. `fused` selects the kernel-fusion ablation
-/// twin; `slot` is the micro-batch slot for the KV cache; `phase` is
-/// [`RingPhase::Forward`] for the real ring and [`RingPhase::Replay`]
-/// for the kv-cache-ablation replay.
-#[allow(clippy::too_many_arguments)]
+/// Algorithm 2 for one rank. `slot` is the micro-batch slot for the KV
+/// cache; `phase` is [`RingPhase::Forward`] for the real ring and
+/// [`RingPhase::Replay`] for the kv-cache-ablation replay.
 pub fn forward_chunk(
-    dev: &Device,
-    comm: &Communicator,
-    placement: &Placement,
-    params: &ParamStore,
+    ctx: &RingCtx,
     tokens: &[i32],
     labels: &[i32],
     cache: &mut KvCache,
     slot: usize,
-    fused: bool,
-    step: usize,
     phase: RingPhase,
+    timer: &mut PhaseTimer,
 ) -> Result<ForwardOut> {
-    let rank = comm.rank();
-    let group = placement.sp_group(placement.group_of(rank));
-    let t_idx = placement.chunk_index(rank);
+    let rank = ctx.comm.rank();
+    let group = ctx.placement.sp_group(ctx.placement.group_of(rank));
+    let t_idx = ctx.placement.chunk_index(rank);
     debug_assert_eq!(group.ranks[t_idx], rank, "placement/group mismatch");
-    let t_max = placement.sp_size - 1;
-    let kv_shape = &dev.bundle().kv_state_shape;
-    let tag = ring_tag(step, phase);
+    let t_max = ctx.placement.sp_size - 1;
+    let kv_shape = &ctx.dev.bundle().kv_state_shape;
+    let tag = ring_tag(ctx.step, phase);
+    let c = ctx.dev.bundle().chunk_len;
+
+    // Overlap phase 1: the KV-independent intra work is issued *before*
+    // the recv — the state transfer hides behind it.
+    if ctx.overlapped() {
+        let intra_rest: Vec<Value> =
+            vec![IntTensor::new(vec![c], tokens.to_vec()).into()];
+        ctx.exec(timer, "chunk_intra_fwd", &intra_rest)?;
+    }
 
     // Recv KV_{t-1} from the group predecessor (zeros for the first chunk).
     let kv_in = if t_idx > 0 {
-        comm.recv_tensor(group.ranks[t_idx - 1], tag, kv_shape)
+        timer.time("comm_wait", || {
+            ctx.comm.recv_tensor(group.ranks[t_idx - 1], tag, kv_shape)
+        })
     } else {
         Tensor::zeros(kv_shape)
     };
     cache.put(slot, &kv_in);
 
-    let c = dev.bundle().chunk_len;
     let rest: Vec<Value> = vec![
         IntTensor::new(vec![c], tokens.to_vec()).into(),
         IntTensor::new(vec![c], labels.to_vec()).into(),
         kv_in.clone().into(),
     ];
-    let name = if fused { "chunk_fwd" } else { "chunk_fwd_unfused" };
     // versioned call: the fused kernel retains its activations (§4.2)
     // for the paired backward, and the backend reuses its cached f64
     // parameter conversion across the whole step
-    let mut out =
-        dev.exec_versioned(name, params.tensors(), params.version(), &rest)?;
+    let name = if ctx.overlapped() {
+        "chunk_inter_fwd"
+    } else if ctx.fused {
+        "chunk_fwd"
+    } else {
+        "chunk_fwd_unfused"
+    };
+    let mut out = ctx.exec(timer, name, &rest)?;
     let kv_out = out.remove(1).into_f32();
     let loss_sum = out.remove(0).as_f32().item();
 
     // Send KV_t to the group successor.
     if t_idx < t_max {
-        comm.send_tensor(group.ranks[t_idx + 1], tag, &kv_out);
+        timer.time("comm_send", || {
+            ctx.comm.send_tensor(group.ranks[t_idx + 1], tag, &kv_out)
+        });
     }
     Ok(ForwardOut { loss_sum, kv_in, kv_out })
 }
@@ -127,44 +195,55 @@ pub fn forward_chunk(
 /// Algorithm 3 for one rank. `kv_in_fallback` must be supplied when the
 /// cache is disabled (Table-5 ablation replays the forward ring to
 /// obtain it).
-#[allow(clippy::too_many_arguments)]
 pub fn backward_chunk(
-    dev: &Device,
-    comm: &Communicator,
-    placement: &Placement,
-    params: &ParamStore,
+    ctx: &RingCtx,
     tokens: &[i32],
     labels: &[i32],
     cache: &KvCache,
     slot: usize,
     kv_in_fallback: Option<&Tensor>,
     loss_scale: f32,
-    fused: bool,
-    step: usize,
+    timer: &mut PhaseTimer,
 ) -> Result<BackwardOut> {
-    let rank = comm.rank();
-    let group = placement.sp_group(placement.group_of(rank));
-    let t_idx = placement.chunk_index(rank);
+    let rank = ctx.comm.rank();
+    let group = ctx.placement.sp_group(ctx.placement.group_of(rank));
+    let t_idx = ctx.placement.chunk_index(rank);
     debug_assert_eq!(group.ranks[t_idx], rank, "placement/group mismatch");
-    let t_max = placement.sp_size - 1;
-    let kv_shape = &dev.bundle().kv_state_shape;
-    let tag = ring_tag(step, RingPhase::Backward);
+    let t_max = ctx.placement.sp_size - 1;
+    let kv_shape = &ctx.dev.bundle().kv_state_shape;
+    let tag = ring_tag(ctx.step, RingPhase::Backward);
+    let c = ctx.dev.bundle().chunk_len;
 
-    // Recv dKV from the group successor (zeros for the last chunk).
-    let dkv_out = if t_idx < t_max {
-        comm.recv_tensor(group.ranks[t_idx + 1], tag, kv_shape)
-    } else {
-        Tensor::zeros(kv_shape)
-    };
-
-    // Load KV_{t-1}: from the HBM cache (paper §2.4) or the replayed ring.
+    // Load KV_{t-1}: from the HBM cache (paper §2.4) or the replayed
+    // ring. Needed *before* the recv — the intra phase differentiates
+    // against the cached forward state.
     let kv_in = cache
         .get(slot)
         .or(kv_in_fallback)
         .expect("KV state neither cached nor recomputed — coordinator bug")
         .clone();
 
-    let c = dev.bundle().chunk_len;
+    // Overlap phase 1: loss head + final norm + top-layer parameter
+    // grads run while the dKV cotangent is still in flight.
+    if ctx.overlapped() {
+        let intra_rest: Vec<Value> = vec![
+            IntTensor::new(vec![c], tokens.to_vec()).into(),
+            IntTensor::new(vec![c], labels.to_vec()).into(),
+            kv_in.clone().into(),
+            Tensor::scalar(loss_scale).into(),
+        ];
+        ctx.exec(timer, "chunk_bwd_intra", &intra_rest)?;
+    }
+
+    // Recv dKV from the group successor (zeros for the last chunk).
+    let dkv_out = if t_idx < t_max {
+        timer.time("comm_wait", || {
+            ctx.comm.recv_tensor(group.ranks[t_idx + 1], tag, kv_shape)
+        })
+    } else {
+        Tensor::zeros(kv_shape)
+    };
+
     let rest: Vec<Value> = vec![
         IntTensor::new(vec![c], tokens.to_vec()).into(),
         IntTensor::new(vec![c], labels.to_vec()).into(),
@@ -172,11 +251,16 @@ pub fn backward_chunk(
         dkv_out.into(),
         Tensor::scalar(loss_scale).into(),
     ];
-    let name = if fused { "chunk_bwd" } else { "chunk_bwd_unfused" };
     // versioned call: the fused backward consumes the activations the
     // forward ring retained (freeing them), instead of recomputing
-    let mut out =
-        dev.exec_versioned(name, params.tensors(), params.version(), &rest)?;
+    let name = if ctx.overlapped() {
+        "chunk_bwd_inter"
+    } else if ctx.fused {
+        "chunk_bwd"
+    } else {
+        "chunk_bwd_unfused"
+    };
+    let mut out = ctx.exec(timer, name, &rest)?;
 
     // outputs: dparams…, dkv_in, loss
     let loss_sum = out.pop().unwrap().as_f32().item();
@@ -185,7 +269,9 @@ pub fn backward_chunk(
 
     // Send dKV_in to the group predecessor.
     if t_idx > 0 {
-        comm.send_tensor(group.ranks[t_idx - 1], tag, &dkv_in);
+        timer.time("comm_send", || {
+            ctx.comm.send_tensor(group.ranks[t_idx - 1], tag, &dkv_in)
+        });
     }
     Ok(BackwardOut { grads, loss_sum })
 }

@@ -15,7 +15,7 @@ use anyhow::{Context, Result};
 
 use super::data::{distribute, Placement};
 use super::kv_cache::KvCache;
-use super::ring::{backward_chunk, forward_chunk, RingPhase};
+use super::ring::{backward_chunk, forward_chunk, RingCtx, RingPhase};
 use crate::analytic::DdpBackend;
 use crate::comm::{CommWorld, Communicator, OpKind};
 use crate::model::ParamStore;
@@ -44,6 +44,11 @@ pub struct TrainConfig {
     pub fused: bool,
     /// KV-state-cache ablation (Table 5): off ⇒ replay the forward ring
     pub kv_cache: bool,
+    /// two-phase overlapped ring schedule (default): intra-chunk work
+    /// runs while the KV/dKV state is in flight. Bitwise-identical to
+    /// the sequential oracle (`overlap = false`); requires `fused`, so
+    /// it degrades to sequential under the fusion ablation.
+    pub overlap: bool,
     /// log every k steps (0 = silent)
     pub log_every: usize,
 }
@@ -62,6 +67,7 @@ impl TrainConfig {
             seed: 0,
             fused: true,
             kv_cache: true,
+            overlap: true,
             log_every: 0,
         }
     }
@@ -105,9 +111,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     let placement = Placement::new(world, cfg.sp_size);
     let comm_world = CommWorld::new(world);
     let comms = comm_world.communicators();
-    let (tx, rx) = mpsc::channel::<(Vec<f32>, ParamStore, PhaseTimer, usize)>();
+    let (tx, rx) = mpsc::channel::<WorkerResult>();
 
-    let t0 = Instant::now();
     let mut handles = Vec::new();
     for comm in comms {
         let cfg = cfg.clone();
@@ -120,19 +125,45 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     }
     drop(tx);
 
-    let (losses, final_params, phases, kv_peak) =
-        rx.recv().context("no result from rank 0 (worker panicked?)")?;
-    for h in handles {
-        h.join().map_err(|e| anyhow::anyhow!("worker panicked: {e:?}"))??;
+    // Join every worker *before* touching the result channel: a failing
+    // worker must surface its own error, not the generic "no result from
+    // rank 0" the channel would report. The first real error (lowest
+    // rank) wins.
+    let mut first_err: Option<anyhow::Error> = None;
+    for (rank, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err =
+                        Some(e.context(format!("worker rank {rank} failed")));
+                }
+            }
+            Err(p) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow::anyhow!(
+                        "worker rank {rank} panicked: {p:?}"
+                    ));
+                }
+            }
+        }
     }
-    let wall = t0.elapsed().as_secs_f64();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let (losses, final_params, phases, kv_peak, step_secs) = rx
+        .recv()
+        .context("rank 0 exited cleanly without a result — coordinator bug")?;
     let tokens = (cfg.seq_len() * cfg.data_groups * cfg.steps) as f64;
 
     let stats = comm_world.stats();
     Ok(TrainResult {
         losses,
         final_params,
-        tokens_per_sec: tokens / wall,
+        // step_secs covers the training steps only — workers barrier
+        // after compile/init, so thread spawn and per-worker device
+        // construction no longer pollute the throughput number.
+        tokens_per_sec: tokens / step_secs.max(1e-12),
         phases,
         ring_bytes: stats.bytes(OpKind::P2p),
         collective_bytes: stats.total_bytes() - stats.bytes(OpKind::P2p),
@@ -140,12 +171,16 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     })
 }
 
+/// What a worker reports back: losses, final params, phase breakdown,
+/// peak KV-cache bytes, and the step-loop wall time (seconds).
+type WorkerResult = (Vec<f32>, ParamStore, PhaseTimer, usize, f64);
+
 fn worker(
     cfg: &TrainConfig,
     bundle: Arc<Bundle>,
     placement: &Placement,
     comm: Communicator,
-    tx: mpsc::Sender<(Vec<f32>, ParamStore, PhaseTimer, usize)>,
+    tx: mpsc::Sender<WorkerResult>,
 ) -> Result<()> {
     let rank = comm.rank();
     let group_id = placement.group_of(rank);
@@ -155,7 +190,18 @@ fn worker(
     // Each thread compiles its own executables (PJRT objects are !Send);
     // the bundle itself is shared, not cloned.
     let names: Vec<&str> = if cfg.fused {
-        vec!["chunk_fwd", "chunk_bwd"]
+        if cfg.overlap {
+            vec![
+                "chunk_fwd",
+                "chunk_bwd",
+                "chunk_intra_fwd",
+                "chunk_inter_fwd",
+                "chunk_bwd_intra",
+                "chunk_bwd_inter",
+            ]
+        } else {
+            vec!["chunk_fwd", "chunk_bwd"]
+        }
     } else {
         vec!["chunk_fwd_unfused", "chunk_bwd_unfused"]
     };
@@ -175,6 +221,11 @@ fn worker(
     // of the global batch.
     let loss_scale = 1.0 / (n * g) as f32;
 
+    // Throughput covers the training steps only: every worker finishes
+    // compile + parameter/optimizer construction before the clock starts.
+    comm.barrier();
+    let t_steps = Instant::now();
+
     let mut losses = Vec::with_capacity(cfg.steps);
     for step in 0..cfg.steps {
         // ---- Algorithm 1: data distribution --------------------------------
@@ -187,31 +238,38 @@ fn worker(
             distribute(&comm, placement, seq.as_deref())
         });
 
-        // ---- Algorithm 2: forward ring -------------------------------------
-        let fwd = phases.time("forward", || {
-            forward_chunk(&dev, &comm, placement, &params, &tokens, &labels,
-                          &mut cache, 0, cfg.fused, step, RingPhase::Forward)
-        })?;
+        let (fwd, bwd) = {
+            let ctx = RingCtx {
+                dev: &dev,
+                comm: &comm,
+                placement,
+                params: &params,
+                step,
+                fused: cfg.fused,
+                overlap: cfg.overlap,
+            };
 
-        // ---- KV-cache ablation: replay the forward ring --------------------
-        let kv_fallback = if cfg.kv_cache {
-            None
-        } else {
-            let mut throwaway = KvCache::new(false, 1);
-            let replay = phases.time("kv_recompute", || {
-                forward_chunk(&dev, &comm, placement, &params, &tokens, &labels,
-                              &mut throwaway, 0, cfg.fused, step,
-                              RingPhase::Replay)
-            })?;
-            Some(replay.kv_in)
+            // ---- Algorithm 2: forward ring ---------------------------------
+            let fwd = forward_chunk(&ctx, &tokens, &labels, &mut cache, 0,
+                                    RingPhase::Forward, &mut phases)?;
+
+            // ---- KV-cache ablation: replay the forward ring ----------------
+            let kv_fallback = if cfg.kv_cache {
+                None
+            } else {
+                let mut throwaway = KvCache::new(false, 1);
+                let replay =
+                    forward_chunk(&ctx, &tokens, &labels, &mut throwaway, 0,
+                                  RingPhase::Replay, &mut phases)?;
+                Some(replay.kv_in)
+            };
+
+            // ---- Algorithm 3: backward ring --------------------------------
+            let bwd = backward_chunk(&ctx, &tokens, &labels, &cache, 0,
+                                     kv_fallback.as_ref(), loss_scale,
+                                     &mut phases)?;
+            (fwd, bwd)
         };
-
-        // ---- Algorithm 3: backward ring -------------------------------------
-        let bwd = phases.time("backward", || {
-            backward_chunk(&dev, &comm, placement, &params, &tokens, &labels,
-                           &cache, 0, kv_fallback.as_ref(), loss_scale,
-                           cfg.fused, step)
-        })?;
         debug_assert!((bwd.loss_sum - fwd.loss_sum).abs()
             <= 1e-3 * fwd.loss_sum.abs().max(1.0));
 
@@ -226,6 +284,15 @@ fn worker(
             "activation cache not drained by the backward ring"
         );
         dev.clear_acts_cache();
+        // Two-phase hygiene: every intra call must have been completed by
+        // its paired inter call within the step (byte accounting is the
+        // per-worker memory bound, like the activation cache above).
+        debug_assert_eq!(
+            dev.phase_partial_bytes(),
+            0,
+            "two-phase partials not consumed by the inter kernels"
+        );
+        dev.clear_phase_partials();
 
         // ---- gradient sync + optimizer (hybrid: sum over chunks ∧ groups) ---
         let mut grads = bwd.grads;
@@ -249,8 +316,9 @@ fn worker(
         }
     }
 
+    let step_secs = t_steps.elapsed().as_secs_f64();
     if is_rank0 {
-        let _ = tx.send((losses, params, phases, cache.peak_bytes()));
+        let _ = tx.send((losses, params, phases, cache.peak_bytes(), step_secs));
     }
     Ok(())
 }

@@ -16,6 +16,16 @@
 //!     implements the paper's contribution (`coordinator`) plus
 //!     baselines, optimizers, the training loop and the analytic scale
 //!     model.
+
+// The kernel/coordinator surface is gated by `cargo clippy -- -D
+// warnings` in CI. Two style lints are opted out crate-wide: the kernel
+// engine deliberately writes explicit index loops over flat (C, d)
+// buffers (iterator-chain rewrites obscure the math and the blocking
+// structure), and the chunk-program entry points mirror a fixed kernel
+// ABI whose arity is not ours to shrink.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod analytic;
 pub mod baselines;
 pub mod cluster;

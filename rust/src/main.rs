@@ -49,7 +49,9 @@ fn main() -> Result<()> {
                 .opt("backend", "ddp", "ddp|legacy|zero1|zero2|zero3|fsdp")
                 .opt("log-every", "5", "log interval")
                 .flag("unfused", "disable kernel fusion (Table-5 ablation)")
-                .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)");
+                .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)")
+                .flag("no-overlap", "sequential ring schedule (the two-phase \
+                      overlap oracle; numerics are bitwise identical)");
             let a = cli.parse_from(&args).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(2)
@@ -64,6 +66,7 @@ fn main() -> Result<()> {
             cfg.backend = parse_backend(a.get("backend"));
             cfg.fused = !a.has("unfused");
             cfg.kv_cache = !a.has("no-kv-cache");
+            cfg.overlap = !a.has("no-overlap");
             cfg.log_every = a.get_usize("log-every");
             let r = train(&cfg)?;
             println!("final loss: {:.4}", r.losses.last().unwrap());

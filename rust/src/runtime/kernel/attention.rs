@@ -81,12 +81,39 @@ fn apply_decay_mask(s: &mut [f64], pw: &[f64], c: usize) {
     }
 }
 
+/// Per-head KV-independent forward partials, retained across the
+/// two-phase boundary (the overlapped ring schedule launches the intra
+/// phase before the incoming state has arrived).
+pub struct HeadIntra {
+    /// (C, dh) intra-chunk output term `[(Qh Khᵀ) ⊙ Λ-mask] Vh`
+    pub(crate) oh: Vec<f64>,
+    /// (C, dh) decay-scaled queries `diag(λ^{i+1}) Qh`
+    pub(crate) qs: Vec<f64>,
+    /// (dh, dh) state-update increment `(diag(λ^{C-1-p}) Kh)ᵀ Vh`
+    pub(crate) kv_add: Vec<f64>,
+}
+
+/// Per-head dKV-independent backward partials (the mirrored split: the
+/// intra phase runs while the `dKV` cotangent is still in flight).
+pub struct HeadBwdIntra {
+    /// (C, dh) — complete: intra dS·Kh term plus inter diag·dOh·KVᵀ term
+    pub(crate) dqh: Vec<f64>,
+    /// (C, dh) — intra dSᵀ·Qh term; awaits `+= diag(λ^{C-1-p}) Vh Dᵀ`
+    pub(crate) dkh: Vec<f64>,
+    /// (C, dh) — intra Sᵀ·dOh term; awaits `+= diag(λ^{C-1-p}) Kh D`
+    pub(crate) dvh: Vec<f64>,
+    /// (C, dh) decay-scaled values `diag(λ^{C-1-p}) Vh`
+    pub(crate) vd: Vec<f64>,
+    /// (C, dh) decay-scaled keys `diag(λ^{C-1-p}) Kh`
+    pub(crate) kd: Vec<f64>,
+}
+
 impl Kernel {
     /// One head of the LASP chunk forward, GEMM form. `q`, `k`, `v` are
     /// merged (C, d); head `hh` occupies columns `[hh*dh, (hh+1)*dh)`.
-    /// `kv` is this head's (dk, dv) incoming state; `kv_out` arrives
-    /// zeroed and receives the outgoing state.
-    #[allow(clippy::too_many_arguments)]
+    /// `kv` is this head's (dk, dv) incoming state; `kv_out` receives the
+    /// outgoing state. Composed of the two phases below so the split and
+    /// single-call schedules execute the identical FP-op sequence.
     pub(crate) fn attention_head(
         &self,
         hh: usize,
@@ -98,6 +125,20 @@ impl Kernel {
         kv_out: &mut [f64],
         ws: &mut Workspace,
     ) {
+        let intra = self.attention_head_intra(hh, q, k, v, ws);
+        self.attention_head_inter(hh, intra, kv, o, kv_out, ws);
+    }
+
+    /// Phase 1 of the head forward: everything with no dependence on the
+    /// incoming KV state (paper §3.3's central observation).
+    pub(crate) fn attention_head_intra(
+        &self,
+        hh: usize,
+        q: &[f64],
+        k: &[f64],
+        v: &[f64],
+        ws: &mut Workspace,
+    ) -> HeadIntra {
         let (c, d, dh) = (self.c, self.d, self.dh);
         let off = hh * dh;
         let pw = &self.pw[hh];
@@ -116,35 +157,61 @@ impl Kernel {
         let mut oh = ws.take(c * dh);
         matmul_into(&mut oh, &s, &vh, c, c, dh, false);
 
-        // inter-chunk: Oh += diag(λ^{i+1}) Qh · KV_in            (Eq. 9)
+        // decay-scaled queries for the inter-chunk term          (Eq. 9)
         let mut qs = ws.take(c * dh);
         scale_rows(&mut qs, &qh, &pw[1..], c, dh);
-        matmul_into(&mut oh, &qs, kv, c, dh, dh, true);
-        scatter_head_add(&oh, o, c, d, off, dh);
 
-        // state update: KV_out = λ^C KV_in + (diag(λ^{C-1-p}) Kh)ᵀ Vh
-        // — a rank-C GEMM                                        (Eq. 10)
-        for (slot, &x) in kv_out.iter_mut().zip(kv) {
-            *slot = pw[c] * x;
-        }
+        // state-update increment (diag(λ^{C-1-p}) Kh)ᵀ Vh — the rank-C
+        // GEMM of Eq. 10, computed into its own buffer so the λ^C KV_in
+        // term can be added once the state arrives
         let mut kd = ws.take(c * dh);
         scale_rows_rev(&mut kd, &kh, pw, c, dh);
-        matmul_tn_into(kv_out, &kd, &vh, c, dh, dh, true);
+        let mut kv_add = ws.take(dh * dh);
+        matmul_tn_into(&mut kv_add, &kd, &vh, c, dh, dh, false);
 
         ws.put(qh);
         ws.put(kh);
         ws.put(vh);
         ws.put(s);
+        ws.put(kd);
+        HeadIntra { oh, qs, kv_add }
+    }
+
+    /// Phase 2 of the head forward: the KV-dependent completion —
+    /// inter-chunk term, merge into `o`, state update.
+    pub(crate) fn attention_head_inter(
+        &self,
+        hh: usize,
+        intra: HeadIntra,
+        kv: &[f64],
+        o: &mut [f64],
+        kv_out: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let (c, d, dh) = (self.c, self.d, self.dh);
+        let off = hh * dh;
+        let pw = &self.pw[hh];
+        let HeadIntra { mut oh, qs, kv_add } = intra;
+
+        // inter-chunk: Oh += diag(λ^{i+1}) Qh · KV_in            (Eq. 9)
+        matmul_into(&mut oh, &qs, kv, c, dh, dh, true);
+        scatter_head_add(&oh, o, c, d, off, dh);
+
+        // state update: KV_out = λ^C KV_in + (diag(λ^{C-1-p}) Kh)ᵀ Vh
+        for ((slot, &x), &a) in kv_out.iter_mut().zip(kv).zip(&kv_add) {
+            *slot = pw[c] * x + a;
+        }
+
         ws.put(oh);
         ws.put(qs);
-        ws.put(kd);
+        ws.put(kv_add);
     }
 
     /// One head of the mirrored backward (Eqs. 14–22, single block):
     /// given `do_` (cotangent of o) and `dkv` (cotangent of KV_out),
     /// accumulates dq/dk/dv into the merged buffers and adds into
-    /// `dkv_in`.
-    #[allow(clippy::too_many_arguments)]
+    /// `dkv_in`. Composed of the two phases below — identical FP-op
+    /// sequence whether called whole or split.
     pub(crate) fn attention_head_bwd(
         &self,
         hh: usize,
@@ -160,6 +227,25 @@ impl Kernel {
         dkv_in: &mut [f64],
         ws: &mut Workspace,
     ) {
+        let intra = self.attention_head_bwd_intra(hh, q, k, v, kv, do_, dkv_in, ws);
+        self.attention_head_bwd_inter(hh, intra, dkv, dq, dk, dv, dkv_in, ws);
+    }
+
+    /// Phase 1 of the head backward: every term with no dependence on the
+    /// in-flight `dKV` cotangent — the intra-chunk score cotangents, the
+    /// inter-chunk dQ term (needs only the *cached* forward `kv`), and
+    /// the `(diag(λ^{i+1}) Qh)ᵀ dOh` contribution to `dkv_in` (Eq. 20).
+    pub(crate) fn attention_head_bwd_intra(
+        &self,
+        hh: usize,
+        q: &[f64],
+        k: &[f64],
+        v: &[f64],
+        kv: &[f64],
+        do_: &[f64],
+        dkv_in: &mut [f64],
+        ws: &mut Workspace,
+    ) -> HeadBwdIntra {
         let (c, d, dh) = (self.c, self.d, self.dh);
         let off = hh * dh;
         let pw = &self.pw[hh];
@@ -199,14 +285,44 @@ impl Kernel {
         scale_rows(&mut qs, &qh, &pw[1..], c, dh);
         matmul_tn_into(dkv_in, &qs, &doh, c, dh, dh, true);
 
-        // state-update cotangents:
-        // dKh += diag(λ^{C-1-p}) Vh Dᵀ                           (Eq. 19)
+        // decay-scaled V/K panels for the dKV-dependent phase
         let mut vd = ws.take(c * dh);
         scale_rows_rev(&mut vd, &vh, pw, c, dh);
-        matmul_nt_into(&mut dkh, &vd, dkv, c, dh, dh, true);
-        // dVh += diag(λ^{C-1-p}) Kh D                            (Eq. 22)
         let mut kd = ws.take(c * dh);
         scale_rows_rev(&mut kd, &kh, pw, c, dh);
+
+        ws.put(qh);
+        ws.put(kh);
+        ws.put(vh);
+        ws.put(doh);
+        ws.put(s);
+        ws.put(ds);
+        ws.put(dos);
+        ws.put(qs);
+        HeadBwdIntra { dqh, dkh, dvh, vd, kd }
+    }
+
+    /// Phase 2 of the head backward: the state-update cotangents that
+    /// needed the received `dkv`, then the merge into the (C, d) buffers.
+    pub(crate) fn attention_head_bwd_inter(
+        &self,
+        hh: usize,
+        intra: HeadBwdIntra,
+        dkv: &[f64],
+        dq: &mut [f64],
+        dk: &mut [f64],
+        dv: &mut [f64],
+        dkv_in: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let (c, d, dh) = (self.c, self.d, self.dh);
+        let off = hh * dh;
+        let pw = &self.pw[hh];
+        let HeadBwdIntra { dqh, mut dkh, mut dvh, vd, kd } = intra;
+
+        // dKh += diag(λ^{C-1-p}) Vh Dᵀ                           (Eq. 19)
+        matmul_nt_into(&mut dkh, &vd, dkv, c, dh, dh, true);
+        // dVh += diag(λ^{C-1-p}) Kh D                            (Eq. 22)
         matmul_into(&mut dvh, &kd, dkv, c, dh, dh, true);
 
         // dKV_in += λ^C D
@@ -218,17 +334,9 @@ impl Kernel {
         scatter_head_add(&dkh, dk, c, d, off, dh);
         scatter_head_add(&dvh, dv, c, d, off, dh);
 
-        ws.put(qh);
-        ws.put(kh);
-        ws.put(vh);
-        ws.put(doh);
-        ws.put(s);
-        ws.put(ds);
         ws.put(dqh);
         ws.put(dkh);
         ws.put(dvh);
-        ws.put(dos);
-        ws.put(qs);
         ws.put(vd);
         ws.put(kd);
     }

@@ -26,6 +26,7 @@ pub mod workspace;
 use crate::runtime::manifest::Bundle;
 use crate::tensor::Tensor;
 
+use attention::{HeadBwdIntra, HeadIntra};
 use workspace::Workspace;
 
 pub(crate) const RMSNORM_EPS: f64 = 1e-6;
@@ -103,6 +104,78 @@ impl Acts {
     }
 }
 
+/// KV-independent projections + per-head intra partials for one layer,
+/// produced by [`Kernel::layer_intra`] and consumed by
+/// [`Kernel::layer_finish`].
+pub(crate) struct LayerIntra {
+    x_in: Vec<f64>,
+    h: Vec<f64>,
+    zq: Vec<f64>,
+    zk: Vec<f64>,
+    q: Vec<f64>,
+    k: Vec<f64>,
+    v: Vec<f64>,
+    heads: Vec<HeadIntra>,
+}
+
+/// The KV-independent forward phase of one chunk (paper §3.3: the
+/// intra-chunk term has no dependence on `KV_{t-1}`): embedding plus the
+/// first layer's projections and per-head intra partials. Everything
+/// beyond the first layer reads the residual stream produced by the
+/// first layer's inter-chunk term, so it belongs to the second phase.
+pub struct FwdIntra {
+    layer0: LayerIntra,
+}
+
+impl FwdIntra {
+    /// Resident bytes while the partial waits for the recv.
+    pub fn nbytes(&self) -> usize {
+        let l = &self.layer0;
+        let panels: usize = l.x_in.len()
+            + l.h.len()
+            + l.zq.len()
+            + l.zk.len()
+            + l.q.len()
+            + l.k.len()
+            + l.v.len();
+        let heads: usize = l
+            .heads
+            .iter()
+            .map(|h| h.oh.len() + h.qs.len() + h.kv_add.len())
+            .sum();
+        8 * (panels + heads)
+    }
+}
+
+/// The dKV-independent backward phase of one chunk: loss head, final
+/// norm, and the top layer's FFN/output-projection/intra-attention
+/// cotangents — all runnable while `dKV` is still in flight.
+pub struct BwdIntra {
+    acts: Acts,
+    loss: f64,
+    dparams: Vec<Vec<f64>>,
+    dkv_in: Vec<f64>,
+    dx_mid: Vec<f64>,
+    heads: Vec<HeadBwdIntra>,
+}
+
+impl BwdIntra {
+    /// Resident bytes while the partial waits for the recv (dominated by
+    /// the retained activations and the gradient accumulators).
+    pub fn nbytes(&self) -> usize {
+        let heads: usize = self
+            .heads
+            .iter()
+            .map(|h| {
+                h.dqh.len() + h.dkh.len() + h.dvh.len() + h.vd.len() + h.kd.len()
+            })
+            .sum();
+        let grads: usize = self.dparams.iter().map(Vec::len).sum();
+        self.acts.nbytes()
+            + 8 * (heads + grads + self.dkv_in.len() + self.dx_mid.len())
+    }
+}
+
 /// The chunk-kernel engine for one bundle: model dimensions plus the
 /// per-head decay powers table `λ_h^0 .. λ_h^C`, precomputed once at
 /// device construction (the old backend rebuilt this on every dispatch).
@@ -141,6 +214,12 @@ impl Kernel {
 
     /// Full transformer forward over one chunk; returns the retained
     /// activations and the outgoing (L, H, dk, dv) state stack.
+    ///
+    /// Composed of [`forward_intra`](Kernel::forward_intra) +
+    /// [`forward_finish`](Kernel::forward_finish) so the sequential
+    /// single-call schedule and the overlapped two-phase schedule execute
+    /// the identical FP-op sequence — the bitwise-parity guarantee
+    /// `tests/overlap_parity.rs` pins.
     pub fn forward_full(
         &self,
         p: &[Vec<f64>],
@@ -148,10 +227,20 @@ impl Kernel {
         kv_in: &[f64],
         ws: &mut Workspace,
     ) -> (Acts, Vec<f64>) {
-        let (c, d, f) = (self.c, self.d, self.f);
-        let head_elems = self.dh * self.dh;
-        let layer_elems = self.n_heads * head_elems;
+        let intra = self.forward_intra(p, tokens, ws);
+        self.forward_finish(p, intra, kv_in, ws)
+    }
 
+    /// Phase 1 of the chunk forward: embedding plus the first layer's
+    /// KV-independent work. Launched by the coordinator *before* the
+    /// ring recv so the state transfer is hidden behind it.
+    pub fn forward_intra(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        ws: &mut Workspace,
+    ) -> FwdIntra {
+        let (c, d) = (self.c, self.d);
         // embedding lookup
         let embed = &p[P_EMBED];
         let mut x = vec![0.0; c * d];
@@ -159,64 +248,125 @@ impl Kernel {
             let row = t as usize * d;
             x[i * d..(i + 1) * d].copy_from_slice(&embed[row..row + d]);
         }
+        FwdIntra { layer0: self.layer_intra(p, layer_base(0), x, ws) }
+    }
+
+    /// Phase 2 of the chunk forward: completes the first layer with the
+    /// received state, then runs the remaining layers and the final norm.
+    pub fn forward_finish(
+        &self,
+        p: &[Vec<f64>],
+        intra: FwdIntra,
+        kv_in: &[f64],
+        ws: &mut Workspace,
+    ) -> (Acts, Vec<f64>) {
+        let (c, d) = (self.c, self.d);
+        let layer_elems = self.n_heads * self.dh * self.dh;
 
         let mut kv_out = vec![0.0; kv_in.len()];
         let mut layers = Vec::with_capacity(self.n_layers);
-        for l in 0..self.n_layers {
+        let (acts0, mut x) = self.layer_finish(
+            p,
+            layer_base(0),
+            intra.layer0,
+            &kv_in[..layer_elems],
+            &mut kv_out[..layer_elems],
+            ws,
+        );
+        layers.push(acts0);
+        for l in 1..self.n_layers {
             let b = layer_base(l);
-            let x_in = x;
-            let h = rmsnorm(&x_in, Some(&p[b + L_ATTN_NORM]), c, d);
-            let mut zq = vec![0.0; c * d];
-            gemm::matmul_into(&mut zq, &h, &p[b + L_WQ], c, d, d, false);
-            let mut zk = vec![0.0; c * d];
-            gemm::matmul_into(&mut zk, &h, &p[b + L_WK], c, d, d, false);
-            let mut v = vec![0.0; c * d];
-            gemm::matmul_into(&mut v, &h, &p[b + L_WV], c, d, d, false);
-            let q: Vec<f64> = zq.iter().map(|&z| silu(z)).collect();
-            let k: Vec<f64> = zk.iter().map(|&z| silu(z)).collect();
-
-            let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
-            let kv_out_l = &mut kv_out[l * layer_elems..(l + 1) * layer_elems];
-            let mut o = vec![0.0; c * d];
-            for hh in 0..self.n_heads {
-                self.attention_head(
-                    hh,
-                    &q,
-                    &k,
-                    &v,
-                    &kv_l[hh * head_elems..(hh + 1) * head_elems],
-                    &mut o,
-                    &mut kv_out_l[hh * head_elems..(hh + 1) * head_elems],
-                    ws,
-                );
-            }
-
-            let on = rmsnorm(&o, None, c, d);
-            // x_mid = x_in + on · Wo  (residual fused into the GEMM)
-            let mut x_mid = x_in.clone();
-            gemm::matmul_into(&mut x_mid, &on, &p[b + L_WO], c, d, d, true);
-
-            let h2 = rmsnorm(&x_mid, Some(&p[b + L_FFN_NORM]), c, d);
-            let mut z1 = vec![0.0; c * f];
-            gemm::matmul_into(&mut z1, &h2, &p[b + L_W1], c, d, f, false);
-            let mut z3 = vec![0.0; c * f];
-            gemm::matmul_into(&mut z3, &h2, &p[b + L_W3], c, d, f, false);
-            let mut gate = ws.take(c * f);
-            for ((g, &za), &zb) in gate.iter_mut().zip(&z1).zip(&z3) {
-                *g = silu(za) * zb;
-            }
-            let mut x_out = x_mid.clone();
-            gemm::matmul_into(&mut x_out, &gate, &p[b + L_W2], c, f, d, true);
-            ws.put(gate);
-
-            layers.push(LayerActs {
-                x_in, h, zq, zk, q, k, v, o, on, x_mid, h2, z1, z3,
-            });
+            let li = self.layer_intra(p, b, x, ws);
+            let (acts_l, x_out) = self.layer_finish(
+                p,
+                b,
+                li,
+                &kv_in[l * layer_elems..(l + 1) * layer_elems],
+                &mut kv_out[l * layer_elems..(l + 1) * layer_elems],
+                ws,
+            );
+            layers.push(acts_l);
             x = x_out;
         }
 
         let y = rmsnorm(&x, Some(&p[P_FINAL_NORM]), c, d);
         (Acts { layers, x_final: x, y }, kv_out)
+    }
+
+    /// One layer's KV-independent work: attn-norm, Q/K/V projections,
+    /// SiLU feature maps and the per-head intra partials.
+    fn layer_intra(
+        &self,
+        p: &[Vec<f64>],
+        b: usize,
+        x_in: Vec<f64>,
+        ws: &mut Workspace,
+    ) -> LayerIntra {
+        let (c, d) = (self.c, self.d);
+        let h = rmsnorm(&x_in, Some(&p[b + L_ATTN_NORM]), c, d);
+        let mut zq = vec![0.0; c * d];
+        gemm::matmul_into(&mut zq, &h, &p[b + L_WQ], c, d, d, false);
+        let mut zk = vec![0.0; c * d];
+        gemm::matmul_into(&mut zk, &h, &p[b + L_WK], c, d, d, false);
+        let mut v = vec![0.0; c * d];
+        gemm::matmul_into(&mut v, &h, &p[b + L_WV], c, d, d, false);
+        let q: Vec<f64> = zq.iter().map(|&z| silu(z)).collect();
+        let k: Vec<f64> = zk.iter().map(|&z| silu(z)).collect();
+        let heads = (0..self.n_heads)
+            .map(|hh| self.attention_head_intra(hh, &q, &k, &v, ws))
+            .collect();
+        LayerIntra { x_in, h, zq, zk, q, k, v, heads }
+    }
+
+    /// One layer's KV-dependent completion: per-head inter terms + state
+    /// update, output norm/projection, residuals and the FFN block.
+    fn layer_finish(
+        &self,
+        p: &[Vec<f64>],
+        b: usize,
+        intra: LayerIntra,
+        kv_l: &[f64],
+        kv_out_l: &mut [f64],
+        ws: &mut Workspace,
+    ) -> (LayerActs, Vec<f64>) {
+        let (c, d, f) = (self.c, self.d, self.f);
+        let head_elems = self.dh * self.dh;
+        let LayerIntra { x_in, h, zq, zk, q, k, v, heads } = intra;
+
+        let mut o = vec![0.0; c * d];
+        for (hh, head) in heads.into_iter().enumerate() {
+            self.attention_head_inter(
+                hh,
+                head,
+                &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                &mut o,
+                &mut kv_out_l[hh * head_elems..(hh + 1) * head_elems],
+                ws,
+            );
+        }
+
+        let on = rmsnorm(&o, None, c, d);
+        // x_mid = x_in + on · Wo  (residual fused into the GEMM)
+        let mut x_mid = x_in.clone();
+        gemm::matmul_into(&mut x_mid, &on, &p[b + L_WO], c, d, d, true);
+
+        let h2 = rmsnorm(&x_mid, Some(&p[b + L_FFN_NORM]), c, d);
+        let mut z1 = vec![0.0; c * f];
+        gemm::matmul_into(&mut z1, &h2, &p[b + L_W1], c, d, f, false);
+        let mut z3 = vec![0.0; c * f];
+        gemm::matmul_into(&mut z3, &h2, &p[b + L_W3], c, d, f, false);
+        let mut gate = ws.take(c * f);
+        for ((g, &za), &zb) in gate.iter_mut().zip(&z1).zip(&z3) {
+            *g = silu(za) * zb;
+        }
+        let mut x_out = x_mid.clone();
+        gemm::matmul_into(&mut x_out, &gate, &p[b + L_W2], c, f, d, true);
+        ws.put(gate);
+
+        (
+            LayerActs { x_in, h, zq, zk, q, k, v, o, on, x_mid, h2, z1, z3 },
+            x_out,
+        )
     }
 
     /// Logits (C, V) from the final-normed hidden states (tied head).
@@ -269,6 +419,10 @@ impl Kernel {
     /// its forward. With `None` the forward runs here first (the unfused
     /// twin's behavior).
     ///
+    /// Composed of [`backward_intra`](Kernel::backward_intra) +
+    /// [`backward_finish`](Kernel::backward_finish): the single-call and
+    /// two-phase schedules run the identical FP-op sequence.
+    ///
     /// Returns (dparams in manifest order, dkv_in stack, raw loss_sum).
     pub fn backward(
         &self,
@@ -281,7 +435,26 @@ impl Kernel {
         acts: Option<Acts>,
         ws: &mut Workspace,
     ) -> (Vec<Vec<f64>>, Vec<f64>, f64) {
-        let (c, d, f) = (self.c, self.d, self.f);
+        let intra =
+            self.backward_intra(p, tokens, labels, kv_in, loss_scale, acts, ws);
+        self.backward_finish(p, tokens, kv_in, intra, dkv_out, ws)
+    }
+
+    /// Phase 1 of the chunk backward: everything with no dependence on
+    /// the in-flight `dKV` cotangent — loss head, tied-embedding grad,
+    /// final norm, and the top layer's FFN/output-projection/intra
+    /// cotangents. Launched by the coordinator *before* the dKV recv.
+    pub fn backward_intra(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        labels: &[i32],
+        kv_in: &[f64],
+        loss_scale: f64,
+        acts: Option<Acts>,
+        ws: &mut Workspace,
+    ) -> BwdIntra {
+        let (c, d) = (self.c, self.d);
         let head_elems = self.dh * self.dh;
         let layer_elems = self.n_heads * head_elems;
 
@@ -312,55 +485,88 @@ impl Kernel {
         ws.put(dlogits);
 
         // final RMSNorm
-        let (dgain, mut dx) =
+        let (dgain, dx) =
             rmsnorm_bwd(&dy, &acts.x_final, Some(&p[P_FINAL_NORM]), c, d);
         dparams[P_FINAL_NORM] = dgain.unwrap();
         ws.put(dy);
 
-        for l in (0..self.n_layers).rev() {
+        // top layer: FFN block, output projection and the per-head
+        // dKV-independent attention cotangents
+        let l = self.n_layers - 1;
+        let b = layer_base(l);
+        let a = &acts.layers[l];
+        let dx_mid = self.layer_bwd_ffn(p, b, a, dx, &mut dparams, ws);
+        let do_ = self.layer_bwd_attn_out(p, b, a, &dx_mid, &mut dparams, ws);
+        let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
+        let dkv_in_l = &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
+        let heads: Vec<HeadBwdIntra> = (0..self.n_heads)
+            .map(|hh| {
+                self.attention_head_bwd_intra(
+                    hh,
+                    &a.q,
+                    &a.k,
+                    &a.v,
+                    &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                    &do_,
+                    &mut dkv_in_l[hh * head_elems..(hh + 1) * head_elems],
+                    ws,
+                )
+            })
+            .collect();
+        ws.put(do_);
+
+        BwdIntra { acts, loss, dparams, dkv_in, dx_mid, heads }
+    }
+
+    /// Phase 2 of the chunk backward: the top layer's dKV-dependent
+    /// terms, then the remaining layers and the embedding scatter.
+    pub fn backward_finish(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        kv_in: &[f64],
+        intra: BwdIntra,
+        dkv_out: &[f64],
+        ws: &mut Workspace,
+    ) -> (Vec<Vec<f64>>, Vec<f64>, f64) {
+        let (c, d) = (self.c, self.d);
+        let head_elems = self.dh * self.dh;
+        let layer_elems = self.n_heads * head_elems;
+        let BwdIntra { acts, loss, mut dparams, mut dkv_in, dx_mid, heads } =
+            intra;
+
+        // top layer: state-update cotangents + merge, then projections
+        let l_top = self.n_layers - 1;
+        let b = layer_base(l_top);
+        let a = &acts.layers[l_top];
+        let mut dq = ws.take(c * d);
+        let mut dk = ws.take(c * d);
+        let mut dv = ws.take(c * d);
+        let dkv_l = &dkv_out[l_top * layer_elems..(l_top + 1) * layer_elems];
+        let dkv_in_l =
+            &mut dkv_in[l_top * layer_elems..(l_top + 1) * layer_elems];
+        for (hh, head) in heads.into_iter().enumerate() {
+            self.attention_head_bwd_inter(
+                hh,
+                head,
+                &dkv_l[hh * head_elems..(hh + 1) * head_elems],
+                &mut dq,
+                &mut dk,
+                &mut dv,
+                &mut dkv_in_l[hh * head_elems..(hh + 1) * head_elems],
+                ws,
+            );
+        }
+        let mut dx =
+            self.layer_bwd_proj(p, b, a, dq, dk, dv, dx_mid, &mut dparams, ws);
+
+        // remaining layers: the full per-layer backward
+        for l in (0..l_top).rev() {
             let b = layer_base(l);
             let a = &acts.layers[l];
-
-            // ---- FFN block: x_out = x_mid + (SiLU(z1) ⊙ z3) W2 ----------
-            let mut gate = ws.take(c * f);
-            for ((g, &za), &zb) in gate.iter_mut().zip(&a.z1).zip(&a.z3) {
-                *g = silu(za) * zb;
-            }
-            gemm::matmul_tn_into(&mut dparams[b + L_W2], &gate, &dx, c, f, d, false);
-            // gate is fully consumed — reuse its buffer for dgate
-            let mut dgate = gate;
-            gemm::matmul_nt_into(&mut dgate, &dx, &p[b + L_W2], c, d, f, false);
-            let mut dz1 = ws.take(c * f);
-            let mut dz3 = ws.take(c * f);
-            for i in 0..c * f {
-                dz1[i] = dgate[i] * a.z3[i] * dsilu(a.z1[i]);
-                dz3[i] = dgate[i] * silu(a.z1[i]);
-            }
-            ws.put(dgate);
-            gemm::matmul_tn_into(&mut dparams[b + L_W1], &a.h2, &dz1, c, d, f, false);
-            gemm::matmul_tn_into(&mut dparams[b + L_W3], &a.h2, &dz3, c, d, f, false);
-            let mut dh2 = ws.take(c * d);
-            gemm::matmul_nt_into(&mut dh2, &dz1, &p[b + L_W1], c, f, d, false);
-            gemm::matmul_nt_into(&mut dh2, &dz3, &p[b + L_W3], c, f, d, true);
-            ws.put(dz1);
-            ws.put(dz3);
-            let (dgain, dxn) =
-                rmsnorm_bwd(&dh2, &a.x_mid, Some(&p[b + L_FFN_NORM]), c, d);
-            dparams[b + L_FFN_NORM] = dgain.unwrap();
-            ws.put(dh2);
-            let mut dx_mid = dx; // residual path
-            for (slot, &g) in dx_mid.iter_mut().zip(&dxn) {
-                *slot += g;
-            }
-            ws.put(dxn);
-
-            // ---- attention block: x_mid = x_in + RMSNorm(o) Wo ----------
-            gemm::matmul_tn_into(&mut dparams[b + L_WO], &a.on, &dx_mid, c, d, d, false);
-            let mut don = ws.take(c * d);
-            gemm::matmul_nt_into(&mut don, &dx_mid, &p[b + L_WO], c, d, d, false);
-            let (_, do_) = rmsnorm_bwd(&don, &a.o, None, c, d);
-            ws.put(don);
-
+            let dx_mid = self.layer_bwd_ffn(p, b, a, dx, &mut dparams, ws);
+            let do_ =
+                self.layer_bwd_attn_out(p, b, a, &dx_mid, &mut dparams, ws);
             let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
             let dkv_l = &dkv_out[l * layer_elems..(l + 1) * layer_elems];
             let dkv_in_l =
@@ -385,36 +591,7 @@ impl Kernel {
                 );
             }
             ws.put(do_);
-
-            // SiLU feature maps on q/k
-            let mut dzq = ws.take(c * d);
-            let mut dzk = ws.take(c * d);
-            for i in 0..c * d {
-                dzq[i] = dq[i] * dsilu(a.zq[i]);
-                dzk[i] = dk[i] * dsilu(a.zk[i]);
-            }
-            gemm::matmul_tn_into(&mut dparams[b + L_WQ], &a.h, &dzq, c, d, d, false);
-            gemm::matmul_tn_into(&mut dparams[b + L_WK], &a.h, &dzk, c, d, d, false);
-            gemm::matmul_tn_into(&mut dparams[b + L_WV], &a.h, &dv, c, d, d, false);
-            let mut dh = ws.take(c * d);
-            gemm::matmul_nt_into(&mut dh, &dzq, &p[b + L_WQ], c, d, d, false);
-            gemm::matmul_nt_into(&mut dh, &dzk, &p[b + L_WK], c, d, d, true);
-            gemm::matmul_nt_into(&mut dh, &dv, &p[b + L_WV], c, d, d, true);
-            ws.put(dq);
-            ws.put(dk);
-            ws.put(dv);
-            ws.put(dzq);
-            ws.put(dzk);
-            let (dgain, dxn) =
-                rmsnorm_bwd(&dh, &a.x_in, Some(&p[b + L_ATTN_NORM]), c, d);
-            dparams[b + L_ATTN_NORM] = dgain.unwrap();
-            ws.put(dh);
-            let mut dx_in = dx_mid; // residual path
-            for (slot, &g) in dx_in.iter_mut().zip(&dxn) {
-                *slot += g;
-            }
-            ws.put(dxn);
-            dx = dx_in;
+            dx = self.layer_bwd_proj(p, b, a, dq, dk, dv, dx_mid, &mut dparams, ws);
         }
 
         // embedding lookup backward (accumulates into the tied embed grad)
@@ -426,6 +603,122 @@ impl Kernel {
         ws.put(dx);
 
         (dparams, dkv_in, loss)
+    }
+
+    /// FFN-block backward: consumes `dx` (cotangent of `x_out`),
+    /// accumulates W1/W2/W3/ffn-norm grads, returns the cotangent of
+    /// `x_mid` (residual path included).
+    fn layer_bwd_ffn(
+        &self,
+        p: &[Vec<f64>],
+        b: usize,
+        a: &LayerActs,
+        dx: Vec<f64>,
+        dparams: &mut [Vec<f64>],
+        ws: &mut Workspace,
+    ) -> Vec<f64> {
+        let (c, d, f) = (self.c, self.d, self.f);
+        // ---- FFN block: x_out = x_mid + (SiLU(z1) ⊙ z3) W2 ----------
+        let mut gate = ws.take(c * f);
+        for ((g, &za), &zb) in gate.iter_mut().zip(&a.z1).zip(&a.z3) {
+            *g = silu(za) * zb;
+        }
+        gemm::matmul_tn_into(&mut dparams[b + L_W2], &gate, &dx, c, f, d, false);
+        // gate is fully consumed — reuse its buffer for dgate
+        let mut dgate = gate;
+        gemm::matmul_nt_into(&mut dgate, &dx, &p[b + L_W2], c, d, f, false);
+        let mut dz1 = ws.take(c * f);
+        let mut dz3 = ws.take(c * f);
+        for i in 0..c * f {
+            dz1[i] = dgate[i] * a.z3[i] * dsilu(a.z1[i]);
+            dz3[i] = dgate[i] * silu(a.z1[i]);
+        }
+        ws.put(dgate);
+        gemm::matmul_tn_into(&mut dparams[b + L_W1], &a.h2, &dz1, c, d, f, false);
+        gemm::matmul_tn_into(&mut dparams[b + L_W3], &a.h2, &dz3, c, d, f, false);
+        let mut dh2 = ws.take(c * d);
+        gemm::matmul_nt_into(&mut dh2, &dz1, &p[b + L_W1], c, f, d, false);
+        gemm::matmul_nt_into(&mut dh2, &dz3, &p[b + L_W3], c, f, d, true);
+        ws.put(dz1);
+        ws.put(dz3);
+        let (dgain, dxn) =
+            rmsnorm_bwd(&dh2, &a.x_mid, Some(&p[b + L_FFN_NORM]), c, d);
+        dparams[b + L_FFN_NORM] = dgain.unwrap();
+        ws.put(dh2);
+        let mut dx_mid = dx; // residual path
+        for (slot, &g) in dx_mid.iter_mut().zip(&dxn) {
+            *slot += g;
+        }
+        ws.put(dxn);
+        dx_mid
+    }
+
+    /// Output-projection backward: Wo grad + the cotangent of the merged
+    /// attention output `o` (through the gain-free RMSNorm).
+    fn layer_bwd_attn_out(
+        &self,
+        p: &[Vec<f64>],
+        b: usize,
+        a: &LayerActs,
+        dx_mid: &[f64],
+        dparams: &mut [Vec<f64>],
+        ws: &mut Workspace,
+    ) -> Vec<f64> {
+        let (c, d) = (self.c, self.d);
+        // ---- attention block: x_mid = x_in + RMSNorm(o) Wo ----------
+        gemm::matmul_tn_into(&mut dparams[b + L_WO], &a.on, dx_mid, c, d, d, false);
+        let mut don = ws.take(c * d);
+        gemm::matmul_nt_into(&mut don, dx_mid, &p[b + L_WO], c, d, d, false);
+        let (_, do_) = rmsnorm_bwd(&don, &a.o, None, c, d);
+        ws.put(don);
+        do_
+    }
+
+    /// Q/K/V projection backward: consumes the merged dq/dk/dv buffers
+    /// and `dx_mid`, accumulates WQ/WK/WV/attn-norm grads, returns the
+    /// cotangent of `x_in` for the next-lower layer.
+    fn layer_bwd_proj(
+        &self,
+        p: &[Vec<f64>],
+        b: usize,
+        a: &LayerActs,
+        dq: Vec<f64>,
+        dk: Vec<f64>,
+        dv: Vec<f64>,
+        dx_mid: Vec<f64>,
+        dparams: &mut [Vec<f64>],
+        ws: &mut Workspace,
+    ) -> Vec<f64> {
+        let (c, d) = (self.c, self.d);
+        // SiLU feature maps on q/k
+        let mut dzq = ws.take(c * d);
+        let mut dzk = ws.take(c * d);
+        for i in 0..c * d {
+            dzq[i] = dq[i] * dsilu(a.zq[i]);
+            dzk[i] = dk[i] * dsilu(a.zk[i]);
+        }
+        gemm::matmul_tn_into(&mut dparams[b + L_WQ], &a.h, &dzq, c, d, d, false);
+        gemm::matmul_tn_into(&mut dparams[b + L_WK], &a.h, &dzk, c, d, d, false);
+        gemm::matmul_tn_into(&mut dparams[b + L_WV], &a.h, &dv, c, d, d, false);
+        let mut dh = ws.take(c * d);
+        gemm::matmul_nt_into(&mut dh, &dzq, &p[b + L_WQ], c, d, d, false);
+        gemm::matmul_nt_into(&mut dh, &dzk, &p[b + L_WK], c, d, d, true);
+        gemm::matmul_nt_into(&mut dh, &dv, &p[b + L_WV], c, d, d, true);
+        ws.put(dq);
+        ws.put(dk);
+        ws.put(dv);
+        ws.put(dzq);
+        ws.put(dzk);
+        let (dgain, dxn) =
+            rmsnorm_bwd(&dh, &a.x_in, Some(&p[b + L_ATTN_NORM]), c, d);
+        dparams[b + L_ATTN_NORM] = dgain.unwrap();
+        ws.put(dh);
+        let mut dx_in = dx_mid; // residual path
+        for (slot, &g) in dx_in.iter_mut().zip(&dxn) {
+            *slot += g;
+        }
+        ws.put(dxn);
+        dx_in
     }
 }
 

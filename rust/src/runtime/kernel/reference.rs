@@ -47,7 +47,6 @@ pub fn chunk_fwd(
 /// Pre-refactor `chunk_bwd`: recomputes the forward internally (the old
 /// backend had no activation cache), then runs the scalar backward.
 /// Returns `(dparams, dkv_in, loss_sum)` in artifact output order.
-#[allow(clippy::too_many_arguments)]
 pub fn chunk_bwd(
     bundle: &Bundle,
     params: &[Tensor],
@@ -205,7 +204,6 @@ pub(crate) fn attention_head_ref(
 }
 
 /// One head of the scalar backward (pre-refactor `attention_head_bwd`).
-#[allow(clippy::too_many_arguments)]
 pub(crate) fn attention_head_bwd_ref(
     kern: &Kernel,
     hh: usize,

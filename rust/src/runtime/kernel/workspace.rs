@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::tensor::Tensor;
 
-use super::{f64_of, Acts};
+use super::{f64_of, Acts, BwdIntra, FwdIntra};
 
 /// Free-list arena for f64 scratch buffers.
 ///
@@ -175,6 +175,105 @@ impl ActCache {
         self.entry.as_ref().map_or(0, |e| {
             e.acts.nbytes() + e.kv_in.len() * 8 + e.tokens.len() * 4
         })
+    }
+}
+
+/// In-flight two-phase partials (the overlapped ring schedule): the
+/// `chunk_intra_fwd` / `chunk_bwd_intra` kernels store their
+/// recv-independent partials here while the KV / dKV state is on the
+/// wire; the paired `chunk_inter_fwd` / `chunk_bwd_inter` kernels
+/// consume them. Validity is self-checked like [`ActCache`] — parameter
+/// version and tokens (plus the incoming KV state on the backward path)
+/// must match bitwise — and a missing or mismatched partial is a
+/// coordinator bug the dispatch layer reports as an error rather than
+/// silently recomputing.
+///
+/// At most one forward and one backward partial are resident per device
+/// (each intra call overwrites, each matching inter call consumes) —
+/// the same bound the activation cache obeys.
+#[derive(Default)]
+pub struct PhaseCache {
+    fwd: Option<PendingFwd>,
+    bwd: Option<PendingBwd>,
+}
+
+pub struct PendingFwd {
+    pub param_version: u64,
+    pub tokens: Vec<i32>,
+    pub intra: FwdIntra,
+}
+
+pub struct PendingBwd {
+    pub param_version: u64,
+    pub tokens: Vec<i32>,
+    pub kv_in: Vec<f64>,
+    pub intra: BwdIntra,
+}
+
+impl PhaseCache {
+    /// Retain a forward intra partial (overwrites any previous one).
+    pub fn store_fwd(&mut self, p: PendingFwd) {
+        self.fwd = Some(p);
+    }
+
+    /// Consume the forward partial iff it was produced by the same
+    /// parameters and tokens this inter phase is about to complete.
+    pub fn take_fwd(&mut self, version: u64, tokens: &[i32]) -> Option<FwdIntra> {
+        let matches = matches!(
+            &self.fwd,
+            Some(e) if e.param_version == version && e.tokens == tokens
+        );
+        if matches {
+            Some(self.fwd.take().unwrap().intra)
+        } else {
+            None
+        }
+    }
+
+    /// Retain a backward intra partial (overwrites any previous one).
+    pub fn store_bwd(&mut self, p: PendingBwd) {
+        self.bwd = Some(p);
+    }
+
+    /// Consume the backward partial iff version, tokens and the incoming
+    /// KV state all match bitwise.
+    pub fn take_bwd(
+        &mut self,
+        version: u64,
+        tokens: &[i32],
+        kv_in: &[f64],
+    ) -> Option<BwdIntra> {
+        let matches = matches!(
+            &self.bwd,
+            Some(e) if e.param_version == version
+                && e.tokens == tokens
+                && e.kv_in == kv_in
+        );
+        if matches {
+            Some(self.bwd.take().unwrap().intra)
+        } else {
+            None
+        }
+    }
+
+    /// True while an intra partial awaits its inter phase — must be
+    /// false at the end of every training step (coordinator hygiene).
+    pub fn pending(&self) -> bool {
+        self.fwd.is_some() || self.bwd.is_some()
+    }
+
+    /// Bytes currently held by in-flight partials.
+    pub fn held_bytes(&self) -> usize {
+        self.fwd.as_ref().map_or(0, |e| {
+            e.intra.nbytes() + e.tokens.len() * 4
+        }) + self.bwd.as_ref().map_or(0, |e| {
+            e.intra.nbytes() + e.tokens.len() * 4 + e.kv_in.len() * 8
+        })
+    }
+
+    pub fn clear(&mut self) {
+        self.fwd = None;
+        self.bwd = None;
     }
 }
 

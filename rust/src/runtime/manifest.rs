@@ -12,7 +12,7 @@ use crate::tensor::DType;
 use crate::util::json::Json;
 
 /// One input/output slot of an executable.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct IoSpec {
     pub shape: Vec<usize>,
     pub dtype: DType,

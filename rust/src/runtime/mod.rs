@@ -202,6 +202,34 @@ impl Device {
             Device::Pjrt(_) => {}
         }
     }
+
+    /// True while a two-phase intra partial awaits its paired inter call
+    /// (always false for backends without the two-phase kernels).
+    pub fn phase_partials_pending(&self) -> bool {
+        match self {
+            Device::Native(d) => d.phase_partials_pending(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => false,
+        }
+    }
+
+    /// Bytes held by in-flight two-phase partials.
+    pub fn phase_partial_bytes(&self) -> usize {
+        match self {
+            Device::Native(d) => d.phase_partial_bytes(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => 0,
+        }
+    }
+
+    /// Drop any in-flight two-phase partials.
+    pub fn clear_phase_partials(&self) {
+        match self {
+            Device::Native(d) => d.clear_phase_partials(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => {}
+        }
+    }
 }
 
 impl Executor for Device {

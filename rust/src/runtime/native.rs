@@ -36,7 +36,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use super::kernel::workspace::{ActCache, ActEntry, ParamCache, Workspace};
+use super::kernel::workspace::{
+    ActCache, ActEntry, ParamCache, PendingBwd, PendingFwd, PhaseCache,
+    Workspace,
+};
 use super::kernel::{f64_of, tensor_of, Kernel};
 use super::manifest::{ArtifactSpec, Bundle};
 use crate::tensor::{Tensor, Value};
@@ -59,6 +62,7 @@ struct DeviceState {
     ws: Workspace,
     params: ParamCache,
     acts: ActCache,
+    phase: PhaseCache,
 }
 
 impl NativeDevice {
@@ -113,6 +117,24 @@ impl NativeDevice {
     /// forward was issued without a paired backward).
     pub fn clear_acts_cache(&self) {
         self.state.lock().unwrap().acts.clear();
+    }
+
+    /// True while a two-phase intra partial awaits its inter phase —
+    /// the trainer asserts this is false after every backward ring.
+    pub fn phase_partials_pending(&self) -> bool {
+        self.state.lock().unwrap().phase.pending()
+    }
+
+    /// Bytes held by in-flight two-phase partials (0 once every intra
+    /// call has been completed by its paired inter call).
+    pub fn phase_partial_bytes(&self) -> usize {
+        self.state.lock().unwrap().phase.held_bytes()
+    }
+
+    /// Drop any in-flight two-phase partials (end-of-step hygiene for
+    /// intra phases that never got their paired inter call).
+    pub fn clear_phase_partials(&self) {
+        self.state.lock().unwrap().phase.clear();
     }
 
     fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -248,6 +270,106 @@ impl NativeDevice {
                     Value::F32(tensor_of(kv_shape, &kv_out)),
                 ])
             }
+            "chunk_intra_fwd" => {
+                // Phase 1 of the overlapped forward: KV-independent work
+                // launched before the ring recv; partials are retained
+                // across the phase boundary.
+                let v = require_version(name, version)?;
+                let p64 = st.params.get(version, params);
+                let tokens = check_ids(name, as_i32(&rest[0])?, kern.v)?;
+                let intra = kern.forward_intra(&p64, tokens, &mut st.ws);
+                st.phase.store_fwd(PendingFwd {
+                    param_version: v,
+                    tokens: tokens.to_vec(),
+                    intra,
+                });
+                Ok(vec![])
+            }
+            "chunk_inter_fwd" => {
+                // Phase 2: completes the pending intra partial with the
+                // received state. A missing/mismatched partial is a
+                // coordinator bug, never a silent recompute.
+                let v = require_version(name, version)?;
+                let p64 = st.params.get(version, params);
+                let tokens = check_ids(name, as_i32(&rest[0])?, kern.v)?;
+                let labels = check_ids(name, as_i32(&rest[1])?, kern.v)?;
+                let kv_in = f64_of(rest[2].as_f32());
+                let intra = st.phase.take_fwd(v, tokens).with_context(|| {
+                    format!(
+                        "{name}: no matching chunk_intra_fwd partial \
+                         (param version {v}) — two-phase schedule bug"
+                    )
+                })?;
+                let (acts, kv_out) =
+                    kern.forward_finish(&p64, intra, &kv_in, &mut st.ws);
+                let (loss, _) =
+                    kern.loss_and_dlogits(&p64, &acts, labels, None, &mut st.ws);
+                // §4.2: the two-phase schedule is inherently fused — the
+                // completed forward retains its activations for the
+                // paired backward, exactly like chunk_fwd.
+                st.acts.store(ActEntry {
+                    param_version: v,
+                    tokens: tokens.to_vec(),
+                    kv_in,
+                    acts,
+                });
+                Ok(vec![
+                    Value::F32(Tensor::scalar(loss as f32)),
+                    Value::F32(tensor_of(kv_shape, &kv_out)),
+                ])
+            }
+            "chunk_bwd_intra" => {
+                // Phase 1 of the overlapped backward: loss head, final
+                // norm and the top layer's dKV-independent cotangents,
+                // launched before the dKV recv. Consumes the retained
+                // forward activations when they match (recompute
+                // fallback otherwise, exactly like chunk_bwd).
+                let v = require_version(name, version)?;
+                let p64 = st.params.get(version, params);
+                let tokens = check_ids(name, as_i32(&rest[0])?, kern.v)?;
+                let labels = check_ids(name, as_i32(&rest[1])?, kern.v)?;
+                let kv_in = f64_of(rest[2].as_f32());
+                let scale = rest[3].as_f32().item() as f64;
+                let cached = st.acts.take_match(version, tokens, &kv_in);
+                let intra = kern.backward_intra(
+                    &p64, tokens, labels, &kv_in, scale, cached, &mut st.ws,
+                );
+                st.phase.store_bwd(PendingBwd {
+                    param_version: v,
+                    tokens: tokens.to_vec(),
+                    kv_in,
+                    intra,
+                });
+                Ok(vec![])
+            }
+            "chunk_bwd_inter" => {
+                // Phase 2: the dKV-dependent completion. Output order is
+                // identical to chunk_bwd: dparams…, dkv_in, loss.
+                let v = require_version(name, version)?;
+                let p64 = st.params.get(version, params);
+                let tokens = check_ids(name, as_i32(&rest[0])?, kern.v)?;
+                check_ids(name, as_i32(&rest[1])?, kern.v)?;
+                let kv_in = f64_of(rest[2].as_f32());
+                let dkv_out = f64_of(rest[3].as_f32());
+                let intra =
+                    st.phase.take_bwd(v, tokens, &kv_in).with_context(|| {
+                        format!(
+                            "{name}: no matching chunk_bwd_intra partial \
+                             (param version {v}) — two-phase schedule bug"
+                        )
+                    })?;
+                let (dparams, dkv_in, loss) = kern.backward_finish(
+                    &p64, tokens, &kv_in, intra, &dkv_out, &mut st.ws,
+                );
+                let mut out: Vec<Value> = dparams
+                    .iter()
+                    .zip(&spec.outputs)
+                    .map(|(g, ospec)| Value::F32(tensor_of(&ospec.shape, g)))
+                    .collect();
+                out.push(Value::F32(tensor_of(kv_shape, &dkv_in)));
+                out.push(Value::F32(Tensor::scalar(loss as f32)));
+                Ok(out)
+            }
             "chunk_bwd" | "chunk_bwd_unfused" => {
                 let p64 = st.params.get(version, params);
                 let tokens = check_ids(name, as_i32(&rest[0])?, kern.v)?;
@@ -320,6 +442,17 @@ pub fn objective_f64(
     let (loss, _) = kern.loss_and_dlogits(&p64, &acts, labels, None, &mut ws);
     let d = f64_of(dkv_out);
     loss_scale * loss + kv_out.iter().zip(&d).map(|(a, b)| a * b).sum::<f64>()
+}
+
+/// The two-phase entry points carry state across calls keyed by the
+/// parameter version, so they exist only on the versioned trainer path.
+fn require_version(name: &str, version: Option<u64>) -> Result<u64> {
+    version.with_context(|| {
+        format!(
+            "{name}: two-phase kernels require the versioned trainer path \
+             (exec_versioned)"
+        )
+    })
 }
 
 fn as_i32(v: &Value) -> Result<&[i32]> {

@@ -161,6 +161,31 @@ pub fn synthesize(name: &str, chunk: usize) -> Option<Bundle> {
                          bwd_spec("chunk_bwd_unfused.hlo.txt"));
     }
 
+    // Two-phase (overlapped-ring) entry points: the intra kernels take
+    // only what is recv-independent and return nothing (partials are
+    // retained device-side across the phase boundary); the inter kernels
+    // complete them with the received state and share the fused ABI.
+    let mut intra_fwd_inputs = param_inputs.clone();
+    intra_fwd_inputs.push(i32_spec(vec![c])); // tokens
+    artifacts.insert("chunk_intra_fwd".into(), ArtifactSpec {
+        file: "chunk_intra_fwd.hlo.txt".into(),
+        inputs: intra_fwd_inputs,
+        outputs: vec![],
+        n_params,
+    });
+    artifacts.insert("chunk_inter_fwd".into(),
+                     fwd_spec("chunk_inter_fwd.hlo.txt"));
+    let mut intra_bwd_inputs = fwd_inputs(());
+    intra_bwd_inputs.push(f32_spec(vec![])); // loss_scale
+    artifacts.insert("chunk_bwd_intra".into(), ArtifactSpec {
+        file: "chunk_bwd_intra.hlo.txt".into(),
+        inputs: intra_bwd_inputs,
+        outputs: vec![],
+        n_params,
+    });
+    artifacts.insert("chunk_bwd_inter".into(),
+                     bwd_spec("chunk_bwd_inter.hlo.txt"));
+
     let mut logits_inputs = param_inputs.clone();
     logits_inputs.push(i32_spec(vec![c]));
     logits_inputs.push(f32_spec(kv_shape.clone()));
@@ -242,6 +267,37 @@ mod tests {
         assert!(b.artifacts.contains_key("chunk_fwd_unfused"));
         assert!(!synthesize("e2e", 128).unwrap()
             .artifacts.contains_key("chunk_fwd_unfused"));
+    }
+
+    #[test]
+    fn two_phase_entry_points_synthesize_for_every_config() {
+        for c in BUILTIN_CONFIGS {
+            let b = synthesize(c.name, 16).unwrap();
+            // intra kernels: recv-independent inputs, no outputs
+            let fi = &b.artifacts["chunk_intra_fwd"];
+            assert_eq!(fi.inputs.len(), fi.n_params + 1, "{}", c.name);
+            assert!(fi.outputs.is_empty());
+            let bi = &b.artifacts["chunk_bwd_intra"];
+            assert_eq!(bi.inputs.len(), bi.n_params + 4, "{}", c.name);
+            assert!(bi.outputs.is_empty());
+            // inter kernels share the fused ABI
+            assert_eq!(
+                b.artifacts["chunk_inter_fwd"].inputs,
+                b.artifacts["chunk_fwd"].inputs
+            );
+            assert_eq!(
+                b.artifacts["chunk_inter_fwd"].outputs,
+                b.artifacts["chunk_fwd"].outputs
+            );
+            assert_eq!(
+                b.artifacts["chunk_bwd_inter"].inputs,
+                b.artifacts["chunk_bwd"].inputs
+            );
+            assert_eq!(
+                b.artifacts["chunk_bwd_inter"].outputs,
+                b.artifacts["chunk_bwd"].outputs
+            );
+        }
     }
 
     #[test]

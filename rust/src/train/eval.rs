@@ -43,19 +43,25 @@ pub fn evaluate(
     let mut correct = 0usize;
     let mut total = 0usize;
 
-    let pargs: Vec<Value> =
-        params.tensors().iter().cloned().map(Value::F32).collect();
-
     for s in 0..n_seqs {
         let seq = datagen.heldout(s, c * chunks_per_seq + 1);
         let mut kv = Tensor::zeros(&bundle.kv_state_shape);
         for t in 0..chunks_per_seq {
             let tokens = &seq[t * c..(t + 1) * c];
             let labels = &seq[t * c + 1..(t + 1) * c + 1];
-            let mut args = pargs.clone();
-            args.push(IntTensor::new(vec![c], tokens.to_vec()).into());
-            args.push(kv.into());
-            let mut out = dev.exec("chunk_logits", &args)?;
+            // versioned hot path, exactly like the trainer: parameters by
+            // reference (no per-chunk deep clone of the whole model) and
+            // the backend's f64 conversion cached across chunks
+            let rest: Vec<Value> = vec![
+                IntTensor::new(vec![c], tokens.to_vec()).into(),
+                kv.into(),
+            ];
+            let mut out = dev.exec_versioned(
+                "chunk_logits",
+                params.tensors(),
+                params.version(),
+                &rest,
+            )?;
             kv = out.remove(1).into_f32();
             let logits = out.remove(0).into_f32();
             // log-softmax NLL + argmax accuracy per position

@@ -1,6 +1,6 @@
 //! Parity suite for the native kernel engine (the PR-4 refactor).
 //!
-//! Two pins, per ISSUE 4:
+//! Three pins:
 //!
 //!  (a) the §4.2 activation-cache path — a fused `chunk_bwd` that
 //!      consumes the activations retained by the paired `chunk_fwd` —
@@ -9,7 +9,12 @@
 //!  (b) the GEMM-formulated forward/backward must match the
 //!      pre-refactor scalar reference (`runtime::kernel::reference`,
 //!      kept verbatim as the oracle) on `tiny` and `tiny_lt` at
-//!      C ∈ {8, 32}.
+//!      C ∈ {8, 32};
+//!  (c) the two-phase entry points (`chunk_intra_fwd` + `chunk_inter_fwd`
+//!      and `chunk_bwd_intra` + `chunk_bwd_inter`, the overlapped-ring
+//!      schedule) must match the scalar oracle on the same grid — and
+//!      match the single-call fused kernels *bitwise*, since both
+//!      compose the identical phase functions.
 //!
 //! Both engines run f64 internally and differ only in reduction order,
 //! so the agreement demanded here is far tighter than the trainer-level
@@ -170,6 +175,185 @@ fn cached_activation_backward_matches_recompute() {
             }
         }
     }
+}
+
+/// (c): the overlapped-ring entry points against the scalar oracle —
+/// intra issued first (as the coordinator does before the recv), inter
+/// completing it, on tiny and tiny_lt at C ∈ {8, 32}.
+#[test]
+fn two_phase_entry_points_match_scalar_reference() {
+    for config in ["tiny", "tiny_lt"] {
+        for c in [8usize, 32] {
+            let b = load_bundle(config, c).unwrap();
+            let dev = NativeDevice::new(&b, &[]).unwrap();
+            let params = ParamStore::init(&b, 5);
+            let v = params.version();
+            let (tokens, labels, kv_in, dkv_out) = problem(&b, 200 + c as u64);
+            let ctx = format!("{config}/C={c} two-phase");
+            let loss_scale = 1.0 / c as f32;
+
+            // forward: intra before the (simulated) recv, inter after
+            let intra_rest: Vec<Value> =
+                vec![IntTensor::new(vec![c], tokens.to_vec()).into()];
+            let out = dev
+                .exec_versioned("chunk_intra_fwd", params.tensors(), v, &intra_rest)
+                .unwrap();
+            assert!(out.is_empty(), "{ctx}: intra returns nothing");
+            assert!(dev.phase_partials_pending(), "{ctx}: partial not retained");
+            let mut out = dev
+                .exec_versioned(
+                    "chunk_inter_fwd",
+                    params.tensors(),
+                    v,
+                    &fwd_rest(c, &tokens, &labels, &kv_in),
+                )
+                .unwrap();
+            assert!(!dev.phase_partials_pending(), "{ctx}: partial not consumed");
+            let kv_out = out.remove(1).into_f32();
+            let loss = out.remove(0).into_f32();
+            let (loss_ref, kv_out_ref) =
+                reference::chunk_fwd(&b, params.tensors(), &tokens, &labels, &kv_in);
+            assert_close(&format!("{ctx} loss"), &loss, &Tensor::scalar(loss_ref), TOL);
+            assert_close(&format!("{ctx} kv_out"), &kv_out, &kv_out_ref, TOL);
+
+            // backward: the inter forward retained its activations; the
+            // intra backward consumes them before the dKV "arrives"
+            assert!(dev.acts_cache_bytes() > 0, "{ctx}: forward retained nothing");
+            let bwd_intra_rest = {
+                let mut r = fwd_rest(c, &tokens, &labels, &kv_in);
+                r.push(Tensor::scalar(loss_scale).into());
+                r
+            };
+            dev.exec_versioned("chunk_bwd_intra", params.tensors(), v, &bwd_intra_rest)
+                .unwrap();
+            assert_eq!(dev.acts_cache_hits(), 1, "{ctx}: intra bwd did not reuse");
+            assert!(dev.phase_partials_pending(), "{ctx}: bwd partial not retained");
+            let mut out = dev
+                .exec_versioned(
+                    "chunk_bwd_inter",
+                    params.tensors(),
+                    v,
+                    &bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, loss_scale),
+                )
+                .unwrap();
+            assert!(!dev.phase_partials_pending(), "{ctx}: bwd partial not consumed");
+            let loss = out.pop().unwrap().into_f32();
+            let dkv_in = out.pop().unwrap().into_f32();
+            let grads: Vec<Tensor> = out.into_iter().map(Value::into_f32).collect();
+            let (grads_ref, dkv_in_ref, loss_ref) = reference::chunk_bwd(
+                &b,
+                params.tensors(),
+                &tokens,
+                &labels,
+                &kv_in,
+                &dkv_out,
+                loss_scale,
+            );
+            assert_close(&format!("{ctx} bwd loss"), &loss, &Tensor::scalar(loss_ref), TOL);
+            assert_close(&format!("{ctx} dkv_in"), &dkv_in, &dkv_in_ref, TOL);
+            assert_eq!(grads.len(), grads_ref.len(), "{ctx}: grad arity");
+            for (i, (g, gr)) in grads.iter().zip(&grads_ref).enumerate() {
+                assert_close(&format!("{ctx} dparam[{i}]"), g, gr, TOL);
+            }
+        }
+    }
+}
+
+/// (c): the two-phase schedule must equal the single-call fused kernels
+/// *bitwise* — both compose the same phase functions in the same order;
+/// only when the work runs differs. This is the kernel-level half of the
+/// overlap-parity guarantee (`tests/overlap_parity.rs` pins the trainer
+/// half).
+#[test]
+fn two_phase_matches_single_call_bitwise() {
+    let b = load_bundle("tiny", 16).unwrap();
+    let c = b.chunk_len;
+    let dev = NativeDevice::new(&b, &[]).unwrap();
+    let params = ParamStore::init(&b, 6);
+    let v = params.version();
+    let (tokens, labels, kv_in, dkv_out) = problem(&b, 300);
+    let loss_scale = 1.0 / c as f32;
+    let frest = fwd_rest(c, &tokens, &labels, &kv_in);
+    let brest = bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, loss_scale);
+
+    // single-call schedule (forward + cached-acts backward)
+    let single_f = dev.exec_versioned("chunk_fwd", params.tensors(), v, &frest).unwrap();
+    let single_b = dev.exec_versioned("chunk_bwd", params.tensors(), v, &brest).unwrap();
+
+    // two-phase schedule
+    let intra_rest: Vec<Value> = vec![IntTensor::new(vec![c], tokens.to_vec()).into()];
+    dev.exec_versioned("chunk_intra_fwd", params.tensors(), v, &intra_rest).unwrap();
+    let split_f = dev.exec_versioned("chunk_inter_fwd", params.tensors(), v, &frest).unwrap();
+    let bwd_intra_rest = {
+        let mut r = fwd_rest(c, &tokens, &labels, &kv_in);
+        r.push(Tensor::scalar(loss_scale).into());
+        r
+    };
+    dev.exec_versioned("chunk_bwd_intra", params.tensors(), v, &bwd_intra_rest).unwrap();
+    let split_b = dev.exec_versioned("chunk_bwd_inter", params.tensors(), v, &brest).unwrap();
+
+    for (phase, single, split) in [("fwd", &single_f, &split_f), ("bwd", &single_b, &split_b)] {
+        assert_eq!(single.len(), split.len());
+        for (i, (a, b)) in single.iter().zip(split).enumerate() {
+            assert!(
+                a.as_f32().data() == b.as_f32().data(),
+                "{phase} out[{i}] not bitwise equal"
+            );
+        }
+    }
+}
+
+/// An inter phase without its paired intra phase is a coordinator bug
+/// and must be a hard error, never a silent recompute.
+#[test]
+fn inter_without_intra_is_an_error() {
+    let b = load_bundle("tiny", 8).unwrap();
+    let c = b.chunk_len;
+    let dev = NativeDevice::new(&b, &[]).unwrap();
+    let params = ParamStore::init(&b, 7);
+    let v = params.version();
+    let (tokens, labels, kv_in, dkv_out) = problem(&b, 400);
+
+    let err = dev
+        .exec_versioned(
+            "chunk_inter_fwd",
+            params.tensors(),
+            v,
+            &fwd_rest(c, &tokens, &labels, &kv_in),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("chunk_intra_fwd"), "{err:#}");
+
+    let err = dev
+        .exec_versioned(
+            "chunk_bwd_inter",
+            params.tensors(),
+            v,
+            &bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, 0.5),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("chunk_bwd_intra"), "{err:#}");
+
+    // a stale partial (different tokens) must not match either
+    let intra_rest: Vec<Value> = vec![IntTensor::new(vec![c], tokens.to_vec()).into()];
+    dev.exec_versioned("chunk_intra_fwd", params.tensors(), v, &intra_rest).unwrap();
+    let other: Vec<i32> = tokens.iter().map(|&t| (t + 1) % b.config.vocab as i32).collect();
+    let err = dev
+        .exec_versioned(
+            "chunk_inter_fwd",
+            params.tensors(),
+            v,
+            &fwd_rest(c, &other, &labels, &kv_in),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("chunk_intra_fwd"), "{err:#}");
+    dev.clear_phase_partials();
+
+    // and the two-phase kernels reject the unversioned path outright
+    let err = dev
+        .exec_parts("chunk_intra_fwd", params.tensors(), &intra_rest)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("exec_versioned"), "{err:#}");
 }
 
 /// The unfused twins (the Table-5 ablation baseline) must never touch

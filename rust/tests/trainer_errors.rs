@@ -1,0 +1,45 @@
+//! Regression: `train()` must surface a failing worker's *actual* error.
+//!
+//! Before the fix, `train()` blocked on the result channel first; when a
+//! worker returned `Err` before sending its result, `rx.recv()` failed
+//! and the caller saw only the generic "no result from rank 0 (worker
+//! panicked?)" while the real error was discarded with the join handle.
+
+use lasp::coordinator::{train, TrainConfig};
+
+/// The `e2e` bundle ships no `_unfused` twins (mirroring `aot.py`), so a
+/// run with `fused = false` makes every worker fail at device
+/// construction — deterministically, before any communication.
+#[test]
+fn failing_worker_surfaces_its_real_error() {
+    let mut cfg = TrainConfig::new("e2e", 8, 2);
+    cfg.fused = false;
+    cfg.steps = 1;
+    let err = train(&cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    // the real cause, not the old generic channel failure
+    assert!(
+        msg.contains("chunk_fwd_unfused"),
+        "real worker error lost: {msg}"
+    );
+    assert!(
+        msg.contains("worker rank"),
+        "error lacks the failing rank context: {msg}"
+    );
+    assert!(
+        !msg.contains("no result from rank 0"),
+        "generic channel error shadowed the real one: {msg}"
+    );
+}
+
+/// A healthy run still returns a result (the join-first restructuring
+/// must not deadlock or drop the channel payload).
+#[test]
+fn healthy_run_still_returns_result() {
+    let mut cfg = TrainConfig::new("tiny", 32, 2);
+    cfg.steps = 2;
+    cfg.warmup = 10;
+    let r = train(&cfg).unwrap();
+    assert_eq!(r.losses.len(), 2);
+    assert!(r.tokens_per_sec > 0.0);
+}
