@@ -9,6 +9,11 @@
 //! ring schedule (the intra-chunk term hides the KV transfer) and is
 //! asserted to never fall below the sequential LASP column — the
 //! analytic half of the critical-path claim `perf_hotpath` measures.
+//! "LASP (all-gather)" projects the LASP-2 state exchange (one KV
+//! all-gather per layer per direction instead of T−1 chained hops); its
+//! per-rank payload is sequence-length independent, so the column
+//! tracks the LASP curve shape, priced by the collective model instead
+//! of the P2P one.
 //!
 //! Run: cargo bench --bench fig4_speed_comparison
 
@@ -27,8 +32,8 @@ fn main() {
     ] {
         println!("== Fig. 4: {} on 64x A100, parallelism 64 ==\n", shape.name);
         let mut tab = Table::new(&["SeqLen", "LASP", "LASP (overlap)",
-                                   "Ring Attention", "DeepSpeed-Ulysses",
-                                   "Megatron-SP"]);
+                                   "LASP (all-gather)", "Ring Attention",
+                                   "DeepSpeed-Ulysses", "Megatron-SP"]);
         let mut winners = Vec::new();
         for &n in &seqs {
             let mut row = vec![fmt_klen(n)];
@@ -64,6 +69,19 @@ fn main() {
                                      {tp} vs {seq}"
                                 );
                             }
+                            row.push(format!("{tp:.0}"));
+                        }
+                        None => row.push("x (OOM)".into()),
+                    }
+                    match throughput_tokens_per_sec_scheduled(
+                        &shape, m, &topo, n as u64, 64, DdpBackend::Fsdp, 64, 1,
+                        false, RingSchedule::AllGather,
+                    ) {
+                        Some(tp) => {
+                            assert!(
+                                tp.is_finite() && tp > 0.0,
+                                "all-gather projection degenerate at {n}: {tp}"
+                            );
                             row.push(format!("{tp:.0}"));
                         }
                         None => row.push("x (OOM)".into()),

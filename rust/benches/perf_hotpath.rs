@@ -19,6 +19,7 @@ use std::time::Instant;
 use lasp::comm::{CommWorld, Payload};
 use lasp::coordinator::{
     backward_chunk, forward_chunk, KvCache, Placement, RingCtx, RingPhase,
+    Schedule,
 };
 use lasp::model::ParamStore;
 use lasp::runtime::kernel::reference;
@@ -27,11 +28,13 @@ use lasp::tensor::{IntTensor, Tensor, Value};
 use lasp::util::stats::{bench, PhaseTimer, Summary, Table};
 
 /// Wall-clock of one full fwd+bwd ring step over T simulated devices
-/// (barrier-to-barrier on rank 0), sequential vs overlapped schedule.
-/// The critical path of the sequential forward ring is ~T full chunk
+/// (barrier-to-barrier on rank 0), per state-exchange schedule. The
+/// critical path of the sequential forward ring is ~T full chunk
 /// computations; the overlapped one hides the KV-independent intra work
-/// of every waiting rank behind its predecessors' compute.
-fn ring_wallclock(overlap: bool, warmup: usize, iters: usize) -> Summary {
+/// of every waiting rank behind its predecessors' compute; the
+/// all-gather one replaces the chained hops with one collective per
+/// layer per direction.
+fn ring_wallclock(schedule: Schedule, warmup: usize, iters: usize) -> Summary {
     let t = 4usize;
     let bundle = Arc::new(load_bundle("tiny", 32).unwrap());
     let placement = Placement::new(t, t);
@@ -73,7 +76,7 @@ fn ring_wallclock(overlap: bool, warmup: usize, iters: usize) -> Summary {
                         params: &params,
                         step: it,
                         fused: true,
-                        overlap,
+                        schedule,
                     };
                     forward_chunk(&ctx, &tokens, &labels, &mut cache, 0,
                                   RingPhase::Forward, &mut timer)
@@ -203,14 +206,18 @@ fn main() {
     });
     row(&mut tab, &mut json_rows, "chunk_bwd recompute (tiny/C=32)", eng_bwd_rec);
 
-    // 2) the full fwd+bwd ring, sequential vs overlapped schedule — the
+    // 2) the full fwd+bwd ring under each state-exchange schedule — the
     //    forward-ring critical path is what the two-phase split shrinks
-    let ring_seq = ring_wallclock(false, 2, 12);
+    //    and the all-gather collective flattens
+    let ring_seq = ring_wallclock(Schedule::Sequential, 2, 12);
     row(&mut tab, &mut json_rows, "ring fwd+bwd sequential (tiny/C=32,T=4)",
         ring_seq.clone());
-    let ring_ovl = ring_wallclock(true, 2, 12);
+    let ring_ovl = ring_wallclock(Schedule::Overlapped, 2, 12);
     row(&mut tab, &mut json_rows, "ring fwd+bwd overlapped (tiny/C=32,T=4)",
         ring_ovl.clone());
+    let ring_ag = ring_wallclock(Schedule::AllGather, 2, 12);
+    row(&mut tab, &mut json_rows, "ring fwd+bwd allgather (tiny/C=32,T=4)",
+        ring_ag.clone());
 
     // 3) ring-message serialization of a KV state (tensor -> payload)
     let kv = zero_kv(&b);
@@ -266,13 +273,16 @@ fn main() {
     let fwd_speedup = ref_fwd.mean / eng_fwd.mean;
     let bwd_speedup = ref_bwd.mean / eng_bwd.mean;
     let ring_speedup = ring_seq.mean / ring_ovl.mean;
+    let ag_speedup = ring_seq.mean / ring_ag.mean;
     println!("speedup vs pre-refactor  chunk_fwd {fwd_speedup:.2}x  chunk_bwd {bwd_speedup:.2}x");
     println!("ring overlap speedup (fwd+bwd ring, T=4)  {ring_speedup:.2}x");
+    println!("ring allgather speedup (fwd+bwd ring, T=4)  {ag_speedup:.2}x");
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     std::fs::write(
         path,
-        render_json(&json_rows, fwd_speedup, bwd_speedup, ring_speedup),
+        render_json(&json_rows, fwd_speedup, bwd_speedup, ring_speedup,
+                    ag_speedup),
     )
     .unwrap();
     println!("wrote {path}");
@@ -285,6 +295,7 @@ fn render_json(
     fwd_speedup: f64,
     bwd_speedup: f64,
     ring_speedup: f64,
+    ag_speedup: f64,
 ) -> String {
     let mut s = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"rows\": [\n");
     for (i, (name, sum)) in rows.iter().enumerate() {
@@ -299,8 +310,8 @@ fn render_json(
         );
     }
     s += &format!(
-        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}},\n  \"ring_overlap_speedup\": {:.3}\n}}\n",
-        fwd_speedup, bwd_speedup, ring_speedup
+        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}},\n  \"ring_overlap_speedup\": {:.3},\n  \"ring_allgather_speedup\": {:.3}\n}}\n",
+        fwd_speedup, bwd_speedup, ring_speedup, ag_speedup
     );
     s
 }

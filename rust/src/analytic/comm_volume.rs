@@ -54,6 +54,23 @@ pub fn volume_elements(m: SpMethod, b: u64, n: u64, d: u64, h: u64, t: u64) -> f
     }
 }
 
+/// Measured wire bytes of the LASP-2 all-gather schedule over a whole
+/// run: per step, each direction (fwd + bwd) performs one all-gather per
+/// layer, and the substrate implements an all-gather over `t` ranks as
+/// `t·(t−1)` point-to-point sends of one per-layer KV state
+/// (`layer_elems` f64 elements, 8 bytes each on the wire).
+///
+/// This is the exact counterpart of the coordinator's
+/// `OpKind::AllGather` byte counter, pinned in `tests/overlap_parity.rs`.
+pub fn allgather_wire_bytes(
+    layer_elems: u64,
+    n_layers: u64,
+    t: u64,
+    steps: u64,
+) -> u64 {
+    steps * 2 * n_layers * t * (t - 1) * layer_elems * 8
+}
+
 /// The paper's "Simplified Formulation" (common factor B·d dropped).
 pub fn volume_simplified(m: SpMethod, n: u64, d: u64, h: u64, t: u64) -> f64 {
     volume_elements(m, 1, n, d, h, t) / d as f64
@@ -129,6 +146,20 @@ mod tests {
             volume_elements(SpMethod::MegatronSp, 1, n, d, h, t)
                 > volume_elements(SpMethod::RingAttention, 1, n, d, h, t)
         );
+    }
+
+    #[test]
+    fn allgather_bytes_scale_quadratically_in_t_and_linearly_elsewhere() {
+        let base = allgather_wire_bytes(64, 2, 2, 3);
+        // steps·2·layers·t·(t−1)·elems·8 with (t−1) = 1
+        assert_eq!(base, 3 * 2 * 2 * 2 * 64 * 8);
+        // doubling layers or steps doubles traffic…
+        assert_eq!(allgather_wire_bytes(64, 4, 2, 3), 2 * base);
+        assert_eq!(allgather_wire_bytes(64, 2, 2, 6), 2 * base);
+        // …while T scales as t(t−1): 2→4 is ×6
+        assert_eq!(allgather_wire_bytes(64, 2, 4, 3), 6 * base);
+        // single rank: no wire traffic at all
+        assert_eq!(allgather_wire_bytes(64, 2, 1, 3), 0);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod memory;
 pub mod models;
 pub mod speed;
 
-pub use comm_volume::{volume_elements, SpMethod};
+pub use comm_volume::{allgather_wire_bytes, volume_elements, SpMethod};
 pub use memory::{max_seq_len, memory_per_gpu, DdpBackend, MemoryBreakdown};
 pub use models::ModelShape;
 pub use speed::{

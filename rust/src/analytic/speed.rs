@@ -22,17 +22,10 @@ const WIRE_BYTES: f64 = 2.0;
 /// sequences exactly as in Fig. 3's left edge.
 const STEP_OVERHEAD_SEC: f64 = 1.0;
 
-/// Ring schedule for LASP's sequence-parallel communication — the
-/// coordinator's two-phase split, mirrored analytically.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum RingSchedule {
-    /// The recv sits on the critical path (the pre-overlap coordinator).
-    Sequential,
-    /// The intra-chunk term has no dependence on the in-flight KV state,
-    /// so its compute hides ring time (`chunk_intra_fwd` before the
-    /// recv; mirrored backward).
-    Overlapped,
-}
+/// The coordinator's state-exchange schedules, mirrored analytically.
+/// Re-exported from [`crate::schedule`] so the analytic layer and the
+/// coordinator dispatch on the same type.
+pub use crate::schedule::Schedule as RingSchedule;
 
 /// Per-step wall-clock seconds for one training step of `shape` on
 /// sequence `n` split over `t` devices (t == world here, as in the
@@ -135,6 +128,19 @@ pub fn step_time_scheduled(
                 * (topo.all_gather_time(t as usize, ag as u64)
                     + topo.reduce_scatter_time(t as usize, rs as u64))
         }
+    };
+
+    // ---- LASP-2 all-gather schedule ----------------------------------------
+    // The ring's T−1 chained P2P hops collapse into one KV all-gather per
+    // layer per direction; each rank contributes its Table-1 per-layer
+    // state (B·d²/h elements), so per-rank payload is sequence-length
+    // independent but the collective touches every rank.
+    let comm = if method == SpMethod::Lasp && sched == RingSchedule::AllGather {
+        let per_rank =
+            volume_elements(method, batch, n, d, h as u64, t) * WIRE_BYTES;
+        2.0 * l * topo.all_gather_time(t as usize, per_rank as u64)
+    } else {
+        comm
     };
 
     // ---- overlap credit (two-phase LASP ring) ------------------------------
@@ -284,6 +290,34 @@ mod tests {
             // whenever there is ring time to hide (always: per-hop
             // latency is nonzero)
             assert!(ovl < seq, "n={n}: {ovl} vs {seq}");
+        }
+    }
+
+    #[test]
+    fn allgather_schedule_prices_only_lasp() {
+        let topo = topo64();
+        let n = 256 * 1024;
+        let seq = step_time(
+            &TNL_1B, SpMethod::Lasp, &topo, n, 64, DdpBackend::Ddp, 1, 1, false,
+        )
+        .unwrap();
+        let ag = step_time_scheduled(
+            &TNL_1B, SpMethod::Lasp, &topo, n, 64, DdpBackend::Ddp, 1, 1, false,
+            RingSchedule::AllGather,
+        )
+        .unwrap();
+        assert!(ag.is_finite() && ag > 0.0);
+        // same compute, different comm model than the sequential ring
+        assert_ne!(ag, seq, "all-gather arm not exercised");
+        for m in [SpMethod::RingAttention, SpMethod::Ulysses, SpMethod::MegatronSp] {
+            let a = step_time(
+                &TNL_1B, m, &topo, n, 64, DdpBackend::Fsdp, 64, 1, false,
+            );
+            let b = step_time_scheduled(
+                &TNL_1B, m, &topo, n, 64, DdpBackend::Fsdp, 64, 1, false,
+                RingSchedule::AllGather,
+            );
+            assert_eq!(a, b, "{m:?}");
         }
     }
 

@@ -26,10 +26,14 @@ use crate::tensor::Tensor;
 pub mod stats;
 pub use stats::{CommStats, OpKind};
 
-/// Message payload; token scatters are i32, everything else f32.
+/// Message payload; token scatters are i32, ring/collective tensor data
+/// is f32, and the all-gather schedule's KV increments travel as f64
+/// (they are consumed at full accumulator precision by every receiver,
+/// unlike ring states which cross the f32 tensor ABI at each hop).
 #[derive(Clone, Debug)]
 pub enum Payload {
     F32(Vec<f32>),
+    F64(Vec<f64>),
     I32(Vec<i32>),
 }
 
@@ -37,6 +41,7 @@ impl Payload {
     pub fn nbytes(&self) -> u64 {
         match self {
             Payload::F32(v) => 4 * v.len() as u64,
+            Payload::F64(v) => 8 * v.len() as u64,
             Payload::I32(v) => 4 * v.len() as u64,
         }
     }
@@ -44,14 +49,21 @@ impl Payload {
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             Payload::F32(v) => v,
-            Payload::I32(_) => panic!("expected f32 payload"),
+            _ => panic!("expected f32 payload"),
+        }
+    }
+
+    pub fn into_f64(self) -> Vec<f64> {
+        match self {
+            Payload::F64(v) => v,
+            _ => panic!("expected f64 payload"),
         }
     }
 
     pub fn into_i32(self) -> Vec<i32> {
         match self {
             Payload::I32(v) => v,
-            Payload::F32(_) => panic!("expected i32 payload"),
+            _ => panic!("expected i32 payload"),
         }
     }
 }
@@ -406,6 +418,38 @@ impl Communicator {
         slots.into_iter().map(Option::unwrap).collect()
     }
 
+    /// Ring all-gather of raw f64 buffers, in group order. Same ring
+    /// algorithm (and byte accounting) as [`Communicator::all_gather`],
+    /// but the payload never crosses the f32 tensor ABI — the all-gather
+    /// schedule exchanges KV increments at full accumulator precision so
+    /// its local prefix combine reproduces the sequential ring bitwise.
+    /// Wire traffic per rank: `(n-1) * 8 * len` bytes.
+    pub fn all_gather_f64(&self, group: &Group, data: &[f64]) -> Vec<Vec<f64>> {
+        let n = group.size();
+        if n == 1 {
+            return vec![data.to_vec()];
+        }
+        let tag = self.group_tag(group, OpKind::AllGather);
+        let me = group.index_of(self.rank);
+        let next = group.ranks[(me + 1) % n];
+        let prev = group.ranks[(me + n - 1) % n];
+        let mut slots: Vec<Option<Vec<f64>>> = vec![None; n];
+        slots[me] = Some(data.to_vec());
+        let mut cur = data.to_vec();
+        for s in 0..n - 1 {
+            self.send_tagged(
+                next,
+                tag + s as u64,
+                Payload::F64(cur.clone()),
+                OpKind::AllGather,
+            );
+            cur = self.recv_tagged(prev, tag + s as u64).into_f64();
+            let src = (me + n - 1 - s) % n;
+            slots[src] = Some(cur.clone());
+        }
+        slots.into_iter().map(Option::unwrap).collect()
+    }
+
     /// Ring reduce-scatter (sum): every rank contributes `t` (same shape);
     /// rank `i` in the group receives the reduced `i`-th of `n` shards.
     /// Wire traffic per rank: `(n-1)/n * |t|`.
@@ -738,6 +782,120 @@ mod tests {
         // the pop panic poisons the mailbox mutex; the chatty thread may
         // observe that and panic too — only completion matters here
         let _ = chatty.join();
+    }
+
+    #[test]
+    fn all_gather_f64_orders_by_group_and_preserves_bits() {
+        run_world(3, |c| {
+            let g = c.world_group();
+            // values chosen to be unrepresentable in f32: bit-exactness
+            // across the wire is the whole point of the f64 payload
+            let mine = vec![c.rank() as f64 + 1e-12, -(c.rank() as f64) - 0.1];
+            let all = c.all_gather_f64(&g, &mine);
+            assert_eq!(all.len(), 3);
+            for (i, v) in all.iter().enumerate() {
+                assert_eq!(v[0].to_bits(), (i as f64 + 1e-12).to_bits());
+                assert_eq!(v[1].to_bits(), (-(i as f64) - 0.1).to_bits());
+            }
+        });
+    }
+
+    /// Single-rank groups (T=1 rings, one-rank DP groups) must be pure
+    /// no-ops: correct local result, zero wire traffic, no control
+    /// messages left behind for a later collective to misread.
+    #[test]
+    fn single_rank_group_collectives_are_local_noops() {
+        let world = CommWorld::new(2);
+        let comms = world.communicators();
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let g = Group::new(vec![c.rank()]);
+                    let mut t = Tensor::new(vec![3], vec![c.rank() as f32; 3]);
+                    c.all_reduce(&g, &mut t);
+                    assert_eq!(t.data(), &[c.rank() as f32; 3]);
+                    let all = c.all_gather(&g, &t);
+                    assert_eq!(all.len(), 1);
+                    assert_eq!(all[0].data(), t.data());
+                    let all64 = c.all_gather_f64(&g, &[1.5, 2.5]);
+                    assert_eq!(all64, vec![vec![1.5, 2.5]]);
+                    let shard = c.reduce_scatter(&g, &t);
+                    assert_eq!(shard.data(), t.data());
+                    c.broadcast(&g, 0, &mut t);
+                    assert_eq!(t.data(), &[c.rank() as f32; 3]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(world.stats().total_bytes(), 0);
+    }
+
+    /// Non-zero-based subgroups: group-relative indexing everywhere, and
+    /// a group whose leader is not global rank 0 still hands out tags.
+    #[test]
+    fn non_zero_based_subgroup_collectives() {
+        run_world(4, |c| {
+            if c.rank() < 2 {
+                return; // ranks 0/1 sit this one out entirely
+            }
+            let g = Group::new(vec![2, 3]);
+            let me = g.index_of(c.rank());
+            let t = Tensor::new(vec![2], vec![c.rank() as f32; 2]);
+            let all = c.all_gather(&g, &t);
+            assert_eq!(all[0].data(), &[2.0; 2]);
+            assert_eq!(all[1].data(), &[3.0; 2]);
+            let all64 = c.all_gather_f64(&g, &[c.rank() as f64]);
+            assert_eq!(all64, vec![vec![2.0], vec![3.0]]);
+            let shard = c.reduce_scatter(&g, &t);
+            // both ranks contributed [r, r]; shard `me` is the reduced slice
+            assert_eq!(shard.data(), &[5.0]);
+            let mut b = if me == 1 {
+                Tensor::new(vec![2], vec![7.0, 8.0])
+            } else {
+                Tensor::zeros(&[2])
+            };
+            c.broadcast(&g, 1, &mut b);
+            assert_eq!(b.data(), &[7.0, 8.0]);
+        });
+    }
+
+    /// Per-OpKind byte accounting for every collective — the numbers the
+    /// table1 measured-vs-analytic comparison trusts. Ring formulas, per
+    /// rank: all_gather (n-1)*|t|, reduce_scatter (n-1)/n*|t|,
+    /// broadcast (n-1)*|t| from the root, all_gather_f64 (n-1)*8*len.
+    #[test]
+    fn byte_accounting_per_opkind_matches_formulas() {
+        let n = 4u64;
+        let len = 16u64;
+        let world = CommWorld::new(n as usize);
+        let handles: Vec<_> = world
+            .communicators()
+            .into_iter()
+            .map(|c| {
+                thread::spawn(move || {
+                    let g = c.world_group();
+                    let t = Tensor::zeros(&[len as usize]);
+                    c.all_gather(&g, &t);
+                    c.reduce_scatter(&g, &t);
+                    let mut b = Tensor::zeros(&[len as usize]);
+                    c.broadcast(&g, 0, &mut b);
+                    let buf = vec![0.0f64; len as usize];
+                    c.all_gather_f64(&g, &buf);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = world.stats();
+        assert_eq!(s.bytes(OpKind::AllGather), n * (n - 1) * len * 4 + n * (n - 1) * len * 8);
+        assert_eq!(s.msgs(OpKind::AllGather), 2 * n * (n - 1));
+        assert_eq!(s.bytes(OpKind::ReduceScatter), n * (n - 1) * (len / n) * 4);
+        assert_eq!(s.bytes(OpKind::Broadcast), (n - 1) * len * 4);
+        assert_eq!(s.bytes(OpKind::P2p), 0);
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod kv_cache;
 pub mod ring;
 pub mod trainer;
 
+pub use crate::schedule::Schedule;
 pub use data::{distribute, Placement};
 pub use kv_cache::KvCache;
 pub use ring::{backward_chunk, forward_chunk, RingCtx, RingPhase};

@@ -6,20 +6,32 @@
 //! **sequence-length independent**, the paper's central communication
 //! claim.
 //!
-//! Two schedules share this file and are bitwise-identical in results
-//! (`tests/overlap_parity.rs`); they differ only in *when* work runs:
+//! Three [`Schedule`]s share this file and are bitwise-identical in
+//! results (`tests/overlap_parity.rs`); they differ only in *when* and
+//! *how* the state moves:
 //!
-//!  * **sequential** (`overlap = false`, the oracle): one fused
+//!  * **sequential** ([`Schedule::Sequential`], the oracle): one fused
 //!    `chunk_fwd` call after the recv — rank `t` idles for `t` full
 //!    chunk computations even though only the inter-chunk term needs
 //!    the incoming state;
-//!  * **overlapped** (`overlap = true`, the paper's intent): the
-//!    KV-independent `chunk_intra_fwd` is issued *before* the recv, so
-//!    the state transfer and the predecessor's compute hide behind it;
-//!    `chunk_inter_fwd` completes the chunk once the state lands. The
-//!    backward mirrors it: `chunk_bwd_intra` (loss head, final norm,
-//!    top-layer parameter grads) runs while `dKV` is in flight,
-//!    `chunk_bwd_inter` finishes after the recv.
+//!  * **overlapped** ([`Schedule::Overlapped`], the paper's intent):
+//!    the KV-independent `chunk_intra_fwd` is issued *before* the recv,
+//!    so the state transfer and the predecessor's compute hide behind
+//!    it; `chunk_inter_fwd` completes the chunk once the state lands.
+//!    The backward mirrors it: `chunk_bwd_intra` (loss head, final
+//!    norm, top-layer parameter grads) runs while `dKV` is in flight,
+//!    `chunk_bwd_inter` finishes after the recv;
+//!  * **all-gather** ([`Schedule::AllGather`], the LASP-2 exchange):
+//!    no P2P chain at all. Per layer, every rank computes its KV
+//!    increment locally, one `all_gather_f64` shares all increments
+//!    across the SP group, and each rank prefix-combines its own
+//!    incoming state ([`prefix_combine`]) — `2·L` collective rounds
+//!    per step, constant in the ring size `T`, vs the ring's `T−1`
+//!    serial hops per direction. The backward all-gathers the per-layer
+//!    `dKV` increments top-down and suffix-combines
+//!    ([`suffix_combine`]). Increments travel at full f64 and the
+//!    combines round to f32 exactly where the ring's wire does, so the
+//!    results stay bitwise identical to the sequential oracle.
 //!
 //! Every blocking recv is accounted under the `comm_wait` phase and
 //! every kernel call under `compute`, so the overlap is directly
@@ -46,6 +58,7 @@ use super::kv_cache::KvCache;
 use crate::comm::Communicator;
 use crate::model::ParamStore;
 use crate::runtime::Device;
+use crate::schedule::Schedule;
 use crate::tensor::{IntTensor, Tensor, Value};
 use crate::util::stats::PhaseTimer;
 
@@ -80,14 +93,28 @@ pub struct RingCtx<'a> {
     pub step: usize,
     /// kernel-fusion ablation (Table 5): selects the `_unfused` twins
     pub fused: bool,
-    /// two-phase overlapped schedule; requires the fused kernels, so it
-    /// silently degrades to sequential when `fused` is off
-    pub overlap: bool,
+    /// which state-exchange schedule to run; the overlapped and
+    /// all-gather schedules require the fused kernels, so both silently
+    /// degrade to sequential when `fused` is off
+    pub schedule: Schedule,
 }
 
 impl RingCtx<'_> {
+    /// The schedule actually run after the fused-kernel degradation.
+    fn effective(&self) -> Schedule {
+        if self.fused {
+            self.schedule
+        } else {
+            Schedule::Sequential
+        }
+    }
+
     fn overlapped(&self) -> bool {
-        self.overlap && self.fused
+        self.effective() == Schedule::Overlapped
+    }
+
+    fn allgather(&self) -> bool {
+        self.effective() == Schedule::AllGather
     }
 
     fn exec(
@@ -137,6 +164,11 @@ pub fn forward_chunk(
     phase: RingPhase,
     timer: &mut PhaseTimer,
 ) -> Result<ForwardOut> {
+    if ctx.allgather() {
+        // The all-gather schedule has no per-phase P2P tags — `phase`
+        // disambiguation is inherited from the collective tag sequence.
+        return forward_chunk_allgather(ctx, tokens, labels, cache, slot, timer);
+    }
     let rank = ctx.comm.rank();
     let group = ctx.placement.sp_group(ctx.placement.group_of(rank));
     let t_idx = ctx.placement.chunk_index(rank);
@@ -205,6 +237,18 @@ pub fn backward_chunk(
     loss_scale: f32,
     timer: &mut PhaseTimer,
 ) -> Result<BackwardOut> {
+    if ctx.allgather() {
+        return backward_chunk_allgather(
+            ctx,
+            tokens,
+            labels,
+            cache,
+            slot,
+            kv_in_fallback,
+            loss_scale,
+            timer,
+        );
+    }
     let rank = ctx.comm.rank();
     let group = ctx.placement.sp_group(ctx.placement.group_of(rank));
     let t_idx = ctx.placement.chunk_index(rank);
@@ -276,9 +320,190 @@ pub fn backward_chunk(
     Ok(BackwardOut { grads, loss_sum })
 }
 
+/// The LASP-2 all-gather forward for one rank: per layer, compute the
+/// local KV increment, all-gather every rank's increment over the SP
+/// group, prefix-combine this rank's incoming state locally, and step
+/// the device-resident pass. One collective round per layer — `L`
+/// rounds total, independent of the ring size.
+fn forward_chunk_allgather(
+    ctx: &RingCtx,
+    tokens: &[i32],
+    labels: &[i32],
+    cache: &mut KvCache,
+    slot: usize,
+    timer: &mut PhaseTimer,
+) -> Result<ForwardOut> {
+    let rank = ctx.comm.rank();
+    let group = ctx.placement.sp_group(ctx.placement.group_of(rank));
+    let t_idx = ctx.placement.chunk_index(rank);
+    debug_assert_eq!(group.ranks[t_idx], rank, "placement/group mismatch");
+    let kv_shape = ctx.dev.bundle().kv_state_shape.clone();
+    let head_elems = kv_shape[2] * kv_shape[3];
+    let lam_c = ctx.dev.decay_pow_chunk()?;
+    let version = ctx.params.version();
+
+    let mut delta = timer.time("compute", || {
+        ctx.dev.ag_fwd_start(ctx.params.tensors(), version, tokens, labels)
+    })?;
+    let mut kv_in_stack: Vec<f32> =
+        Vec::with_capacity(kv_shape.iter().product());
+    loop {
+        let all = timer
+            .time("comm_wait", || ctx.comm.all_gather_f64(&group, &delta));
+        let kv_l = prefix_combine(&all, t_idx, &lam_c, head_elems);
+        kv_in_stack.extend(kv_l.iter().map(|&x| x as f32));
+        match timer.time("compute", || ctx.dev.ag_fwd_step(&kv_l))? {
+            Some(d) => delta = d,
+            None => break,
+        }
+    }
+    let (loss_sum, kv_out) =
+        timer.time("compute", || ctx.dev.ag_fwd_finish())?;
+
+    // The assembled incoming stack is exactly what the ring would have
+    // received on the wire (the combine rounds to f32 per hop), so the
+    // KV cache holds identical bits regardless of schedule.
+    let kv_in = Tensor::new(kv_shape, kv_in_stack);
+    cache.put(slot, &kv_in);
+    Ok(ForwardOut { loss_sum, kv_in, kv_out })
+}
+
+/// The all-gather backward for one rank: walk the layers top-down,
+/// all-gather each layer's local `dKV` increment, suffix-combine this
+/// rank's incoming cotangent, and step the device-resident pass.
+fn backward_chunk_allgather(
+    ctx: &RingCtx,
+    tokens: &[i32],
+    labels: &[i32],
+    cache: &KvCache,
+    slot: usize,
+    kv_in_fallback: Option<&Tensor>,
+    loss_scale: f32,
+    timer: &mut PhaseTimer,
+) -> Result<BackwardOut> {
+    let rank = ctx.comm.rank();
+    let group = ctx.placement.sp_group(ctx.placement.group_of(rank));
+    let t_idx = ctx.placement.chunk_index(rank);
+    debug_assert_eq!(group.ranks[t_idx], rank, "placement/group mismatch");
+    let kv_shape = &ctx.dev.bundle().kv_state_shape;
+    let head_elems = kv_shape[2] * kv_shape[3];
+    let lam_c = ctx.dev.decay_pow_chunk()?;
+    let version = ctx.params.version();
+
+    let kv_in = cache
+        .get(slot)
+        .or(kv_in_fallback)
+        .expect("KV state neither cached nor recomputed — coordinator bug")
+        .clone();
+
+    let mut delta = timer.time("compute", || {
+        ctx.dev.ag_bwd_start(
+            ctx.params.tensors(),
+            version,
+            tokens,
+            labels,
+            &kv_in,
+            loss_scale,
+        )
+    })?;
+    loop {
+        let all = timer
+            .time("comm_wait", || ctx.comm.all_gather_f64(&group, &delta));
+        let dkv_l = suffix_combine(&all, t_idx, &lam_c, head_elems);
+        match timer.time("compute", || ctx.dev.ag_bwd_step(&dkv_l))? {
+            Some(d) => delta = d,
+            None => break,
+        }
+    }
+    let (grads, loss_sum) =
+        timer.time("compute", || ctx.dev.ag_bwd_finish())?;
+    Ok(BackwardOut { grads, loss_sum })
+}
+
+/// Prefix-combine the gathered per-rank KV increments into rank
+/// `t_idx`'s incoming state for one layer:
+/// `KV_in_t = Σ_{s<t} λ^{C(t−1−s)} ΔKV_s`, evaluated exactly as the
+/// sequential ring chains it — oldest increment first, one
+/// `λ^C·kv + Δ` per hop (`attention_head_inter`'s state update), with
+/// the accumulator rounded to f32 after every hop precisely where the
+/// ring's f32 wire transfer rounds. This per-hop rounding emulation is
+/// what keeps the all-gather schedule bitwise identical to the oracle.
+fn prefix_combine(
+    all: &[Vec<f64>],
+    t_idx: usize,
+    lam_c: &[f64],
+    head_elems: usize,
+) -> Vec<f64> {
+    let n = all.first().map_or(0, Vec::len);
+    let mut out = vec![0.0f64; n];
+    for (h, &pwc) in lam_c.iter().enumerate() {
+        for e in h * head_elems..(h + 1) * head_elems {
+            let mut acc = 0.0f32;
+            for s in 0..t_idx {
+                acc = (pwc * acc as f64 + all[s][e]) as f32;
+            }
+            out[e] = acc as f64;
+        }
+    }
+    out
+}
+
+/// Suffix-combine the gathered per-rank `dKV` increments into rank
+/// `t_idx`'s incoming cotangent for one layer — the backward-ring
+/// mirror of [`prefix_combine`]: newest increment first,
+/// `Δd + λ^C·dkv` per hop (`attention_head_bwd_inter`'s accumulation
+/// on top of the Eq.-20 intra term), f32-rounded per hop like the wire.
+fn suffix_combine(
+    all: &[Vec<f64>],
+    t_idx: usize,
+    lam_c: &[f64],
+    head_elems: usize,
+) -> Vec<f64> {
+    let n = all.first().map_or(0, Vec::len);
+    let mut out = vec![0.0f64; n];
+    for (h, &pwc) in lam_c.iter().enumerate() {
+        for e in h * head_elems..(h + 1) * head_elems {
+            let mut acc = 0.0f32;
+            for s in (t_idx + 1..all.len()).rev() {
+                acc = (all[s][e] + pwc * acc as f64) as f32;
+            }
+            out[e] = acc as f64;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn combines_chain_like_the_ring_with_per_head_decay() {
+        // 3 ranks, 2 heads (λ^C = 0.5 and 0.25), 2 elems per head.
+        let lam_c = [0.5f64, 0.25];
+        let all = vec![
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![10.0, 20.0, 30.0, 40.0],
+            vec![100.0, 200.0, 300.0, 400.0],
+        ];
+        // rank 0 has no predecessors; the last rank has no successors
+        assert!(prefix_combine(&all, 0, &lam_c, 2).iter().all(|&x| x == 0.0));
+        assert!(suffix_combine(&all, 2, &lam_c, 2).iter().all(|&x| x == 0.0));
+        // rank 1's incoming state is exactly rank 0's increment
+        assert_eq!(prefix_combine(&all, 1, &lam_c, 2), all[0]);
+        // rank 2 chains two hops: λ^C·(λ^C·0 + Δ0) + Δ1, per head
+        assert_eq!(
+            prefix_combine(&all, 2, &lam_c, 2),
+            vec![10.5, 21.0, 30.75, 41.0]
+        );
+        // backward mirrors: rank 1 sees rank 2's increment; rank 0 sees
+        // Δ1 + λ^C·Δ2 per head
+        assert_eq!(suffix_combine(&all, 1, &lam_c, 2), all[2]);
+        assert_eq!(
+            suffix_combine(&all, 0, &lam_c, 2),
+            vec![60.0, 120.0, 105.0, 140.0]
+        );
+    }
 
     #[test]
     fn tags_are_disjoint_across_steps_and_phases() {

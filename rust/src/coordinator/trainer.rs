@@ -21,6 +21,7 @@ use crate::comm::{CommWorld, Communicator, OpKind};
 use crate::model::ParamStore;
 use crate::optim::DistOptimizer;
 use crate::runtime::{load_bundle, Bundle, Device};
+use crate::schedule::Schedule;
 use crate::tensor::Tensor;
 use crate::train::data::DataGen;
 use crate::util::stats::PhaseTimer;
@@ -44,11 +45,15 @@ pub struct TrainConfig {
     pub fused: bool,
     /// KV-state-cache ablation (Table 5): off ⇒ replay the forward ring
     pub kv_cache: bool,
-    /// two-phase overlapped ring schedule (default): intra-chunk work
-    /// runs while the KV/dKV state is in flight. Bitwise-identical to
-    /// the sequential oracle (`overlap = false`); requires `fused`, so
-    /// it degrades to sequential under the fusion ablation.
-    pub overlap: bool,
+    /// state-exchange schedule (see [`Schedule`]); all three are
+    /// bitwise-identical in results. The overlapped and all-gather
+    /// schedules require `fused`, so both degrade to sequential under
+    /// the fusion ablation.
+    pub schedule: Schedule,
+    /// override the replicated optimizer's gradient-bucket size in
+    /// elements (`None` = backend default). Small values force the
+    /// multi-bucket sync path even on tiny models.
+    pub bucket_elems: Option<usize>,
     /// log every k steps (0 = silent)
     pub log_every: usize,
 }
@@ -67,7 +72,8 @@ impl TrainConfig {
             seed: 0,
             fused: true,
             kv_cache: true,
-            overlap: true,
+            schedule: Schedule::default(),
+            bucket_elems: None,
             log_every: 0,
         }
     }
@@ -96,6 +102,11 @@ pub struct TrainResult {
     pub ring_bytes: u64,
     /// total collective bytes (gradient sync + data scatter)
     pub collective_bytes: u64,
+    /// all-gather traffic only (LASP-2 state exchange; zero on the ring
+    /// schedules when the gradient sync uses all-reduce)
+    pub allgather_bytes: u64,
+    /// number of point-to-point sends inside all-gather collectives
+    pub allgather_msgs: u64,
     pub kv_cache_peak_bytes: usize,
 }
 
@@ -167,6 +178,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         phases,
         ring_bytes: stats.bytes(OpKind::P2p),
         collective_bytes: stats.total_bytes() - stats.bytes(OpKind::P2p),
+        allgather_bytes: stats.bytes(OpKind::AllGather),
+        allgather_msgs: stats.msgs(OpKind::AllGather),
         kv_cache_peak_bytes: kv_peak,
     })
 }
@@ -190,7 +203,7 @@ fn worker(
     // Each thread compiles its own executables (PJRT objects are !Send);
     // the bundle itself is shared, not cloned.
     let names: Vec<&str> = if cfg.fused {
-        if cfg.overlap {
+        if cfg.schedule == Schedule::Overlapped {
             vec![
                 "chunk_fwd",
                 "chunk_bwd",
@@ -200,6 +213,9 @@ fn worker(
                 "chunk_bwd_inter",
             ]
         } else {
+            // Sequential needs only the monolithic pair; the all-gather
+            // schedule steps through native-only device entry points and
+            // keeps the pair around for the KV-cache replay ablation.
             vec!["chunk_fwd", "chunk_bwd"]
         }
     } else {
@@ -212,6 +228,9 @@ fn worker(
     let mut params = ParamStore::init(&bundle, cfg.seed);
     let mut optim =
         DistOptimizer::new(cfg.backend, &params, comm.world_size(), cfg.lr, cfg.warmup);
+    if let Some(elems) = cfg.bucket_elems {
+        optim.set_bucket_elems(elems);
+    }
     let datagen = DataGen::new(cfg.seed, bundle.config.vocab);
     let mut cache = KvCache::new(cfg.kv_cache, 1);
 
@@ -246,7 +265,7 @@ fn worker(
                 params: &params,
                 step,
                 fused: cfg.fused,
-                overlap: cfg.overlap,
+                schedule: cfg.schedule,
             };
 
             // ---- Algorithm 2: forward ring ---------------------------------

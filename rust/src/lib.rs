@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod schedule;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -11,7 +11,7 @@
 use anyhow::Result;
 use lasp::analytic::{self, DdpBackend, SpMethod};
 use lasp::cluster::Topology;
-use lasp::coordinator::{train, TrainConfig};
+use lasp::coordinator::{train, Schedule, TrainConfig};
 use lasp::runtime::{load_bundle, Device};
 use lasp::train::{evaluate, DataGen};
 use lasp::util::cli::Cli;
@@ -48,10 +48,14 @@ fn main() -> Result<()> {
                 .opt("seed", "0", "RNG seed")
                 .opt("backend", "ddp", "ddp|legacy|zero1|zero2|zero3|fsdp")
                 .opt("log-every", "5", "log interval")
+                .opt("schedule", "overlapped",
+                     "state-exchange schedule: sequential|overlapped|allgather \
+                      (all bitwise identical)")
+                .opt("bucket-elems", "0",
+                     "gradient bucket size in elements for ddp (0 = default)")
                 .flag("unfused", "disable kernel fusion (Table-5 ablation)")
                 .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)")
-                .flag("no-overlap", "sequential ring schedule (the two-phase \
-                      overlap oracle; numerics are bitwise identical)");
+                .flag("no-overlap", "deprecated: alias for --schedule sequential");
             let a = cli.parse_from(&args).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(2)
@@ -66,12 +70,29 @@ fn main() -> Result<()> {
             cfg.backend = parse_backend(a.get("backend"));
             cfg.fused = !a.has("unfused");
             cfg.kv_cache = !a.has("no-kv-cache");
-            cfg.overlap = !a.has("no-overlap");
+            cfg.schedule = Schedule::parse(a.get("schedule")).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            if a.has("no-overlap") {
+                eprintln!(
+                    "warning: --no-overlap is deprecated; use --schedule sequential"
+                );
+                cfg.schedule = Schedule::Sequential;
+            }
+            let bucket = a.get_usize("bucket-elems");
+            cfg.bucket_elems = if bucket == 0 { None } else { Some(bucket) };
             cfg.log_every = a.get_usize("log-every");
             let r = train(&cfg)?;
             println!("final loss: {:.4}", r.losses.last().unwrap());
             println!("throughput: {:.1} tokens/sec", r.tokens_per_sec);
             println!("ring bytes: {} (KV/dKV states)", r.ring_bytes);
+            if r.allgather_bytes > 0 {
+                println!(
+                    "all-gather bytes: {} in {} sends",
+                    r.allgather_bytes, r.allgather_msgs
+                );
+            }
             println!("phase breakdown (rank 0):\n{}", r.phases.report());
             if cmd == "eval" {
                 let bundle = load_bundle(&cfg.config, cfg.chunk)?;

@@ -63,6 +63,13 @@ impl ParamStore {
         self.version
     }
 
+    /// Build a store from raw tensors (optimizer/sync test harnesses —
+    /// no bundle needed).
+    pub fn from_tensors(tensors: Vec<Tensor>) -> ParamStore {
+        let names = (0..tensors.len()).map(|i| format!("p{i}")).collect();
+        ParamStore { tensors, names, version: fresh_version() }
+    }
+
     /// All-zeros gradients with matching shapes.
     pub fn zeros_like(&self) -> Vec<Tensor> {
         self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect()

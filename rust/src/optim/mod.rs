@@ -162,6 +162,17 @@ impl DistOptimizer {
         }
     }
 
+    /// Override the gradient-bucket size (in elements) on the replicated
+    /// paths; no-op for sharded backends and the legacy single-bucket
+    /// path. Small values force the multi-bucket sync even on tiny
+    /// models (`TrainConfig::bucket_elems` plumbs this through).
+    pub fn set_bucket_elems(&mut self, elems: usize) {
+        if let DistOptimizer::Replicated { bucket_elems, legacy: false, .. } = self
+        {
+            *bucket_elems = elems.max(1);
+        }
+    }
+
     /// Synchronize `grads` (already summed over local chunks) across
     /// `group`, apply AdamW, and leave every rank with updated, identical
     /// parameters. Gradients arrive as *sums*; `scale` converts to the
@@ -293,6 +304,77 @@ mod tests {
         assert!((pre - 50.0).abs() < 1e-6);
         let post: f64 = g.iter().map(|t| t.sq_norm()).sum::<f64>().sqrt();
         assert!((post - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bucketed_sync_matches_legacy_flat_allreduce() {
+        use crate::comm::CommWorld;
+        // Two ranks contribute different gradients; tensors of 3/2/4
+        // elements with a 3-element bucket force several flushes on the
+        // bucketed path. Bucketing only regroups the flat all-reduce, so
+        // the resulting parameters must be bitwise identical to legacy's
+        // single flat all-reduce.
+        let run = |legacy: bool, bucket: Option<usize>| -> Vec<Vec<f32>> {
+            let world = CommWorld::new(2);
+            let mut out = Vec::new();
+            let mut handles = Vec::new();
+            for comm in world.communicators() {
+                handles.push(std::thread::spawn(move || {
+                    let rank = comm.rank();
+                    let group = Group::new(vec![0, 1]);
+                    let tensors: Vec<Tensor> = [3usize, 2, 4]
+                        .iter()
+                        .map(|&n| Tensor::new(vec![n], vec![0.5; n]))
+                        .collect();
+                    let mut params = ParamStore::from_tensors(tensors);
+                    let backend = if legacy {
+                        DdpBackend::LegacyDdp
+                    } else {
+                        DdpBackend::Ddp
+                    };
+                    let mut opt =
+                        DistOptimizer::new(backend, &params, 2, 1e-2, 1);
+                    if let Some(b) = bucket {
+                        opt.set_bucket_elems(b);
+                    }
+                    for step in 0..3 {
+                        let mut grads: Vec<Tensor> = params
+                            .tensors()
+                            .iter()
+                            .enumerate()
+                            .map(|(i, t)| {
+                                let v: Vec<f32> = (0..t.len())
+                                    .map(|e| {
+                                        (rank as f32 + 1.0)
+                                            * (0.1 + i as f32 + e as f32)
+                                            * (step + 1) as f32
+                                            * 1e-3
+                                    })
+                                    .collect();
+                                Tensor::new(t.shape().to_vec(), v)
+                            })
+                            .collect();
+                        opt.step(&comm, &group, &mut params, &mut grads, 0.5);
+                    }
+                    params
+                        .tensors()
+                        .iter()
+                        .map(|t| t.data().to_vec())
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                out.push(h.join().unwrap());
+            }
+            // both ranks end with identical replicas
+            assert_eq!(out[0], out[1]);
+            out.remove(0)
+        };
+        let legacy = run(true, None);
+        let bucketed = run(false, Some(3));
+        let default_bucket = run(false, None);
+        assert_eq!(legacy, bucketed);
+        assert_eq!(legacy, default_bucket);
     }
 
     #[test]

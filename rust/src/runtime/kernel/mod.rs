@@ -78,28 +78,28 @@ pub struct Acts {
     pub(crate) y: Vec<f64>,       // (C, d) final-normed hidden
 }
 
+impl LayerActs {
+    fn elems(&self) -> usize {
+        self.x_in.len()
+            + self.h.len()
+            + self.zq.len()
+            + self.zk.len()
+            + self.q.len()
+            + self.k.len()
+            + self.v.len()
+            + self.o.len()
+            + self.on.len()
+            + self.x_mid.len()
+            + self.h2.len()
+            + self.z1.len()
+            + self.z3.len()
+    }
+}
+
 impl Acts {
     /// Resident bytes — the per-worker activation-cache bound.
     pub fn nbytes(&self) -> usize {
-        let per_layer: usize = self
-            .layers
-            .iter()
-            .map(|l| {
-                l.x_in.len()
-                    + l.h.len()
-                    + l.zq.len()
-                    + l.zk.len()
-                    + l.q.len()
-                    + l.k.len()
-                    + l.v.len()
-                    + l.o.len()
-                    + l.on.len()
-                    + l.x_mid.len()
-                    + l.h2.len()
-                    + l.z1.len()
-                    + l.z3.len()
-            })
-            .sum();
+        let per_layer: usize = self.layers.iter().map(LayerActs::elems).sum();
         8 * (per_layer + self.x_final.len() + self.y.len())
     }
 }
@@ -118,6 +118,24 @@ pub(crate) struct LayerIntra {
     heads: Vec<HeadIntra>,
 }
 
+impl LayerIntra {
+    fn elems(&self) -> usize {
+        let panels = self.x_in.len()
+            + self.h.len()
+            + self.zq.len()
+            + self.zk.len()
+            + self.q.len()
+            + self.k.len()
+            + self.v.len();
+        let heads: usize = self
+            .heads
+            .iter()
+            .map(|h| h.oh.len() + h.qs.len() + h.kv_add.len())
+            .sum();
+        panels + heads
+    }
+}
+
 /// The KV-independent forward phase of one chunk (paper §3.3: the
 /// intra-chunk term has no dependence on `KV_{t-1}`): embedding plus the
 /// first layer's projections and per-head intra partials. Everything
@@ -130,20 +148,33 @@ pub struct FwdIntra {
 impl FwdIntra {
     /// Resident bytes while the partial waits for the recv.
     pub fn nbytes(&self) -> usize {
-        let l = &self.layer0;
-        let panels: usize = l.x_in.len()
-            + l.h.len()
-            + l.zq.len()
-            + l.zk.len()
-            + l.q.len()
-            + l.k.len()
-            + l.v.len();
-        let heads: usize = l
-            .heads
-            .iter()
-            .map(|h| h.oh.len() + h.qs.len() + h.kv_add.len())
-            .sum();
-        8 * (panels + heads)
+        8 * self.layer0.elems()
+    }
+}
+
+/// In-flight state of the all-gather forward schedule — the per-layer
+/// stepping decomposition of [`Kernel::forward_full`]. Each
+/// [`Kernel::ag_forward_step`] consumes the prefix-combined incoming
+/// state for one layer and emits the next layer's KV increment, so the
+/// coordinator can interleave one all-gather per layer. The FP-op
+/// sequence is identical to `forward_full` — the bitwise-parity
+/// guarantee extends to this schedule (`tests/overlap_parity.rs`).
+pub struct AgFwd {
+    next_layer: usize,
+    intra: Option<LayerIntra>,
+    layers: Vec<LayerActs>,
+    x: Option<Vec<f64>>,
+    kv_in: Vec<f64>,
+    kv_out: Vec<f64>,
+}
+
+impl AgFwd {
+    /// Resident bytes while the state waits for the next all-gather.
+    pub fn nbytes(&self) -> usize {
+        let layers: usize = self.layers.iter().map(LayerActs::elems).sum();
+        let intra = self.intra.as_ref().map_or(0, LayerIntra::elems);
+        let x = self.x.as_ref().map_or(0, Vec::len);
+        8 * (layers + intra + x + self.kv_in.len() + self.kv_out.len())
     }
 }
 
@@ -174,6 +205,56 @@ impl BwdIntra {
         self.acts.nbytes()
             + 8 * (heads + grads + self.dkv_in.len() + self.dx_mid.len())
     }
+}
+
+/// In-flight state of the all-gather backward schedule — the per-layer
+/// stepping decomposition of [`Kernel::backward`], walking the layers
+/// top-down. Each [`Kernel::ag_backward_step`] consumes the
+/// suffix-combined `dKV` cotangent for the pending layer and emits the
+/// next-lower layer's cotangent increment.
+pub struct AgBwd {
+    layer: usize,
+    done: bool,
+    tokens: Vec<i32>,
+    kv_in: Vec<f64>,
+    acts: Acts,
+    loss: f64,
+    dparams: Vec<Vec<f64>>,
+    dkv_in: Vec<f64>,
+    dx_mid: Vec<f64>,
+    heads: Vec<HeadBwdIntra>,
+}
+
+impl AgBwd {
+    /// Resident bytes while the state waits for the next all-gather.
+    pub fn nbytes(&self) -> usize {
+        let heads: usize = self
+            .heads
+            .iter()
+            .map(|h| {
+                h.dqh.len() + h.dkh.len() + h.dvh.len() + h.vd.len() + h.kd.len()
+            })
+            .sum();
+        let grads: usize = self.dparams.iter().map(Vec::len).sum();
+        self.acts.nbytes()
+            + 8 * (heads
+                + grads
+                + self.kv_in.len()
+                + self.dkv_in.len()
+                + self.dx_mid.len())
+    }
+}
+
+/// Head-concatenated KV increment of one layer's intra partials — the
+/// (H, dk, dv) payload of the all-gather exchange, kept in f64 so the
+/// local prefix combine can reproduce the ring arithmetic bit-for-bit.
+fn delta_of(heads: &[HeadIntra]) -> Vec<f64> {
+    let mut d =
+        Vec::with_capacity(heads.iter().map(|h| h.kv_add.len()).sum());
+    for h in heads {
+        d.extend_from_slice(&h.kv_add);
+    }
+    d
 }
 
 /// The chunk-kernel engine for one bundle: model dimensions plus the
@@ -603,6 +684,239 @@ impl Kernel {
         ws.put(dx);
 
         (dparams, dkv_in, loss)
+    }
+
+    /// Per-head decay factors `λ_h^C` — the constants the all-gather
+    /// coordinator combines exchanged increments with.
+    pub fn decay_pow_chunk(&self) -> Vec<f64> {
+        self.pw.iter().map(|pw| pw[self.c]).collect()
+    }
+
+    /// All-gather schedule, forward start: embedding plus layer 0's
+    /// KV-independent work. Returns the in-flight state and layer 0's KV
+    /// increment (this chunk's `ΔKV` contribution to the state chain).
+    pub fn ag_forward_start(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        ws: &mut Workspace,
+    ) -> (AgFwd, Vec<f64>) {
+        let layer_elems = self.n_heads * self.dh * self.dh;
+        let intra = self.forward_intra(p, tokens, ws);
+        let delta = delta_of(&intra.layer0.heads);
+        let st = AgFwd {
+            next_layer: 0,
+            intra: Some(intra.layer0),
+            layers: Vec::with_capacity(self.n_layers),
+            x: None,
+            kv_in: vec![0.0; self.n_layers * layer_elems],
+            kv_out: vec![0.0; self.n_layers * layer_elems],
+        };
+        (st, delta)
+    }
+
+    /// All-gather schedule, forward step: completes the pending layer
+    /// with its prefix-combined incoming state `kv_l`, then starts the
+    /// next layer and returns its increment — or `None` once the last
+    /// layer is done (call [`Kernel::ag_forward_finish`] next).
+    pub fn ag_forward_step(
+        &self,
+        p: &[Vec<f64>],
+        st: &mut AgFwd,
+        kv_l: &[f64],
+        ws: &mut Workspace,
+    ) -> Option<Vec<f64>> {
+        let le = self.n_heads * self.dh * self.dh;
+        let l = st.next_layer;
+        assert!(l < self.n_layers, "ag_forward_step after the last layer");
+        st.kv_in[l * le..(l + 1) * le].copy_from_slice(kv_l);
+        let intra =
+            st.intra.take().expect("ag_forward_step: no layer in flight");
+        let (acts_l, x_out) = self.layer_finish(
+            p,
+            layer_base(l),
+            intra,
+            &st.kv_in[l * le..(l + 1) * le],
+            &mut st.kv_out[l * le..(l + 1) * le],
+            ws,
+        );
+        st.layers.push(acts_l);
+        st.next_layer = l + 1;
+        if st.next_layer < self.n_layers {
+            let li = self.layer_intra(p, layer_base(st.next_layer), x_out, ws);
+            let delta = delta_of(&li.heads);
+            st.intra = Some(li);
+            Some(delta)
+        } else {
+            st.x = Some(x_out);
+            None
+        }
+    }
+
+    /// All-gather schedule, forward finish: the final norm. Returns the
+    /// retained activations plus the assembled incoming and outgoing
+    /// state stacks — the exact values the ring schedules would have
+    /// received and sent.
+    pub fn ag_forward_finish(
+        &self,
+        p: &[Vec<f64>],
+        st: AgFwd,
+    ) -> (Acts, Vec<f64>, Vec<f64>) {
+        let AgFwd { next_layer, layers, x, kv_in, kv_out, .. } = st;
+        assert_eq!(
+            next_layer, self.n_layers,
+            "ag_forward_finish before all layers stepped"
+        );
+        let x = x.expect("ag_forward_finish: missing residual stream");
+        let y = rmsnorm(&x, Some(&p[P_FINAL_NORM]), self.c, self.d);
+        (Acts { layers, x_final: x, y }, kv_in, kv_out)
+    }
+
+    /// All-gather schedule, backward start: loss head, final norm and
+    /// the top layer's dKV-independent cotangents (exactly
+    /// [`Kernel::backward_intra`]). Returns the in-flight state and the
+    /// top layer's `dKV` increment `qsᵀ·do` (Eq. 20's intra term).
+    pub fn ag_backward_start(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        labels: &[i32],
+        kv_in: &[f64],
+        loss_scale: f64,
+        acts: Option<Acts>,
+        ws: &mut Workspace,
+    ) -> (AgBwd, Vec<f64>) {
+        let le = self.n_heads * self.dh * self.dh;
+        let l_top = self.n_layers - 1;
+        let BwdIntra { acts, loss, dparams, dkv_in, dx_mid, heads } =
+            self.backward_intra(p, tokens, labels, kv_in, loss_scale, acts, ws);
+        let delta = dkv_in[l_top * le..(l_top + 1) * le].to_vec();
+        let st = AgBwd {
+            layer: l_top,
+            done: false,
+            tokens: tokens.to_vec(),
+            kv_in: kv_in.to_vec(),
+            acts,
+            loss,
+            dparams,
+            dkv_in,
+            dx_mid,
+            heads,
+        };
+        (st, delta)
+    }
+
+    /// All-gather schedule, backward step: completes the pending layer
+    /// with its suffix-combined `dKV` cotangent, then runs the
+    /// next-lower layer's dKV-independent work and returns that layer's
+    /// increment — or `None` after the embedding scatter closes the pass
+    /// (call [`Kernel::ag_backward_finish`] next).
+    pub fn ag_backward_step(
+        &self,
+        p: &[Vec<f64>],
+        st: &mut AgBwd,
+        dkv_l: &[f64],
+        ws: &mut Workspace,
+    ) -> Option<Vec<f64>> {
+        let AgBwd {
+            layer,
+            done,
+            tokens,
+            kv_in,
+            acts,
+            dparams,
+            dkv_in,
+            dx_mid,
+            heads,
+            ..
+        } = st;
+        assert!(!*done, "ag_backward_step after completion");
+        let (c, d) = (self.c, self.d);
+        let he = self.dh * self.dh;
+        let le = self.n_heads * he;
+        let l = *layer;
+        let b = layer_base(l);
+
+        // complete layer l: per-head state-update cotangents + merge,
+        // then the projection backward — the op order of backward_finish
+        let mut dq = ws.take(c * d);
+        let mut dk = ws.take(c * d);
+        let mut dv = ws.take(c * d);
+        for (hh, head) in heads.drain(..).enumerate() {
+            self.attention_head_bwd_inter(
+                hh,
+                head,
+                &dkv_l[hh * he..(hh + 1) * he],
+                &mut dq,
+                &mut dk,
+                &mut dv,
+                &mut dkv_in[l * le + hh * he..l * le + (hh + 1) * he],
+                ws,
+            );
+        }
+        let dx = self.layer_bwd_proj(
+            p,
+            b,
+            &acts.layers[l],
+            dq,
+            dk,
+            dv,
+            std::mem::take(dx_mid),
+            dparams,
+            ws,
+        );
+
+        if l == 0 {
+            // embedding lookup backward closes the pass
+            let dembed = &mut dparams[P_EMBED];
+            for (i, &t) in tokens.iter().enumerate() {
+                let row = t as usize * d;
+                gemm::axpy(
+                    &mut dembed[row..row + d],
+                    1.0,
+                    &dx[i * d..(i + 1) * d],
+                );
+            }
+            ws.put(dx);
+            *done = true;
+            None
+        } else {
+            // next-lower layer's dKV-independent work
+            let lm = l - 1;
+            let b = layer_base(lm);
+            let a = &acts.layers[lm];
+            let new_dx_mid = self.layer_bwd_ffn(p, b, a, dx, dparams, ws);
+            let do_ =
+                self.layer_bwd_attn_out(p, b, a, &new_dx_mid, dparams, ws);
+            let new_heads: Vec<HeadBwdIntra> = (0..self.n_heads)
+                .map(|hh| {
+                    self.attention_head_bwd_intra(
+                        hh,
+                        &a.q,
+                        &a.k,
+                        &a.v,
+                        &kv_in[lm * le + hh * he..lm * le + (hh + 1) * he],
+                        &do_,
+                        &mut dkv_in[lm * le + hh * he..lm * le + (hh + 1) * he],
+                        ws,
+                    )
+                })
+                .collect();
+            ws.put(do_);
+            let delta = dkv_in[lm * le..(lm + 1) * le].to_vec();
+            *dx_mid = new_dx_mid;
+            *heads = new_heads;
+            *layer = lm;
+            Some(delta)
+        }
+    }
+
+    /// All-gather schedule, backward finish. Returns (dparams in
+    /// manifest order, dkv_in stack, raw loss_sum) like
+    /// [`Kernel::backward`].
+    pub fn ag_backward_finish(&self, st: AgBwd) -> (Vec<Vec<f64>>, Vec<f64>, f64) {
+        assert!(st.done, "ag_backward_finish before all layers stepped");
+        (st.dparams, st.dkv_in, st.loss)
     }
 
     /// FFN-block backward: consumes `dx` (cotangent of `x_out`),

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::tensor::Tensor;
 
-use super::{f64_of, Acts, BwdIntra, FwdIntra};
+use super::{f64_of, Acts, AgBwd, AgFwd, BwdIntra, FwdIntra};
 
 /// Free-list arena for f64 scratch buffers.
 ///
@@ -195,6 +195,8 @@ impl ActCache {
 pub struct PhaseCache {
     fwd: Option<PendingFwd>,
     bwd: Option<PendingBwd>,
+    ag_fwd: Option<PendingAgFwd>,
+    ag_bwd: Option<PendingAgBwd>,
 }
 
 pub struct PendingFwd {
@@ -208,6 +210,26 @@ pub struct PendingBwd {
     pub tokens: Vec<i32>,
     pub kv_in: Vec<f64>,
     pub intra: BwdIntra,
+}
+
+/// In-flight all-gather forward: the stepping state plus everything the
+/// finish call needs (the Arc'd f64 parameters so every step reuses the
+/// same conversion, and the labels for the deferred loss head).
+pub struct PendingAgFwd {
+    pub param_version: u64,
+    pub p64: Arc<Vec<Vec<f64>>>,
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub st: AgFwd,
+}
+
+/// In-flight all-gather backward: the stepping state, the shared f64
+/// parameters and the output shapes for materializing the gradients.
+pub struct PendingAgBwd {
+    pub param_version: u64,
+    pub p64: Arc<Vec<Vec<f64>>>,
+    pub shapes: Vec<Vec<usize>>,
+    pub st: AgBwd,
 }
 
 impl PhaseCache {
@@ -256,10 +278,44 @@ impl PhaseCache {
         }
     }
 
-    /// True while an intra partial awaits its inter phase — must be
-    /// false at the end of every training step (coordinator hygiene).
+    /// Retain an in-flight all-gather forward (overwrites any previous).
+    pub fn store_ag_fwd(&mut self, p: PendingAgFwd) {
+        self.ag_fwd = Some(p);
+    }
+
+    /// The in-flight all-gather forward, if any (stepped in place).
+    pub fn ag_fwd_mut(&mut self) -> Option<&mut PendingAgFwd> {
+        self.ag_fwd.as_mut()
+    }
+
+    /// Consume the in-flight all-gather forward.
+    pub fn take_ag_fwd(&mut self) -> Option<PendingAgFwd> {
+        self.ag_fwd.take()
+    }
+
+    /// Retain an in-flight all-gather backward (overwrites any previous).
+    pub fn store_ag_bwd(&mut self, p: PendingAgBwd) {
+        self.ag_bwd = Some(p);
+    }
+
+    /// The in-flight all-gather backward, if any (stepped in place).
+    pub fn ag_bwd_mut(&mut self) -> Option<&mut PendingAgBwd> {
+        self.ag_bwd.as_mut()
+    }
+
+    /// Consume the in-flight all-gather backward.
+    pub fn take_ag_bwd(&mut self) -> Option<PendingAgBwd> {
+        self.ag_bwd.take()
+    }
+
+    /// True while an intra partial or a stepping all-gather pass awaits
+    /// completion — must be false at the end of every training step
+    /// (coordinator hygiene).
     pub fn pending(&self) -> bool {
-        self.fwd.is_some() || self.bwd.is_some()
+        self.fwd.is_some()
+            || self.bwd.is_some()
+            || self.ag_fwd.is_some()
+            || self.ag_bwd.is_some()
     }
 
     /// Bytes currently held by in-flight partials.
@@ -268,12 +324,16 @@ impl PhaseCache {
             e.intra.nbytes() + e.tokens.len() * 4
         }) + self.bwd.as_ref().map_or(0, |e| {
             e.intra.nbytes() + e.tokens.len() * 4 + e.kv_in.len() * 8
-        })
+        }) + self.ag_fwd.as_ref().map_or(0, |e| {
+            e.st.nbytes() + (e.tokens.len() + e.labels.len()) * 4
+        }) + self.ag_bwd.as_ref().map_or(0, |e| e.st.nbytes())
     }
 
     pub fn clear(&mut self) {
         self.fwd = None;
         self.bwd = None;
+        self.ag_fwd = None;
+        self.ag_bwd = None;
     }
 }
 

@@ -230,6 +230,98 @@ impl Device {
             Device::Pjrt(_) => {}
         }
     }
+
+    /// Per-head decay factors `λ_h^C` for the all-gather schedule's
+    /// local prefix/suffix combines.
+    pub fn decay_pow_chunk(&self) -> Result<Vec<f64>> {
+        match self {
+            Device::Native(d) => Ok(d.decay_pow_chunk()),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("decay_pow_chunk"),
+        }
+    }
+
+    /// All-gather forward, start (see
+    /// [`NativeDevice::ag_fwd_start`]). The stepping entry points carry
+    /// f64 state across calls, so they exist only on the native backend
+    /// — the artifact ABI's f32 boundary would break the bitwise parity
+    /// the schedule guarantees.
+    pub fn ag_fwd_start(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        tokens: &[i32],
+        labels: &[i32],
+    ) -> Result<Vec<f64>> {
+        match self {
+            Device::Native(d) => d.ag_fwd_start(params, version, tokens, labels),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("ag_fwd_start"),
+        }
+    }
+
+    /// All-gather forward, step.
+    pub fn ag_fwd_step(&self, kv_l: &[f64]) -> Result<Option<Vec<f64>>> {
+        match self {
+            Device::Native(d) => d.ag_fwd_step(kv_l),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("ag_fwd_step"),
+        }
+    }
+
+    /// All-gather forward, finish: `(loss_sum, kv_out)`.
+    pub fn ag_fwd_finish(&self) -> Result<(f32, Tensor)> {
+        match self {
+            Device::Native(d) => d.ag_fwd_finish(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("ag_fwd_finish"),
+        }
+    }
+
+    /// All-gather backward, start.
+    pub fn ag_bwd_start(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        tokens: &[i32],
+        labels: &[i32],
+        kv_in: &Tensor,
+        loss_scale: f32,
+    ) -> Result<Vec<f64>> {
+        match self {
+            Device::Native(d) => {
+                d.ag_bwd_start(params, version, tokens, labels, kv_in, loss_scale)
+            }
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("ag_bwd_start"),
+        }
+    }
+
+    /// All-gather backward, step.
+    pub fn ag_bwd_step(&self, dkv_l: &[f64]) -> Result<Option<Vec<f64>>> {
+        match self {
+            Device::Native(d) => d.ag_bwd_step(dkv_l),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("ag_bwd_step"),
+        }
+    }
+
+    /// All-gather backward, finish: `(grads in manifest order, loss_sum)`.
+    pub fn ag_bwd_finish(&self) -> Result<(Vec<Tensor>, f32)> {
+        match self {
+            Device::Native(d) => d.ag_bwd_finish(),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::ag_unsupported("ag_bwd_finish"),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn ag_unsupported<T>(name: &str) -> Result<T> {
+        anyhow::bail!(
+            "{name}: the all-gather schedule requires the native backend \
+             (its f64 stepping state has no artifact-ABI equivalent)"
+        )
+    }
 }
 
 impl Executor for Device {

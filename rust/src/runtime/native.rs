@@ -37,8 +37,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use super::kernel::workspace::{
-    ActCache, ActEntry, ParamCache, PendingBwd, PendingFwd, PhaseCache,
-    Workspace,
+    ActCache, ActEntry, ParamCache, PendingAgBwd, PendingAgFwd, PendingBwd,
+    PendingFwd, PhaseCache, Workspace,
 };
 use super::kernel::{f64_of, tensor_of, Kernel};
 use super::manifest::{ArtifactSpec, Bundle};
@@ -135,6 +135,176 @@ impl NativeDevice {
     /// intra phases that never got their paired inter call).
     pub fn clear_phase_partials(&self) {
         self.state.lock().unwrap().phase.clear();
+    }
+
+    /// Per-head decay factors `λ_h^C` — the constants the all-gather
+    /// coordinator's local prefix/suffix combines fold increments with.
+    pub fn decay_pow_chunk(&self) -> Vec<f64> {
+        self.kern.decay_pow_chunk()
+    }
+
+    /// All-gather forward, start: embedding + layer 0's KV-independent
+    /// work. Returns layer 0's f64 KV increment for the exchange. The
+    /// in-flight pass is retained on the device (stepped by
+    /// [`ag_fwd_step`](NativeDevice::ag_fwd_step)); these entry points
+    /// carry f64 state across calls, so — unlike the `exec` artifact ABI
+    /// with its f32 `Tensor` boundary — the exchanged increments keep
+    /// full accumulator precision and the local combine can reproduce
+    /// the sequential ring bit-for-bit.
+    pub fn ag_fwd_start(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        tokens: &[i32],
+        labels: &[i32],
+    ) -> Result<Vec<f64>> {
+        let kern = &self.kern;
+        check_ids("ag_fwd_start", tokens, kern.v)?;
+        check_ids("ag_fwd_start", labels, kern.v)?;
+        anyhow::ensure!(
+            tokens.len() == kern.c && labels.len() == kern.c,
+            "ag_fwd_start: got {}/{} tokens/labels, chunk is {}",
+            tokens.len(),
+            labels.len(),
+            kern.c
+        );
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let prefs: Vec<&Tensor> = params.iter().collect();
+        let p64 = st.params.get(Some(version), &prefs);
+        let (ag, delta) = kern.ag_forward_start(&p64, tokens, &mut st.ws);
+        st.phase.store_ag_fwd(PendingAgFwd {
+            param_version: version,
+            p64,
+            tokens: tokens.to_vec(),
+            labels: labels.to_vec(),
+            st: ag,
+        });
+        Ok(delta)
+    }
+
+    /// All-gather forward, step: completes the pending layer with its
+    /// prefix-combined incoming state, returns the next layer's
+    /// increment — `None` once every layer is done.
+    pub fn ag_fwd_step(&self, kv_l: &[f64]) -> Result<Option<Vec<f64>>> {
+        let kern = &self.kern;
+        let layer_elems = kern.n_heads * kern.dh * kern.dh;
+        anyhow::ensure!(
+            kv_l.len() == layer_elems,
+            "ag_fwd_step: state slice has {} elems, layer needs {layer_elems}",
+            kv_l.len()
+        );
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let pending = st
+            .phase
+            .ag_fwd_mut()
+            .context("ag_fwd_step: no all-gather forward in flight")?;
+        let p64 = Arc::clone(&pending.p64);
+        Ok(kern.ag_forward_step(&p64, &mut pending.st, kv_l, &mut st.ws))
+    }
+
+    /// All-gather forward, finish: final norm + loss head. Retains the
+    /// activations for the paired backward (§4.2, like the fused ring
+    /// kernels) and returns `(loss_sum, kv_out)`.
+    pub fn ag_fwd_finish(&self) -> Result<(f32, Tensor)> {
+        let kern = &self.kern;
+        let kv_shape = &self.bundle.kv_state_shape;
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let pending = st
+            .phase
+            .take_ag_fwd()
+            .context("ag_fwd_finish: no all-gather forward in flight")?;
+        let PendingAgFwd { param_version, p64, tokens, labels, st: ag } =
+            pending;
+        let (acts, kv_in, kv_out) = kern.ag_forward_finish(&p64, ag);
+        let (loss, _) =
+            kern.loss_and_dlogits(&p64, &acts, &labels, None, &mut st.ws);
+        st.acts.store(ActEntry { param_version, tokens, kv_in, acts });
+        Ok((loss as f32, tensor_of(kv_shape, &kv_out)))
+    }
+
+    /// All-gather backward, start: the dKV-independent top of the pass
+    /// (loss head, final norm, top layer's intra cotangents). Returns
+    /// the top layer's f64 dKV increment for the exchange.
+    pub fn ag_bwd_start(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        tokens: &[i32],
+        labels: &[i32],
+        kv_in: &Tensor,
+        loss_scale: f32,
+    ) -> Result<Vec<f64>> {
+        let kern = &self.kern;
+        check_ids("ag_bwd_start", tokens, kern.v)?;
+        check_ids("ag_bwd_start", labels, kern.v)?;
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let prefs: Vec<&Tensor> = params.iter().collect();
+        let p64 = st.params.get(Some(version), &prefs);
+        let kv64 = f64_of(kv_in);
+        let cached = st.acts.take_match(Some(version), tokens, &kv64);
+        let (ag, delta) = kern.ag_backward_start(
+            &p64,
+            tokens,
+            labels,
+            &kv64,
+            loss_scale as f64,
+            cached,
+            &mut st.ws,
+        );
+        let shapes = params.iter().map(|t| t.shape().to_vec()).collect();
+        st.phase.store_ag_bwd(PendingAgBwd {
+            param_version: version,
+            p64,
+            shapes,
+            st: ag,
+        });
+        Ok(delta)
+    }
+
+    /// All-gather backward, step: completes the pending layer with its
+    /// suffix-combined dKV cotangent, returns the next-lower layer's
+    /// increment — `None` once the pass is complete.
+    pub fn ag_bwd_step(&self, dkv_l: &[f64]) -> Result<Option<Vec<f64>>> {
+        let kern = &self.kern;
+        let layer_elems = kern.n_heads * kern.dh * kern.dh;
+        anyhow::ensure!(
+            dkv_l.len() == layer_elems,
+            "ag_bwd_step: cotangent slice has {} elems, layer needs \
+             {layer_elems}",
+            dkv_l.len()
+        );
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let pending = st
+            .phase
+            .ag_bwd_mut()
+            .context("ag_bwd_step: no all-gather backward in flight")?;
+        let p64 = Arc::clone(&pending.p64);
+        Ok(kern.ag_backward_step(&p64, &mut pending.st, dkv_l, &mut st.ws))
+    }
+
+    /// All-gather backward, finish: materializes the parameter
+    /// gradients. Returns `(grads in manifest order, loss_sum)`.
+    pub fn ag_bwd_finish(&self) -> Result<(Vec<Tensor>, f32)> {
+        let kern = &self.kern;
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let pending = st
+            .phase
+            .take_ag_bwd()
+            .context("ag_bwd_finish: no all-gather backward in flight")?;
+        let PendingAgBwd { shapes, st: ag, .. } = pending;
+        let (dparams, _dkv_in, loss) = kern.ag_backward_finish(ag);
+        let grads = dparams
+            .iter()
+            .zip(&shapes)
+            .map(|(g, s)| tensor_of(s, g))
+            .collect();
+        Ok((grads, loss as f32))
     }
 
     fn spec(&self, name: &str) -> Result<&ArtifactSpec> {

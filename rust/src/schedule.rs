@@ -1,0 +1,82 @@
+//! The ring-schedule taxonomy — the single source of truth for *when*
+//! LASP's sequence-parallel state exchange happens.
+//!
+//! All three schedules compute bitwise-identical results
+//! (`tests/overlap_parity.rs`); they differ only in how the `(L, H, dk,
+//! dv)` KV state chain is communicated and overlapped:
+//!
+//!  * [`Sequential`](Schedule::Sequential) — Algorithms 2/3 verbatim:
+//!    chunk `t` blocks on `KV_{t-1}` from its ring predecessor, computes,
+//!    sends `KV_t`. The oracle schedule.
+//!  * [`Overlapped`](Schedule::Overlapped) — the two-phase split: the
+//!    KV-independent intra kernel is issued *before* the recv so the
+//!    state transfer hides behind compute. Same P2P wire pattern.
+//!  * [`AllGather`](Schedule::AllGather) — the LASP-2 exchange (arXiv
+//!    2502.07563): every rank computes its per-layer KV *increment*
+//!    locally, one all-gather per layer shares all increments, and each
+//!    rank prefix-combines `KV_in_t = Σ_{s<t} λ^{C(t−s−1)}·ΔKV_s`
+//!    locally (suffix combine for the backward `dKV` cotangents). The
+//!    number of collective rounds per step is `2·L` — constant in the
+//!    ring size `T`, vs the ring's `T−1` serial hops per direction.
+//!
+//! A future ZeCO-style distributed scan (arXiv 2507.01004) slots in as a
+//! fourth variant: it only changes how the combine is distributed, not
+//! the increment/combine seam the all-gather schedule establishes.
+
+/// Which schedule drives the sequence-parallel state exchange.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Schedule {
+    /// Blocking P2P ring (the paper's Algorithms 2/3; the oracle).
+    Sequential,
+    /// Two-phase P2P ring: intra kernels issued before each recv.
+    #[default]
+    Overlapped,
+    /// LASP-2 style: all-gather of per-layer KV increments + local
+    /// prefix/suffix combine; no P2P, O(1) rounds in the ring size.
+    AllGather,
+}
+
+impl Schedule {
+    pub const ALL: [Schedule; 3] =
+        [Schedule::Sequential, Schedule::Overlapped, Schedule::AllGather];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Sequential => "sequential",
+            Schedule::Overlapped => "overlapped",
+            Schedule::AllGather => "allgather",
+        }
+    }
+
+    /// Parse a CLI spelling (`--schedule {sequential,overlapped,allgather}`).
+    pub fn parse(s: &str) -> Result<Schedule, String> {
+        match s {
+            "sequential" => Ok(Schedule::Sequential),
+            "overlapped" => Ok(Schedule::Overlapped),
+            "allgather" | "all-gather" => Ok(Schedule::AllGather),
+            other => Err(format!(
+                "unknown schedule {other:?} (expected sequential, overlapped \
+                 or allgather)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for s in Schedule::ALL {
+            assert_eq!(Schedule::parse(s.name()), Ok(s));
+        }
+        assert_eq!(Schedule::parse("all-gather"), Ok(Schedule::AllGather));
+        assert!(Schedule::parse("ring").is_err());
+    }
+
+    #[test]
+    fn default_is_overlapped() {
+        assert_eq!(Schedule::default(), Schedule::Overlapped);
+    }
+}

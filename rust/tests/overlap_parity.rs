@@ -1,30 +1,52 @@
-//! Overlap-parity suite (the two-phase ring schedule, ISSUE 5).
+//! Schedule-parity suite (two-phase ring, ISSUE 5; all-gather, ISSUE 6).
 //!
-//! The overlapped schedule changes *when* work runs — the KV-independent
-//! intra phase is issued before the ring recv — but both schedules
-//! compose the same f64 phase functions in the same order, so losses and
-//! parameter trajectories must be **bitwise identical**, not merely
-//! close. Any divergence means the phase split leaked a reordering into
-//! the numerics, which would silently undermine every tolerance-based
-//! parity test in the repo.
+//! The schedules change *when* and *how* the KV/dKV states move — the
+//! overlapped ring issues the KV-independent intra phase before the
+//! recv, the LASP-2 all-gather replaces the T−1 chained P2P hops with
+//! one collective per layer — but all of them compose the same f64
+//! phase functions in the same order (the all-gather combine rounds to
+//! f32 exactly where the ring's wire does), so losses and parameter
+//! trajectories must be **bitwise identical**, not merely close. Any
+//! divergence means a schedule leaked a reordering into the numerics,
+//! which would silently undermine every tolerance-based parity test in
+//! the repo.
 
+use lasp::analytic::allgather_wire_bytes;
+use lasp::comm::CommWorld;
 use lasp::coordinator::{
     backward_chunk, forward_chunk, train, KvCache, Placement, RingCtx,
-    RingPhase, TrainConfig, TrainResult,
+    RingPhase, Schedule, TrainConfig, TrainResult,
 };
-use lasp::comm::CommWorld;
 use lasp::model::ParamStore;
 use lasp::runtime::{load_bundle, Device};
 use lasp::util::stats::PhaseTimer;
 
-fn run(config: &str, sp: usize, overlap: bool) -> TrainResult {
+const STEPS: usize = 4;
+
+fn run(config: &str, sp: usize, schedule: Schedule) -> TrainResult {
     // N = 64 split as T ∈ {2, 4}: chunk 32 / 16
     let mut c = TrainConfig::new(config, 64 / sp, sp);
-    c.steps = 4;
+    c.steps = STEPS;
     c.warmup = 10;
     c.lr = 1e-3;
-    c.overlap = overlap;
+    c.schedule = schedule;
     train(&c).unwrap()
+}
+
+fn assert_bitwise_equal(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses diverge between schedules");
+    for (i, (ta, tb)) in a
+        .final_params
+        .tensors()
+        .iter()
+        .zip(b.final_params.tensors())
+        .enumerate()
+    {
+        assert!(
+            ta.data() == tb.data(),
+            "{what}: param {i} not bitwise equal"
+        );
+    }
 }
 
 /// The headline pin: overlapped vs sequential training is bitwise equal
@@ -34,27 +56,53 @@ fn run(config: &str, sp: usize, overlap: bool) -> TrainResult {
 fn overlapped_schedule_is_bitwise_identical() {
     for config in ["tiny", "tiny_lt"] {
         for sp in [2usize, 4] {
-            let seq = run(config, sp, false);
-            let ovl = run(config, sp, true);
-            assert_eq!(
-                seq.losses, ovl.losses,
-                "{config} T={sp}: losses diverge between schedules"
-            );
-            for (i, (a, b)) in seq
-                .final_params
-                .tensors()
-                .iter()
-                .zip(ovl.final_params.tensors())
-                .enumerate()
-            {
-                assert!(
-                    a.data() == b.data(),
-                    "{config} T={sp}: param {i} not bitwise equal"
-                );
-            }
+            let seq = run(config, sp, Schedule::Sequential);
+            let ovl = run(config, sp, Schedule::Overlapped);
+            assert_bitwise_equal(&seq, &ovl, &format!("{config} T={sp}"));
             // the ring still carries exactly the same KV/dKV traffic
             assert_eq!(seq.ring_bytes, ovl.ring_bytes, "{config} T={sp}");
         }
+    }
+}
+
+/// The LASP-2 pin: the all-gather schedule reproduces the sequential
+/// ring oracle bitwise — the f64 wire plus the per-hop f32 rounding in
+/// the prefix/suffix combines reconstructs the chained ring arithmetic
+/// exactly.
+#[test]
+fn allgather_schedule_is_bitwise_identical() {
+    for config in ["tiny", "tiny_lt"] {
+        for sp in [2usize, 4] {
+            let seq = run(config, sp, Schedule::Sequential);
+            let ag = run(config, sp, Schedule::AllGather);
+            assert_bitwise_equal(&seq, &ag, &format!("{config} T={sp}"));
+        }
+    }
+}
+
+/// The all-gather schedule's traffic is collective-only and O(1) rounds
+/// per step: no P2P ring bytes at all, and the measured wire bytes and
+/// send count match the closed-form `analytic::allgather_wire_bytes`
+/// (one all-gather per layer per direction, T·(T−1) sends each).
+#[test]
+fn allgather_comm_is_collective_only_and_matches_formula() {
+    for sp in [2usize, 4] {
+        let r = run("tiny", sp, Schedule::AllGather);
+        let bundle = load_bundle("tiny", 64 / sp).unwrap();
+        let l = bundle.config.n_layers as u64;
+        let layer_elems = (bundle.kv_state_elems() / bundle.config.n_layers) as u64;
+        let (t, steps) = (sp as u64, STEPS as u64);
+        assert_eq!(r.ring_bytes, 0, "T={sp}: AG schedule must not use the ring");
+        assert_eq!(
+            r.allgather_msgs,
+            steps * 2 * l * t * (t - 1),
+            "T={sp}: collective rounds not O(1) per layer per direction"
+        );
+        assert_eq!(
+            r.allgather_bytes,
+            allgather_wire_bytes(layer_elems, l, t, steps),
+            "T={sp}: measured bytes disagree with the Table-1 extension"
+        );
     }
 }
 
@@ -62,18 +110,18 @@ fn overlapped_schedule_is_bitwise_identical() {
 /// breakdown — the accounting the tentpole makes overlap measurable by.
 #[test]
 fn phase_timer_separates_comm_wait_from_compute() {
-    let r = run("tiny", 4, true);
+    let r = run("tiny", 4, Schedule::Overlapped);
     assert!(r.phases.get("compute").as_nanos() > 0, "no compute phase");
     // rank 0 is the first chunk: it never waits on a forward recv, but
     // its backward recv (dKV from rank 1) is a real blocking wait
     assert!(r.phases.get("comm_wait").as_nanos() > 0, "no comm_wait phase");
 }
 
-/// Ring-level pin without threads: on a single-rank "ring" the two
+/// Ring-level pin without threads: on a single-rank "ring" all three
 /// schedules run back to back on the same device and must produce
 /// bitwise-equal outputs (loss, KV state, gradients).
 #[test]
-fn single_rank_ring_two_phase_matches_sequential() {
+fn single_rank_ring_all_schedules_match() {
     let bundle = load_bundle("tiny", 32).unwrap();
     let placement = Placement::new(1, 1);
     let comm = CommWorld::new(1).communicators().remove(0);
@@ -93,7 +141,7 @@ fn single_rank_ring_two_phase_matches_sequential() {
     let loss_scale = 1.0 / c as f32;
 
     let mut results = Vec::new();
-    for overlap in [false, true] {
+    for (step, schedule) in Schedule::ALL.into_iter().enumerate() {
         let mut cache = KvCache::new(true, 1);
         let mut timer = PhaseTimer::default();
         let ctx = RingCtx {
@@ -101,9 +149,9 @@ fn single_rank_ring_two_phase_matches_sequential() {
             comm: &comm,
             placement: &placement,
             params: &params,
-            step: usize::from(overlap),
+            step,
             fused: true,
-            overlap,
+            schedule,
         };
         let fwd = forward_chunk(
             &ctx, &tokens, &labels, &mut cache, 0, RingPhase::Forward,
@@ -118,30 +166,41 @@ fn single_rank_ring_two_phase_matches_sequential() {
         results.push((fwd, bwd));
     }
     let (f_seq, b_seq) = &results[0];
-    let (f_ovl, b_ovl) = &results[1];
-    assert!(f_seq.loss_sum == f_ovl.loss_sum, "loss not bitwise equal");
-    assert!(
-        f_seq.kv_out.data() == f_ovl.kv_out.data(),
-        "kv_out not bitwise equal"
-    );
-    assert!(b_seq.loss_sum == b_ovl.loss_sum, "bwd loss not bitwise equal");
-    assert_eq!(b_seq.grads.len(), b_ovl.grads.len());
-    for (i, (a, b)) in b_seq.grads.iter().zip(&b_ovl.grads).enumerate() {
-        assert!(a.data() == b.data(), "grad {i} not bitwise equal");
+    for (i, (f, b)) in results.iter().enumerate().skip(1) {
+        let name = Schedule::ALL[i].name();
+        assert!(f_seq.loss_sum == f.loss_sum, "{name}: loss not bitwise equal");
+        assert!(
+            f_seq.kv_out.data() == f.kv_out.data(),
+            "{name}: kv_out not bitwise equal"
+        );
+        assert!(
+            b_seq.loss_sum == b.loss_sum,
+            "{name}: bwd loss not bitwise equal"
+        );
+        assert_eq!(b_seq.grads.len(), b.grads.len());
+        for (j, (ga, gb)) in b_seq.grads.iter().zip(&b.grads).enumerate() {
+            assert!(ga.data() == gb.data(), "{name}: grad {j} not bitwise equal");
+        }
     }
 }
 
-/// The overlap flag degrades to the sequential path under the fusion
-/// ablation (the unfused twins have no split) — it must still train and
-/// match the fused trajectory within the usual tolerance.
+/// Both fused-only schedules degrade to the sequential path under the
+/// fusion ablation (the unfused twins have no split and no stepping
+/// entry points) — they must still train.
 #[test]
-fn overlap_with_unfused_kernels_degrades_gracefully() {
-    let mut cfg = TrainConfig::new("tiny", 32, 2);
-    cfg.steps = 3;
-    cfg.warmup = 10;
-    cfg.lr = 1e-3;
-    cfg.fused = false;
-    cfg.overlap = true;
-    let r = train(&cfg).unwrap();
-    assert!(r.losses.iter().all(|l| l.is_finite()));
+fn fused_only_schedules_degrade_gracefully_when_unfused() {
+    for schedule in [Schedule::Overlapped, Schedule::AllGather] {
+        let mut cfg = TrainConfig::new("tiny", 32, 2);
+        cfg.steps = 3;
+        cfg.warmup = 10;
+        cfg.lr = 1e-3;
+        cfg.fused = false;
+        cfg.schedule = schedule;
+        let r = train(&cfg).unwrap();
+        assert!(r.losses.iter().all(|l| l.is_finite()), "{schedule:?}");
+        assert_eq!(
+            r.allgather_bytes, 0,
+            "{schedule:?}: degraded run must not all-gather"
+        );
+    }
 }
