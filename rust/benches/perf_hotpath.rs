@@ -206,7 +206,59 @@ fn main() {
     });
     row(&mut tab, &mut json_rows, "chunk_bwd recompute (tiny/C=32)", eng_bwd_rec);
 
-    // 2) the full fwd+bwd ring under each state-exchange schedule — the
+    // 2) multi-threaded engine speedup (ISSUE 7 tentpole): one device,
+    //    fwd+bwd on the fatter `small` config (d=256, H=4) where the
+    //    per-head fan-out and row-partitioned GEMMs have real work to
+    //    split, single lane vs a pooled engine. Same inputs, bitwise
+    //    identical outputs (pinned by the parity suites) — only the
+    //    wall clock may differ. Min-of-samples makes the ratio robust
+    //    to scheduler noise on small CI runners.
+    let mt_threads = lasp::runtime::kernel::pool::auto_threads().min(4);
+    let bs = load_bundle("small", 64).unwrap();
+    let cs = bs.chunk_len;
+    let s_params = ParamStore::init(&bs, 0);
+    let sv = s_params.version();
+    let s_kv = zero_kv(&bs);
+    let s_dkv = zero_kv(&bs);
+    let s_tokens = vec![1i32; cs];
+    let s_labels = vec![2i32; cs];
+    let s_frest: Vec<Value> = vec![
+        IntTensor::new(vec![cs], s_tokens.clone()).into(),
+        IntTensor::new(vec![cs], s_labels).into(),
+        s_kv.into(),
+    ];
+    let mut s_brest = s_frest.clone();
+    s_brest.push(s_dkv.into());
+    s_brest.push(Tensor::scalar(1.0 / cs as f32).into());
+    let bs = Arc::new(bs);
+    let engine_step = |threads: usize| {
+        let dev = lasp::runtime::NativeDevice::from_arc_with_threads(
+            Arc::clone(&bs),
+            &["chunk_fwd", "chunk_bwd"],
+            threads,
+        )
+        .unwrap();
+        let s = bench(2, 8, || {
+            dev.exec_versioned("chunk_fwd", s_params.tensors(), sv, &s_frest)
+                .unwrap();
+            dev.exec_versioned("chunk_bwd", s_params.tensors(), sv, &s_brest)
+                .unwrap();
+        });
+        dev.clear_acts_cache();
+        s
+    };
+    let eng_1t = engine_step(1);
+    row(&mut tab, &mut json_rows, "engine fwd+bwd 1 thread (small/C=64)",
+        eng_1t.clone());
+    let eng_mt = engine_step(mt_threads);
+    row(&mut tab, &mut json_rows,
+        &format!("engine fwd+bwd {mt_threads} threads (small/C=64)"),
+        eng_mt.clone());
+    // single-core machines run both legs serially; report the no-op 1.0
+    let engine_mt_speedup =
+        if mt_threads <= 1 { 1.0 } else { eng_1t.min / eng_mt.min };
+
+    // 3) the full fwd+bwd ring under each state-exchange schedule — the
     //    forward-ring critical path is what the two-phase split shrinks
     //    and the all-gather collective flattens
     let ring_seq = ring_wallclock(Schedule::Sequential, 2, 12);
@@ -219,7 +271,7 @@ fn main() {
     row(&mut tab, &mut json_rows, "ring fwd+bwd allgather (tiny/C=32,T=4)",
         ring_ag.clone());
 
-    // 3) ring-message serialization of a KV state (tensor -> payload)
+    // 4) ring-message serialization of a KV state (tensor -> payload)
     let kv = zero_kv(&b);
     let s = bench(10, 200, || {
         let p = Payload::F32(kv.data().to_vec());
@@ -227,7 +279,7 @@ fn main() {
     });
     row(&mut tab, &mut json_rows, "tensor->payload (KV state)", s);
 
-    // 4) ring hop over the comm substrate (KV-state sized)
+    // 5) ring hop over the comm substrate (KV-state sized)
     let world = CommWorld::new(2);
     let comms = world.communicators();
     let (c0, c1) = (comms[0].clone(), comms[1].clone());
@@ -244,7 +296,7 @@ fn main() {
     row(&mut tab, &mut json_rows, "ring hop send (KV state)", s);
     h.join().unwrap();
 
-    // 5) gradient all-reduce (tiny model, W=4)
+    // 6) gradient all-reduce (tiny model, W=4)
     let world = CommWorld::new(4);
     let n = params.numel();
     let handles: Vec<_> = world
@@ -275,14 +327,15 @@ fn main() {
     let ring_speedup = ring_seq.mean / ring_ovl.mean;
     let ag_speedup = ring_seq.mean / ring_ag.mean;
     println!("speedup vs pre-refactor  chunk_fwd {fwd_speedup:.2}x  chunk_bwd {bwd_speedup:.2}x");
+    println!("engine mt speedup ({mt_threads} threads, small/C=64)  {engine_mt_speedup:.2}x");
     println!("ring overlap speedup (fwd+bwd ring, T=4)  {ring_speedup:.2}x");
     println!("ring allgather speedup (fwd+bwd ring, T=4)  {ag_speedup:.2}x");
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     std::fs::write(
         path,
-        render_json(&json_rows, fwd_speedup, bwd_speedup, ring_speedup,
-                    ag_speedup),
+        render_json(&json_rows, fwd_speedup, bwd_speedup, engine_mt_speedup,
+                    ring_speedup, ag_speedup),
     )
     .unwrap();
     println!("wrote {path}");
@@ -294,6 +347,7 @@ fn render_json(
     rows: &[(String, Summary)],
     fwd_speedup: f64,
     bwd_speedup: f64,
+    engine_mt_speedup: f64,
     ring_speedup: f64,
     ag_speedup: f64,
 ) -> String {
@@ -310,8 +364,8 @@ fn render_json(
         );
     }
     s += &format!(
-        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}},\n  \"ring_overlap_speedup\": {:.3},\n  \"ring_allgather_speedup\": {:.3}\n}}\n",
-        fwd_speedup, bwd_speedup, ring_speedup, ag_speedup
+        "  ],\n  \"speedup_vs_pre_refactor\": {{\"chunk_fwd\": {:.3}, \"chunk_bwd\": {:.3}}},\n  \"engine_mt_speedup\": {:.3},\n  \"ring_overlap_speedup\": {:.3},\n  \"ring_allgather_speedup\": {:.3}\n}}\n",
+        fwd_speedup, bwd_speedup, engine_mt_speedup, ring_speedup, ag_speedup
     );
     s
 }

@@ -158,10 +158,24 @@ pub fn step_time_scheduled(
     };
 
     // ---- gradient synchronization (DDP family, ring all-reduce) -----------
-    let grad_bytes = shape.param_count() as f64 * 2.0; // fp16 grads
-    let gsync = topo.all_reduce_time(dp.max(1) as usize, grad_bytes as u64);
+    let gsync = grad_sync_time(shape, topo, t, dp);
 
     Some(STEP_OVERHEAD_SEC + compute + comm + gsync)
+}
+
+/// Gradient all-reduce time for one step.
+///
+/// The trainer all-reduces gradients over the **full world** T·G
+/// (`coordinator/trainer.rs`: `optim.step` runs on `world_group`) — the
+/// hybrid parallelism sums chunk-partial gradients across the SP axis
+/// *and* batch-partial gradients across the data groups in one
+/// collective. The analytic model prices the same world; an earlier
+/// version priced only the `dp` axis and undercounted every multi-GPU
+/// ring.
+pub fn grad_sync_time(shape: &ModelShape, topo: &Topology, t: u64, dp: u64) -> f64 {
+    let grad_bytes = shape.param_count() as f64 * 2.0; // fp16 grads
+    let world = (t * dp.max(1)).max(1);
+    topo.all_reduce_time(world as usize, grad_bytes as u64)
 }
 
 /// Cluster-wide training throughput in tokens/second (the paper's Fig. 3/4
@@ -339,6 +353,32 @@ mod tests {
                 other => panic!("{m:?}: OOM mismatch {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn grad_sync_prices_the_full_world() {
+        // regression: the sync term used to see only the dp axis, so a
+        // pure-SP run (dp=1) was priced as if gradients needed no
+        // collective at all — the trainer all-reduces over T·G.
+        let topo = topo64();
+        let sp_only = grad_sync_time(&TNL_1B, &topo, 64, 1);
+        let hybrid = grad_sync_time(&TNL_1B, &topo, 8, 8);
+        assert_eq!(sp_only, hybrid, "same world T·G must price identically");
+        let single = grad_sync_time(&TNL_1B, &topo, 1, 1);
+        assert!(
+            sp_only > single,
+            "64-rank all-reduce must cost more than none ({sp_only} vs {single})"
+        );
+    }
+
+    #[test]
+    fn grad_sync_tolerates_zero_dp() {
+        let topo = topo64();
+        // dp=0 callers mean "no data-parallel axis", not a zero-rank world
+        assert_eq!(
+            grad_sync_time(&TNL_1B, &topo, 4, 0),
+            grad_sync_time(&TNL_1B, &topo, 4, 1)
+        );
     }
 
     #[test]

@@ -54,6 +54,12 @@ pub struct TrainConfig {
     /// elements (`None` = backend default). Small values force the
     /// multi-bucket sync path even on tiny models.
     pub bucket_elems: Option<usize>,
+    /// kernel-engine threads per device. `None` = policy default: 1 when
+    /// the world already runs several worker threads (avoids
+    /// oversubscription), one lane per core for single-device runs.
+    /// `Some(0)` = force auto (per-core); `Some(n)` = exactly n lanes.
+    /// The `LASP_KERNEL_THREADS` env var overrides the `None` policy.
+    pub kernel_threads: Option<usize>,
     /// log every k steps (0 = silent)
     pub log_every: usize,
 }
@@ -74,6 +80,7 @@ impl TrainConfig {
             kv_cache: true,
             schedule: Schedule::default(),
             bucket_elems: None,
+            kernel_threads: None,
             log_every: 0,
         }
     }
@@ -85,6 +92,25 @@ impl TrainConfig {
     /// Full sequence length N = C × T.
     pub fn seq_len(&self) -> usize {
         self.chunk * self.sp_size
+    }
+
+    /// Resolve [`TrainConfig::kernel_threads`] to the lane count each
+    /// worker's device pool gets: explicit beats the env override beats
+    /// the oversubscription policy (1 lane when `world > 1`, per-core
+    /// for single-device runs).
+    pub fn resolved_kernel_threads(&self) -> usize {
+        use crate::runtime::kernel::pool;
+        match self.kernel_threads {
+            Some(0) => pool::auto_threads(),
+            Some(n) => n,
+            None => pool::env_threads().unwrap_or_else(|| {
+                if self.world() > 1 {
+                    1
+                } else {
+                    pool::auto_threads()
+                }
+            }),
+        }
     }
 }
 
@@ -222,8 +248,10 @@ fn worker(
         vec!["chunk_fwd_unfused", "chunk_bwd_unfused"]
     };
     let mut phases = PhaseTimer::default();
-    let dev =
-        phases.time("compile", || Device::from_arc(Arc::clone(&bundle), &names))?;
+    let kernel_threads = cfg.resolved_kernel_threads();
+    let dev = phases.time("compile", || {
+        Device::from_arc_with_threads(Arc::clone(&bundle), &names, kernel_threads)
+    })?;
 
     let mut params = ParamStore::init(&bundle, cfg.seed);
     let mut optim =

@@ -14,7 +14,7 @@ use lasp::cluster::Topology;
 use lasp::coordinator::{train, Schedule, TrainConfig};
 use lasp::runtime::{load_bundle, Device};
 use lasp::train::{evaluate, DataGen};
-use lasp::util::cli::Cli;
+use lasp::util::cli::{Args, Cli};
 use lasp::util::stats::{fmt_klen, Table};
 
 fn parse_backend(s: &str) -> DdpBackend {
@@ -32,31 +32,71 @@ fn parse_backend(s: &str) -> DdpBackend {
     }
 }
 
+/// Resolve `--schedule` against the deprecated `--no-overlap` alias.
+///
+/// The alias alone still maps to sequential (with a deprecation warning
+/// printed by the caller), but combining it with an explicit
+/// conflicting `--schedule` is an error — the alias used to silently
+/// win, discarding the schedule the user asked for.
+fn resolve_schedule(a: &Args) -> Result<Schedule, String> {
+    let schedule = Schedule::parse(a.get("schedule"))?;
+    if a.has("no-overlap") {
+        if a.is_set("schedule") && schedule != Schedule::Sequential {
+            return Err(format!(
+                "--no-overlap conflicts with --schedule {}: drop the \
+                 deprecated alias (it means --schedule sequential)",
+                a.get("schedule")
+            ));
+        }
+        return Ok(Schedule::Sequential);
+    }
+    Ok(schedule)
+}
+
+/// Map `--kernel-threads` to [`TrainConfig::kernel_threads`]: unset ⇒
+/// `None` (trainer policy: 1 in SP workers, per-core single-device),
+/// explicit `0` ⇒ `Some(0)` (force auto), explicit `n` ⇒ `Some(n)`.
+fn kernel_threads_of(a: &Args) -> Option<usize> {
+    if a.is_set("kernel-threads") {
+        Some(a.get_usize("kernel-threads"))
+    } else {
+        None
+    }
+}
+
+/// The `lasp train` / `lasp eval` argument set (extracted so the parse +
+/// resolve pipeline is testable without spawning the binary).
+fn train_cli() -> Cli {
+    Cli::new("lasp train", "train a linear-attention model with LASP")
+        .opt("config", "tiny", "model config (artifact bundle name)")
+        .opt("chunk", "32", "chunk length C (bundle must exist)")
+        .opt("sp", "4", "sequence parallel size T")
+        .opt("groups", "1", "data-parallel groups G (world = T*G)")
+        .opt("steps", "20", "training steps")
+        .opt("lr", "5e-4", "learning rate")
+        .opt("warmup", "2000", "LR warmup steps")
+        .opt("seed", "0", "RNG seed")
+        .opt("backend", "ddp", "ddp|legacy|zero1|zero2|zero3|fsdp")
+        .opt("log-every", "5", "log interval")
+        .opt("schedule", "overlapped",
+             "state-exchange schedule: sequential|overlapped|allgather \
+              (all bitwise identical)")
+        .opt("bucket-elems", "0",
+             "gradient bucket size in elements for ddp (0 = default)")
+        .opt("kernel-threads", "0",
+             "kernel-engine threads per device (0 = one per core; \
+              unset = 1 inside SP workers, auto single-device)")
+        .flag("unfused", "disable kernel fusion (Table-5 ablation)")
+        .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)")
+        .flag("no-overlap", "deprecated: alias for --schedule sequential")
+}
+
 fn main() -> Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if args.is_empty() { "help".to_string() } else { args.remove(0) };
     match cmd.as_str() {
         "train" | "eval" => {
-            let cli = Cli::new("lasp train", "train a linear-attention model with LASP")
-                .opt("config", "tiny", "model config (artifact bundle name)")
-                .opt("chunk", "32", "chunk length C (bundle must exist)")
-                .opt("sp", "4", "sequence parallel size T")
-                .opt("groups", "1", "data-parallel groups G (world = T*G)")
-                .opt("steps", "20", "training steps")
-                .opt("lr", "5e-4", "learning rate")
-                .opt("warmup", "2000", "LR warmup steps")
-                .opt("seed", "0", "RNG seed")
-                .opt("backend", "ddp", "ddp|legacy|zero1|zero2|zero3|fsdp")
-                .opt("log-every", "5", "log interval")
-                .opt("schedule", "overlapped",
-                     "state-exchange schedule: sequential|overlapped|allgather \
-                      (all bitwise identical)")
-                .opt("bucket-elems", "0",
-                     "gradient bucket size in elements for ddp (0 = default)")
-                .flag("unfused", "disable kernel fusion (Table-5 ablation)")
-                .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)")
-                .flag("no-overlap", "deprecated: alias for --schedule sequential");
-            let a = cli.parse_from(&args).unwrap_or_else(|e| {
+            let a = train_cli().parse_from(&args).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(2)
             });
@@ -70,7 +110,7 @@ fn main() -> Result<()> {
             cfg.backend = parse_backend(a.get("backend"));
             cfg.fused = !a.has("unfused");
             cfg.kv_cache = !a.has("no-kv-cache");
-            cfg.schedule = Schedule::parse(a.get("schedule")).unwrap_or_else(|e| {
+            cfg.schedule = resolve_schedule(&a).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(2)
             });
@@ -78,10 +118,10 @@ fn main() -> Result<()> {
                 eprintln!(
                     "warning: --no-overlap is deprecated; use --schedule sequential"
                 );
-                cfg.schedule = Schedule::Sequential;
             }
             let bucket = a.get_usize("bucket-elems");
             cfg.bucket_elems = if bucket == 0 { None } else { Some(bucket) };
+            cfg.kernel_threads = kernel_threads_of(&a);
             cfg.log_every = a.get_usize("log-every");
             let r = train(&cfg)?;
             println!("final loss: {:.4}", r.losses.last().unwrap());
@@ -185,4 +225,51 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let toks: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        train_cli().parse_from(&toks).unwrap()
+    }
+
+    #[test]
+    fn no_overlap_alone_still_means_sequential() {
+        let a = parse(&["--no-overlap"]);
+        assert_eq!(resolve_schedule(&a).unwrap(), Schedule::Sequential);
+    }
+
+    #[test]
+    fn no_overlap_rejects_conflicting_explicit_schedule() {
+        for sched in ["allgather", "overlapped"] {
+            let a = parse(&["--schedule", sched, "--no-overlap"]);
+            let e = resolve_schedule(&a).unwrap_err();
+            assert!(
+                e.contains("--no-overlap conflicts with --schedule"),
+                "unexpected error text: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_overlap_with_explicit_sequential_is_not_a_conflict() {
+        let a = parse(&["--schedule", "sequential", "--no-overlap"]);
+        assert_eq!(resolve_schedule(&a).unwrap(), Schedule::Sequential);
+    }
+
+    #[test]
+    fn default_schedule_without_alias_is_overlapped() {
+        let a = parse(&[]);
+        assert_eq!(resolve_schedule(&a).unwrap(), Schedule::Overlapped);
+    }
+
+    #[test]
+    fn kernel_threads_maps_unset_zero_and_explicit() {
+        assert_eq!(kernel_threads_of(&parse(&[])), None);
+        assert_eq!(kernel_threads_of(&parse(&["--kernel-threads", "0"])), Some(0));
+        assert_eq!(kernel_threads_of(&parse(&["--kernel-threads", "4"])), Some(4));
+    }
 }

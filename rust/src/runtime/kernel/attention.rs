@@ -227,7 +227,11 @@ impl Kernel {
         dkv_in: &mut [f64],
         ws: &mut Workspace,
     ) {
-        let intra = self.attention_head_bwd_intra(hh, q, k, v, kv, do_, dkv_in, ws);
+        let (intra, dkvh) = self.attention_head_bwd_intra(hh, q, k, v, kv, do_, ws);
+        for (slot, &x) in dkv_in.iter_mut().zip(&dkvh) {
+            *slot += x;
+        }
+        ws.put(dkvh);
         self.attention_head_bwd_inter(hh, intra, dkv, dq, dk, dv, dkv_in, ws);
     }
 
@@ -235,6 +239,13 @@ impl Kernel {
     /// in-flight `dKV` cotangent — the intra-chunk score cotangents, the
     /// inter-chunk dQ term (needs only the *cached* forward `kv`), and
     /// the `(diag(λ^{i+1}) Qh)ᵀ dOh` contribution to `dkv_in` (Eq. 20).
+    ///
+    /// The Eq. 20 increment comes back as the second, owned `(dh, dh)`
+    /// buffer rather than being accumulated in place: the head tasks can
+    /// then run on the device worker pool with no shared mutable state,
+    /// and the caller installs each increment into its (zeroed) slice of
+    /// the `dkv_in` stack in head order — the accumulation series is the
+    /// one the in-place form ran, so the split is bitwise invisible.
     pub(crate) fn attention_head_bwd_intra(
         &self,
         hh: usize,
@@ -243,9 +254,8 @@ impl Kernel {
         v: &[f64],
         kv: &[f64],
         do_: &[f64],
-        dkv_in: &mut [f64],
         ws: &mut Workspace,
-    ) -> HeadBwdIntra {
+    ) -> (HeadBwdIntra, Vec<f64>) {
         let (c, d, dh) = (self.c, self.d, self.dh);
         let off = hh * dh;
         let pw = &self.pw[hh];
@@ -280,10 +290,13 @@ impl Kernel {
         let mut dos = ws.take(c * dh);
         scale_rows(&mut dos, &doh, &pw[1..], c, dh);
         matmul_nt_into(&mut dqh, &dos, kv, c, dh, dh, true);
-        // dKV_in += (diag(λ^{i+1}) Qh)ᵀ dOh                      (Eq. 20)
+        // dKV_in increment (diag(λ^{i+1}) Qh)ᵀ dOh, into an owned
+        // zeroed buffer — same accumulation series as the old in-place
+        // `+=` (the target slice was always zero at entry)     (Eq. 20)
         let mut qs = ws.take(c * dh);
         scale_rows(&mut qs, &qh, &pw[1..], c, dh);
-        matmul_tn_into(dkv_in, &qs, &doh, c, dh, dh, true);
+        let mut dkvh = ws.take(dh * dh);
+        matmul_tn_into(&mut dkvh, &qs, &doh, c, dh, dh, true);
 
         // decay-scaled V/K panels for the dKV-dependent phase
         let mut vd = ws.take(c * dh);
@@ -299,7 +312,7 @@ impl Kernel {
         ws.put(ds);
         ws.put(dos);
         ws.put(qs);
-        HeadBwdIntra { dqh, dkh, dvh, vd, kd }
+        (HeadBwdIntra { dqh, dkh, dvh, vd, kd }, dkvh)
     }
 
     /// Phase 2 of the head backward: the state-update cotangents that

@@ -19,11 +19,21 @@
 //! Numerics: reassociating the reduction changes results only at f64
 //! rounding (~1e-16 relative), invisible at the f32 ABI; the
 //! `kernel_parity` suite pins the GEMM path against the scalar reference
-//! oracle.
+//! oracle. The register tiling and the row-partitioned `_mt` wrapper
+//! preserve each output element's accumulation order exactly, so they
+//! are bitwise no-ops relative to the untiled single-threaded kernels.
+
+use std::sync::Mutex;
+
+use super::pool::Pool;
 
 /// Rows of `b` processed per panel: a `KB × n` panel stays hot in cache
 /// while every output row is updated against it.
 const KB: usize = 64;
+
+/// Smallest `m × n` output worth a [`matmul_into_mt`] pool dispatch;
+/// below this the enqueue/latch round-trip costs more than it saves.
+const MT_MIN_OUT: usize = 4096;
 
 /// Branch-free dot product with four independent accumulators.
 #[inline]
@@ -72,21 +82,84 @@ pub fn matmul_into(
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + KB).min(k);
-        for i in 0..m {
+        // Four output rows per pass share each load of a `b` panel row;
+        // every output element still accumulates in plain `k` order, so
+        // the blocking is invisible to the numerics.
+        let mut i = 0;
+        while i + 4 <= m {
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let a2 = &a[(i + 2) * k..(i + 3) * k];
+            let a3 = &a[(i + 3) * k..(i + 4) * k];
+            let (o0, rest) = out[i * n..(i + 4) * n].split_at_mut(n);
+            let (o1, rest) = rest.split_at_mut(n);
+            let (o2, o3) = rest.split_at_mut(n);
+            for kk in k0..k1 {
+                let brow = &b[kk * n..(kk + 1) * n];
+                axpy(o0, a0[kk], brow);
+                axpy(o1, a1[kk], brow);
+                axpy(o2, a2[kk], brow);
+                axpy(o3, a3[kk], brow);
+            }
+            i += 4;
+        }
+        while i < m {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
             for kk in k0..k1 {
                 axpy(orow, arow[kk], &b[kk * n..(kk + 1) * n]);
             }
+            i += 1;
         }
         k0 = k1;
     }
 }
 
+/// Row-partitioned [`matmul_into`] over the device worker pool.
+///
+/// Each lane runs the plain `matmul_into` on a contiguous block of
+/// output rows, and a row's accumulation sequence is independent of
+/// which block it lands in — so the result is **bitwise identical** to
+/// the single-threaded kernel at every thread count. Products too small
+/// to amortize the dispatch fall through to the serial kernel.
+pub fn matmul_into_mt(
+    pool: &Pool,
+    out: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    add: bool,
+) {
+    let lanes = pool.threads().min(m.max(1));
+    if lanes <= 1 || m * n < MT_MIN_OUT {
+        matmul_into(out, a, b, m, k, n, add);
+        return;
+    }
+    let rows_per = m.div_ceil(lanes);
+    let parts: Vec<Mutex<(usize, &mut [f64])>> = out
+        .chunks_mut(rows_per * n)
+        .enumerate()
+        .map(|(ci, chunk)| Mutex::new((ci * rows_per, chunk)))
+        .collect();
+    pool.run(parts.len(), |ci| {
+        let mut part = parts[ci].lock().unwrap();
+        let (r0, chunk) = &mut *part;
+        let rows = chunk.len() / n;
+        matmul_into(chunk, &a[*r0 * k..(*r0 + rows) * k], b, rows, k, n, add);
+    });
+}
+
 /// `(m, k) @ (n, k)ᵀ -> (m, n)`; accumulates when `add`.
 ///
-/// Four output columns per pass share each load of the `a` row, so the
-/// reduction runs four independent chains wide instead of one serial one.
+/// 4×4 register tile: four output rows × four output columns per pass,
+/// sixteen independent accumulators, so each load of an `a` or `b`
+/// element feeds four FMAs and the reduction runs sixteen dependence
+/// chains wide. Every accumulator still sums in plain `k` order — the
+/// tiling reassociates nothing relative to the old row-at-a-time
+/// kernel. Remainder rows fall back to the single-row 4-wide path,
+/// remainder columns to [`dot`].
 pub fn matmul_nt_into(
     out: &mut [f64],
     a: &[f64],
@@ -99,7 +172,79 @@ pub fn matmul_nt_into(
     debug_assert_eq!(out.len(), m * n);
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    for i in 0..m {
+    let mut i = 0;
+    while i + 4 <= m {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let (o0, rest) = out[i * n..(i + 4) * n].split_at_mut(n);
+        let (o1, rest) = rest.split_at_mut(n);
+        let (o2, o3) = rest.split_at_mut(n);
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let mut s = [[0.0f64; 4]; 4];
+            for kk in 0..k {
+                let (x0, x1, x2, x3) = (b0[kk], b1[kk], b2[kk], b3[kk]);
+                let av = a0[kk];
+                s[0][0] += av * x0;
+                s[0][1] += av * x1;
+                s[0][2] += av * x2;
+                s[0][3] += av * x3;
+                let av = a1[kk];
+                s[1][0] += av * x0;
+                s[1][1] += av * x1;
+                s[1][2] += av * x2;
+                s[1][3] += av * x3;
+                let av = a2[kk];
+                s[2][0] += av * x0;
+                s[2][1] += av * x1;
+                s[2][2] += av * x2;
+                s[2][3] += av * x3;
+                let av = a3[kk];
+                s[3][0] += av * x0;
+                s[3][1] += av * x1;
+                s[3][2] += av * x2;
+                s[3][3] += av * x3;
+            }
+            for (orow, srow) in
+                [(&mut *o0, s[0]), (&mut *o1, s[1]), (&mut *o2, s[2]), (&mut *o3, s[3])]
+            {
+                if add {
+                    orow[j] += srow[0];
+                    orow[j + 1] += srow[1];
+                    orow[j + 2] += srow[2];
+                    orow[j + 3] += srow[3];
+                } else {
+                    orow[j] = srow[0];
+                    orow[j + 1] = srow[1];
+                    orow[j + 2] = srow[2];
+                    orow[j + 3] = srow[3];
+                }
+            }
+            j += 4;
+        }
+        while j < n {
+            let bj = &b[j * k..(j + 1) * k];
+            for (orow, arow) in
+                [(&mut *o0, a0), (&mut *o1, a1), (&mut *o2, a2), (&mut *o3, a3)]
+            {
+                let s = dot(arow, bj);
+                if add {
+                    orow[j] += s;
+                } else {
+                    orow[j] = s;
+                }
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         let mut j = 0;
@@ -139,6 +284,7 @@ pub fn matmul_nt_into(
             }
             j += 1;
         }
+        i += 1;
     }
 }
 
@@ -272,6 +418,29 @@ mod tests {
         let mut out = vec![1e9; m * n];
         matmul_into(&mut out, &a, &b, m, k, n, false);
         assert_close(&out, &naive(&a, &b, m, k, n));
+    }
+
+    /// The pool dispatch must be a bitwise no-op: each lane runs the
+    /// same per-row op sequence the serial kernel runs on its rows.
+    #[test]
+    fn row_partitioned_matmul_is_bitwise_identical() {
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            // 70×65 = 4550 ≥ MT_MIN_OUT engages the partitioned path;
+            // 3×4 stays on the serial fallback.
+            for &(m, k, n) in &[(70, 33, 65), (3, 2, 4)] {
+                for add in [false, true] {
+                    let a = seq(m * k, 0.11);
+                    let b = seq(k * n, 0.23);
+                    let base = seq(m * n, 0.35);
+                    let mut serial = base.clone();
+                    matmul_into(&mut serial, &a, &b, m, k, n, add);
+                    let mut mt = base.clone();
+                    matmul_into_mt(&pool, &mut mt, &a, &b, m, k, n, add);
+                    assert_eq!(serial, mt, "threads={threads} m={m} n={n}");
+                }
+            }
+        }
     }
 
     #[test]

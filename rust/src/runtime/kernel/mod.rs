@@ -9,6 +9,9 @@
 //!    tables, plus the Ring-Attention baseline block;
 //!  * [`workspace`] — per-device scratch arena, version-keyed f64
 //!    parameter cache, and the §4.2 forward-activation cache;
+//!  * [`pool`]      — the per-device worker pool: per-head attention
+//!    tasks and row-partitioned projection/FFN GEMMs fan out over it,
+//!    bitwise identically at every thread count;
 //!  * [`reference`] — the pre-refactor scalar kernels, kept verbatim as
 //!    the numerical oracle for `tests/kernel_parity.rs` (and as the
 //!    "before" engine in the perf bench). Never on the hot path.
@@ -20,6 +23,7 @@
 
 pub mod attention;
 pub mod gemm;
+pub mod pool;
 pub mod reference;
 pub mod workspace;
 
@@ -259,7 +263,9 @@ fn delta_of(heads: &[HeadIntra]) -> Vec<f64> {
 
 /// The chunk-kernel engine for one bundle: model dimensions plus the
 /// per-head decay powers table `λ_h^0 .. λ_h^C`, precomputed once at
-/// device construction (the old backend rebuilt this on every dispatch).
+/// device construction (the old backend rebuilt this on every dispatch),
+/// and the device-owned worker [`pool::Pool`] that per-head kernels and
+/// row-partitioned GEMMs fan out over.
 #[derive(Debug)]
 pub struct Kernel {
     pub(crate) c: usize,
@@ -272,10 +278,21 @@ pub struct Kernel {
     pub(crate) lam: Vec<f64>,
     /// `pw[h][e] = λ_h^e` for `e ∈ 0..=C`.
     pub(crate) pw: Vec<Vec<f64>>,
+    pub(crate) pool: pool::Pool,
 }
 
 impl Kernel {
+    /// Engine with the thread count from `LASP_KERNEL_THREADS` when set,
+    /// otherwise single-threaded — the conservative default for direct
+    /// construction (SP workers and tests); the trainer resolves its own
+    /// policy and calls [`Kernel::with_threads`].
     pub fn new(bundle: &Bundle) -> Kernel {
+        Self::with_threads(bundle, pool::env_threads().unwrap_or(1))
+    }
+
+    /// Engine with an explicit kernel-thread count (total lanes,
+    /// including the dispatching thread).
+    pub fn with_threads(bundle: &Bundle, threads: usize) -> Kernel {
         let cfg = &bundle.config;
         let c = bundle.chunk_len;
         let lam: Vec<f64> = cfg.lam.iter().map(|&x| x as f64).collect();
@@ -290,6 +307,7 @@ impl Kernel {
             dh: cfg.head_dim,
             lam,
             pw,
+            pool: pool::Pool::new(threads),
         }
     }
 
@@ -386,16 +404,21 @@ impl Kernel {
         let (c, d) = (self.c, self.d);
         let h = rmsnorm(&x_in, Some(&p[b + L_ATTN_NORM]), c, d);
         let mut zq = vec![0.0; c * d];
-        gemm::matmul_into(&mut zq, &h, &p[b + L_WQ], c, d, d, false);
+        gemm::matmul_into_mt(&self.pool, &mut zq, &h, &p[b + L_WQ], c, d, d, false);
         let mut zk = vec![0.0; c * d];
-        gemm::matmul_into(&mut zk, &h, &p[b + L_WK], c, d, d, false);
+        gemm::matmul_into_mt(&self.pool, &mut zk, &h, &p[b + L_WK], c, d, d, false);
         let mut v = vec![0.0; c * d];
-        gemm::matmul_into(&mut v, &h, &p[b + L_WV], c, d, d, false);
+        gemm::matmul_into_mt(&self.pool, &mut v, &h, &p[b + L_WV], c, d, d, false);
         let q: Vec<f64> = zq.iter().map(|&z| silu(z)).collect();
         let k: Vec<f64> = zk.iter().map(|&z| silu(z)).collect();
-        let heads = (0..self.n_heads)
-            .map(|hh| self.attention_head_intra(hh, &q, &k, &v, ws))
-            .collect();
+        // Per-head intra kernels are pure given their lane workspace;
+        // map_ws collects them in head order, so the fan-out is bitwise
+        // invisible.
+        let heads = self
+            .pool
+            .map_ws(self.n_heads, ws, |hh, lane_ws| {
+                self.attention_head_intra(hh, &q, &k, &v, lane_ws)
+            });
         LayerIntra { x_in, h, zq, zk, q, k, v, heads }
     }
 
@@ -429,19 +452,19 @@ impl Kernel {
         let on = rmsnorm(&o, None, c, d);
         // x_mid = x_in + on · Wo  (residual fused into the GEMM)
         let mut x_mid = x_in.clone();
-        gemm::matmul_into(&mut x_mid, &on, &p[b + L_WO], c, d, d, true);
+        gemm::matmul_into_mt(&self.pool, &mut x_mid, &on, &p[b + L_WO], c, d, d, true);
 
         let h2 = rmsnorm(&x_mid, Some(&p[b + L_FFN_NORM]), c, d);
         let mut z1 = vec![0.0; c * f];
-        gemm::matmul_into(&mut z1, &h2, &p[b + L_W1], c, d, f, false);
+        gemm::matmul_into_mt(&self.pool, &mut z1, &h2, &p[b + L_W1], c, d, f, false);
         let mut z3 = vec![0.0; c * f];
-        gemm::matmul_into(&mut z3, &h2, &p[b + L_W3], c, d, f, false);
+        gemm::matmul_into_mt(&self.pool, &mut z3, &h2, &p[b + L_W3], c, d, f, false);
         let mut gate = ws.take(c * f);
         for ((g, &za), &zb) in gate.iter_mut().zip(&z1).zip(&z3) {
             *g = silu(za) * zb;
         }
         let mut x_out = x_mid.clone();
-        gemm::matmul_into(&mut x_out, &gate, &p[b + L_W2], c, f, d, true);
+        gemm::matmul_into_mt(&self.pool, &mut x_out, &gate, &p[b + L_W2], c, f, d, true);
         ws.put(gate);
 
         (
@@ -553,7 +576,7 @@ impl Kernel {
 
         // tied LM head: logits = y embedᵀ
         let mut dy = ws.take(c * d);
-        gemm::matmul_into(&mut dy, &dlogits, &p[P_EMBED], c, self.v, d, false);
+        gemm::matmul_into_mt(&self.pool, &mut dy, &dlogits, &p[P_EMBED], c, self.v, d, false);
         gemm::matmul_tn_into(
             &mut dparams[P_EMBED],
             &dlogits,
@@ -579,22 +602,29 @@ impl Kernel {
         let dx_mid = self.layer_bwd_ffn(p, b, a, dx, &mut dparams, ws);
         let do_ = self.layer_bwd_attn_out(p, b, a, &dx_mid, &mut dparams, ws);
         let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
-        let dkv_in_l = &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
-        let heads: Vec<HeadBwdIntra> = (0..self.n_heads)
-            .map(|hh| {
-                self.attention_head_bwd_intra(
-                    hh,
-                    &a.q,
-                    &a.k,
-                    &a.v,
-                    &kv_l[hh * head_elems..(hh + 1) * head_elems],
-                    &do_,
-                    &mut dkv_in_l[hh * head_elems..(hh + 1) * head_elems],
-                    ws,
-                )
-            })
-            .collect();
+        let pairs = self.pool.map_ws(self.n_heads, ws, |hh, lane_ws| {
+            self.attention_head_bwd_intra(
+                hh,
+                &a.q,
+                &a.k,
+                &a.v,
+                &kv_l[hh * head_elems..(hh + 1) * head_elems],
+                &do_,
+                lane_ws,
+            )
+        });
         ws.put(do_);
+        // Install each head's owned Eq. 20 increment into its (zeroed,
+        // disjoint) dkv_in slot in head order — bit-for-bit what the old
+        // in-place accumulation produced.
+        let dkv_in_l = &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
+        let mut heads: Vec<HeadBwdIntra> = Vec::with_capacity(self.n_heads);
+        for (hh, (head, dkvh)) in pairs.into_iter().enumerate() {
+            dkv_in_l[hh * head_elems..(hh + 1) * head_elems]
+                .copy_from_slice(&dkvh);
+            ws.put(dkvh);
+            heads.push(head);
+        }
 
         BwdIntra { acts, loss, dparams, dkv_in, dx_mid, heads }
     }
@@ -650,28 +680,42 @@ impl Kernel {
                 self.layer_bwd_attn_out(p, b, a, &dx_mid, &mut dparams, ws);
             let kv_l = &kv_in[l * layer_elems..(l + 1) * layer_elems];
             let dkv_l = &dkv_out[l * layer_elems..(l + 1) * layer_elems];
-            let dkv_in_l =
-                &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
-            let mut dq = ws.take(c * d);
-            let mut dk = ws.take(c * d);
-            let mut dv = ws.take(c * d);
-            for hh in 0..self.n_heads {
-                self.attention_head_bwd(
+            // dKV-independent per-head work fans out; the dKV-dependent
+            // completion then runs serially in head order (dq/dk/dv merge
+            // via disjoint per-head column panels, so the split is
+            // bitwise identical to the old fused per-head loop).
+            let pairs = self.pool.map_ws(self.n_heads, ws, |hh, lane_ws| {
+                self.attention_head_bwd_intra(
                     hh,
                     &a.q,
                     &a.k,
                     &a.v,
                     &kv_l[hh * head_elems..(hh + 1) * head_elems],
                     &do_,
-                    &dkv_l[hh * head_elems..(hh + 1) * head_elems],
+                    lane_ws,
+                )
+            });
+            ws.put(do_);
+            let dkv_in_l =
+                &mut dkv_in[l * layer_elems..(l + 1) * layer_elems];
+            let mut dq = ws.take(c * d);
+            let mut dk = ws.take(c * d);
+            let mut dv = ws.take(c * d);
+            for (hh, (head, dkvh)) in pairs.into_iter().enumerate() {
+                let s = hh * head_elems..(hh + 1) * head_elems;
+                dkv_in_l[s.clone()].copy_from_slice(&dkvh);
+                ws.put(dkvh);
+                self.attention_head_bwd_inter(
+                    hh,
+                    head,
+                    &dkv_l[s.clone()],
                     &mut dq,
                     &mut dk,
                     &mut dv,
-                    &mut dkv_in_l[hh * head_elems..(hh + 1) * head_elems],
+                    &mut dkv_in_l[s],
                     ws,
                 );
             }
-            ws.put(do_);
             dx = self.layer_bwd_proj(p, b, a, dq, dk, dv, dx_mid, &mut dparams, ws);
         }
 
@@ -888,21 +932,27 @@ impl Kernel {
             let new_dx_mid = self.layer_bwd_ffn(p, b, a, dx, dparams, ws);
             let do_ =
                 self.layer_bwd_attn_out(p, b, a, &new_dx_mid, dparams, ws);
-            let new_heads: Vec<HeadBwdIntra> = (0..self.n_heads)
-                .map(|hh| {
-                    self.attention_head_bwd_intra(
-                        hh,
-                        &a.q,
-                        &a.k,
-                        &a.v,
-                        &kv_in[lm * le + hh * he..lm * le + (hh + 1) * he],
-                        &do_,
-                        &mut dkv_in[lm * le + hh * he..lm * le + (hh + 1) * he],
-                        ws,
-                    )
-                })
-                .collect();
+            let kv_lm = &kv_in[lm * le..(lm + 1) * le];
+            let pairs = self.pool.map_ws(self.n_heads, ws, |hh, lane_ws| {
+                self.attention_head_bwd_intra(
+                    hh,
+                    &a.q,
+                    &a.k,
+                    &a.v,
+                    &kv_lm[hh * he..(hh + 1) * he],
+                    &do_,
+                    lane_ws,
+                )
+            });
             ws.put(do_);
+            let mut new_heads: Vec<HeadBwdIntra> =
+                Vec::with_capacity(self.n_heads);
+            for (hh, (head, dkvh)) in pairs.into_iter().enumerate() {
+                dkv_in[lm * le + hh * he..lm * le + (hh + 1) * he]
+                    .copy_from_slice(&dkvh);
+                ws.put(dkvh);
+                new_heads.push(head);
+            }
             let delta = dkv_in[lm * le..(lm + 1) * le].to_vec();
             *dx_mid = new_dx_mid;
             *heads = new_heads;

@@ -1,0 +1,346 @@
+//! Per-device worker pool for the native kernel engine.
+//!
+//! Heads are embarrassingly parallel in every chunk program — the
+//! per-head intra-chunk kernels (forward and backward) touch disjoint
+//! `(C, dh)` panels and share only read-only inputs — so the engine
+//! fans per-head work out over a small pool of `std::thread` workers
+//! owned by the device's [`Kernel`](super::Kernel). The projection and
+//! FFN GEMMs row-partition over the same pool
+//! ([`gemm::matmul_into_mt`](super::gemm::matmul_into_mt)).
+//!
+//! # Determinism
+//!
+//! Results are **bitwise identical at every thread count**: each task
+//! runs the exact same f64 op sequence regardless of which lane executes
+//! it (scratch buffers are zeroed on `take`, so lane-local [`Workspace`]s
+//! are invisible to the numerics), [`Pool::map_ws`] collects results in
+//! index order, and every cross-head reduction stays serial in head
+//! order at the call site. `tests/kernel_parity.rs` and
+//! `tests/overlap_parity.rs` pin this at threads ∈ {1, 4}.
+//!
+//! # Lifecycle
+//!
+//! [`Pool::new(threads)`](Pool::new) spawns `threads - 1` persistent
+//! workers (the caller is always the remaining lane, so `threads == 1`
+//! spawns nothing and every call runs inline). Each worker owns a
+//! private [`Workspace`] that lives as long as the pool, so lane-local
+//! scratch recycles across calls just like the device workspace.
+//! Dropping the pool (with its device) signals shutdown and joins the
+//! workers. A parallel region never returns before every task it
+//! enqueued has completed — that is the invariant that makes lending
+//! stack-borrowed closures to the workers sound.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::workspace::Workspace;
+
+/// A queued unit of work; the worker lends its lane-local workspace.
+type Task = Box<dyn FnOnce(&mut Workspace) + Send + 'static>;
+
+struct Queue {
+    jobs: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+}
+
+/// Count-down latch: a parallel region waits on it until every helper
+/// task has arrived. Arrival happens in a `Drop` guard so a panicking
+/// task still releases the caller.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done: Condvar::new() }
+    }
+
+    fn arrive(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+struct ArriveOnDrop<'a>(&'a Latch);
+
+impl Drop for ArriveOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.arrive();
+    }
+}
+
+/// Waits for the latch even while unwinding: if the caller's own lane
+/// panics mid-region, helpers still borrow the region's stack frame and
+/// must finish before it unwinds away.
+struct WaitOnDrop<'a>(&'a Latch);
+
+impl Drop for WaitOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+pub struct Pool {
+    threads: usize,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// A pool with `threads` total lanes (clamped to at least 1). The
+    /// caller counts as a lane, so `threads - 1` workers are spawned.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name("lasp-kernel".into())
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn kernel pool worker")
+            })
+            .collect();
+        Pool { threads, shared, workers }
+    }
+
+    /// Total lanes (caller + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(0..n)` across the pool's lanes and return the results
+    /// **in index order**. The caller's `ws` serves its own lane; worker
+    /// lanes use their pool-resident workspaces. Serial when the pool has
+    /// one lane or the region has one task — same results either way.
+    pub fn map_ws<T, F>(&self, n: usize, ws: &mut Workspace, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut Workspace) -> T + Sync,
+    {
+        if self.threads <= 1 || n <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                out.push(f(i, ws));
+            }
+            return out;
+        }
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.region(n, ws, |i, lane_ws| {
+            let r = f(i, lane_ws);
+            *slots[i].lock().unwrap() = Some(r);
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner().unwrap().expect("kernel pool task panicked")
+            })
+            .collect()
+    }
+
+    /// Run `f(0..n)` across the lanes with no result collection (the
+    /// tasks write through interior mutability, e.g. row-partitioned
+    /// GEMM output panels). No workspace is threaded to `f`.
+    pub fn run<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.threads <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let mut ws = Workspace::default();
+        self.region(n, &mut ws, |i, _| f(i));
+    }
+
+    /// The shared fan-out machinery: claim indices from an atomic
+    /// counter, helpers on the queue, the caller as the last lane, and
+    /// a latch that guarantees no borrow escapes the region.
+    fn region<G>(&self, n: usize, ws: &mut Workspace, g: G)
+    where
+        G: Fn(usize, &mut Workspace) + Sync,
+    {
+        let helpers = (self.threads - 1).min(n - 1);
+        let next = AtomicUsize::new(0);
+        let latch = Latch::new(helpers);
+        let lane = |lane_ws: &mut Workspace| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            g(i, lane_ws);
+        };
+        let wait = WaitOnDrop(&latch);
+        for _ in 0..helpers {
+            self.enqueue(Box::new(|lane_ws: &mut Workspace| {
+                let _arrive = ArriveOnDrop(&latch);
+                lane(lane_ws);
+            }));
+        }
+        lane(ws);
+        drop(wait);
+    }
+
+    /// Push a region-scoped task. Soundness: `region` never returns (or
+    /// unwinds) past its latch, so every borrow in the task outlives the
+    /// task's execution — the `'static` here is a checked lie.
+    fn enqueue<'a>(&self, task: Box<dyn FnOnce(&mut Workspace) + Send + 'a>) {
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce(&mut Workspace) + Send + 'a>, Task>(
+                task,
+            )
+        };
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(task);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("threads", &self.threads).finish()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut ws = Workspace::default();
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.jobs.pop_front() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match task {
+            // A panicking task must not kill the worker: queued tasks
+            // from other regions would then never run and their callers
+            // would wait forever. The caller detects the failure through
+            // its empty result slot.
+            Some(t) => {
+                if catch_unwind(AssertUnwindSafe(|| t(&mut ws))).is_err() {
+                    eprintln!("lasp kernel pool: task panicked");
+                }
+            }
+            None => break,
+        }
+    }
+}
+
+/// `LASP_KERNEL_THREADS` override (tests / CI matrix legs); `0` means
+/// [`auto_threads`].
+pub fn env_threads() -> Option<usize> {
+    let v = std::env::var("LASP_KERNEL_THREADS").ok()?;
+    let n = v.trim().parse::<usize>().ok()?;
+    Some(if n == 0 { auto_threads() } else { n })
+}
+
+/// One lane per available core — the single-device default.
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_ws_returns_results_in_index_order() {
+        for threads in [1, 2, 4] {
+            let pool = Pool::new(threads);
+            let mut ws = Workspace::default();
+            for n in [0usize, 1, 2, 3, 7, 16] {
+                let got = pool.map_ws(n, &mut ws, |i, _| 3 * i + 1);
+                let want: Vec<usize> = (0..n).map(|i| 3 * i + 1).collect();
+                assert_eq!(got, want, "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_regions() {
+        let pool = Pool::new(4);
+        let mut ws = Workspace::default();
+        for round in 0..50 {
+            let got: usize =
+                pool.map_ws(5, &mut ws, |i, _| i + round).into_iter().sum();
+            assert_eq!(got, 10 + 5 * round);
+        }
+    }
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let pool = Pool::new(3);
+        let hits: Vec<AtomicUsize> = (0..11).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn worker_lanes_really_participate() {
+        use std::collections::BTreeSet;
+        let pool = Pool::new(4);
+        let mut ws = Workspace::default();
+        // Tasks long enough that a single lane cannot race through the
+        // queue before the workers wake: with 4 lanes and 64 tasks at
+        // ~1ms each, at least one worker thread must claim work.
+        let ids = pool.map_ws(64, &mut ws, |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            std::thread::current().id()
+        });
+        let distinct: BTreeSet<_> = ids.into_iter().collect();
+        assert!(distinct.len() > 1, "all tasks ran on one lane");
+    }
+
+    #[test]
+    fn auto_threads_is_positive() {
+        assert!(auto_threads() >= 1);
+    }
+}

@@ -103,10 +103,32 @@ impl Device {
     /// trainer hands one bundle to every simulated GPU instead of
     /// cloning the whole parameter/artifact table per worker.
     pub fn from_arc(bundle: Arc<Bundle>, names: &[&str]) -> Result<Device> {
+        Self::from_arc_inner(bundle, names, None)
+    }
+
+    /// Like [`Device::from_arc`] with an explicit kernel-thread count
+    /// for the native engine's per-device worker pool. The PJRT backend
+    /// has its own runtime threading and ignores the knob.
+    pub fn from_arc_with_threads(
+        bundle: Arc<Bundle>,
+        names: &[&str],
+        kernel_threads: usize,
+    ) -> Result<Device> {
+        Self::from_arc_inner(bundle, names, Some(kernel_threads))
+    }
+
+    fn from_arc_inner(
+        bundle: Arc<Bundle>,
+        names: &[&str],
+        kernel_threads: Option<usize>,
+    ) -> Result<Device> {
         match std::env::var("LASP_BACKEND").as_deref() {
             Ok("pjrt") => {
                 #[cfg(feature = "pjrt")]
-                return Ok(Device::Pjrt(pjrt::PjrtDevice::new(&bundle, names)?));
+                {
+                    let _ = kernel_threads; // PJRT manages its own threads
+                    return Ok(Device::Pjrt(pjrt::PjrtDevice::new(&bundle, names)?));
+                }
                 #[cfg(not(feature = "pjrt"))]
                 anyhow::bail!(
                     "LASP_BACKEND=pjrt but this build has no PJRT support \
@@ -118,7 +140,10 @@ impl Device {
                 "unknown LASP_BACKEND {other:?} (expected \"native\" or \"pjrt\")"
             ),
         }
-        Ok(Device::Native(NativeDevice::from_arc(bundle, names)?))
+        Ok(Device::Native(match kernel_threads {
+            Some(t) => NativeDevice::from_arc_with_threads(bundle, names, t)?,
+            None => NativeDevice::from_arc(bundle, names)?,
+        }))
     }
 
     pub fn bundle(&self) -> &Bundle {

@@ -71,15 +71,38 @@ impl NativeDevice {
     }
 
     /// Construct without cloning the bundle — workers share one
-    /// `Arc<Bundle>` across every simulated GPU.
+    /// `Arc<Bundle>` across every simulated GPU. Kernel threads default
+    /// to [`Kernel::new`]'s policy (1, or the `LASP_KERNEL_THREADS`
+    /// override).
     pub fn from_arc(bundle: Arc<Bundle>, names: &[&str]) -> Result<NativeDevice> {
+        Self::from_arc_inner(bundle, names, None)
+    }
+
+    /// Like [`NativeDevice::from_arc`] with an explicit kernel-thread
+    /// count — the device's worker pool gets `threads` total lanes.
+    pub fn from_arc_with_threads(
+        bundle: Arc<Bundle>,
+        names: &[&str],
+        threads: usize,
+    ) -> Result<NativeDevice> {
+        Self::from_arc_inner(bundle, names, Some(threads))
+    }
+
+    fn from_arc_inner(
+        bundle: Arc<Bundle>,
+        names: &[&str],
+        threads: Option<usize>,
+    ) -> Result<NativeDevice> {
         for n in names {
             anyhow::ensure!(
                 bundle.artifacts.contains_key(*n),
                 "artifact {n} not in manifest"
             );
         }
-        let kern = Kernel::new(&bundle);
+        let kern = match threads {
+            Some(t) => Kernel::with_threads(&bundle, t),
+            None => Kernel::new(&bundle),
+        };
         Ok(NativeDevice {
             bundle,
             names: names.iter().map(|s| s.to_string()).collect(),

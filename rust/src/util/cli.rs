@@ -4,11 +4,14 @@
 //! and auto-generated `--help`, which covers everything the `lasp` binary,
 //! examples, and bench harnesses need.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 #[derive(Debug, Default)]
 pub struct Args {
     opts: BTreeMap<String, String>,
+    /// option names the user spelled out on the command line, as opposed
+    /// to values filled in from the spec defaults
+    explicit: BTreeSet<String>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -107,6 +110,7 @@ impl Cli {
                             .cloned()
                             .ok_or_else(|| format!("--{name} needs a value"))?,
                     };
+                    args.explicit.insert(name.clone());
                     args.opts.insert(name, v);
                 }
             } else {
@@ -159,6 +163,13 @@ impl Args {
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }
+
+    /// True when the user passed `--name` explicitly (a defaulted value
+    /// reads the same through [`Args::get`], so conflict checks need
+    /// this distinction).
+    pub fn is_set(&self, name: &str) -> bool {
+        self.explicit.contains(name)
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +204,15 @@ mod tests {
         assert_eq!(a.get("name"), "small");
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn is_set_distinguishes_explicit_from_default() {
+        let a = cli().parse_from(&toks(&["--steps", "99"])).unwrap();
+        assert!(a.is_set("steps"));
+        assert!(!a.is_set("name"), "defaulted option must not read as set");
+        let b = cli().parse_from(&toks(&["--name=small"])).unwrap();
+        assert!(b.is_set("name"), "--key=value form must count as set");
     }
 
     #[test]

@@ -19,11 +19,26 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize a sample. Total-order sorting keeps a stray NaN (e.g. a
+    /// zero-duration division upstream) from panicking the bench run —
+    /// NaNs sort to the top and poison `mean`/`max` visibly instead. An
+    /// empty sample yields an all-zero summary rather than indexing out
+    /// of bounds.
     pub fn of(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty());
+        let n = samples.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                max: 0.0,
+            };
+        }
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = s.len();
+        s.sort_by(f64::total_cmp);
         let mean = s.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
             s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
@@ -192,6 +207,25 @@ mod tests {
         let s = Summary::of(&[2.5]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p95, 2.5);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked here
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN must sort last and surface in max");
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn summary_of_empty_is_zeroed() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.p50, 0.0);
+        assert_eq!(s.p95, 0.0);
     }
 
     #[test]

@@ -21,8 +21,10 @@
 //! tolerances — any kernel-formulation bug shows up as a gross failure,
 //! not a tolerance nudge.
 
+use std::sync::Arc;
+
 use lasp::model::ParamStore;
-use lasp::runtime::kernel::reference;
+use lasp::runtime::kernel::{gemm, pool::Pool, reference};
 use lasp::runtime::{load_bundle, Bundle, NativeDevice};
 use lasp::tensor::{IntTensor, Tensor, Value};
 use lasp::util::rng::Rng;
@@ -299,6 +301,124 @@ fn two_phase_matches_single_call_bitwise() {
                 a.as_f32().data() == b.as_f32().data(),
                 "{phase} out[{i}] not bitwise equal"
             );
+        }
+    }
+}
+
+/// The 4×4-tiled / 4-row-blocked GEMM kernels against a scalar triple
+/// loop on shapes that are NOT multiples of the tile (4) or panel
+/// ([`KB`] = 64) sizes — every remainder path of every layout, with and
+/// without accumulation. f64 in, so reassociation noise stays ~1e-13.
+#[test]
+fn gemm_tile_boundary_shapes_match_scalar_oracle() {
+    fn naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    out[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+    fn fill(len: usize, salt: u64) -> Vec<f64> {
+        let mut v = vec![0.0f32; len];
+        Rng::new(23).fork(salt).fill_normal(&mut v, 1.0);
+        v.into_iter().map(|x| x as f64).collect()
+    }
+    fn close(ctx: &str, got: &[f64], want: &[f64]) {
+        for (i, (x, y)) in got.iter().zip(want).enumerate() {
+            assert!((x - y).abs() <= 1e-10 * (1.0 + y.abs()), "{ctx}[{i}]: {x} vs {y}");
+        }
+    }
+
+    let pool = Pool::new(4);
+    // m/n off the 4-tile, k off the KB=64 panel (and straddling it)
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (2, 3, 5),
+        (5, 63, 3),
+        (6, 65, 7),
+        (7, 127, 5),
+        (9, 130, 6),
+        (66, 66, 66),
+    ] {
+        let ctx = format!("m={m} k={k} n={n}");
+        let a = fill(m * k, 1);
+        let b = fill(k * n, 2);
+        let want = naive(&a, &b, m, k, n);
+        for add in [false, true] {
+            let base = fill(m * n, 3);
+            let expect: Vec<f64> = if add {
+                want.iter().zip(&base).map(|(x, y)| x + y).collect()
+            } else {
+                want.clone()
+            };
+
+            let mut out = base.clone();
+            gemm::matmul_into(&mut out, &a, &b, m, k, n, add);
+            close(&format!("{ctx} nn add={add}"), &out, &expect);
+
+            let mut out = base.clone();
+            gemm::matmul_into_mt(&pool, &mut out, &a, &b, m, k, n, add);
+            close(&format!("{ctx} nn_mt add={add}"), &out, &expect);
+
+            // nt: hand the kernel bᵀ in (n, k) row-major
+            let mut bt = vec![0.0; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            let mut out = base.clone();
+            gemm::matmul_nt_into(&mut out, &a, &bt, m, k, n, add);
+            close(&format!("{ctx} nt add={add}"), &out, &expect);
+
+            // tn: hand the kernel aᵀ in (k, m) row-major
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mut out = base.clone();
+            gemm::matmul_tn_into(&mut out, &at, &b, k, m, n, add);
+            close(&format!("{ctx} tn add={add}"), &out, &expect);
+        }
+    }
+}
+
+/// The tentpole pin at the device level: a 4-lane engine must reproduce
+/// the single-threaded engine **bitwise** on every `chunk_fwd` /
+/// `chunk_bwd` output — per-head fan-out, pooled GEMM row partitioning
+/// and the ordered dKV install are all reduction-order preserving.
+#[test]
+fn engine_outputs_are_bitwise_identical_across_thread_counts() {
+    for config in ["tiny", "tiny_lt"] {
+        for c in [8usize, 32] {
+            let b = Arc::new(load_bundle(config, c).unwrap());
+            let dev1 =
+                NativeDevice::from_arc_with_threads(Arc::clone(&b), &[], 1).unwrap();
+            let dev4 =
+                NativeDevice::from_arc_with_threads(Arc::clone(&b), &[], 4).unwrap();
+            let params = ParamStore::init(&b, 11);
+            let (tokens, labels, kv_in, dkv_out) = problem(&b, 500 + c as u64);
+            let ctx = format!("{config}/C={c} threads 1 vs 4");
+            let frest = fwd_rest(c, &tokens, &labels, &kv_in);
+            let brest = bwd_rest(c, &tokens, &labels, &kv_in, &dkv_out, 1.0 / c as f32);
+
+            for (name, rest) in [("chunk_fwd", &frest), ("chunk_bwd", &brest)] {
+                let o1 = dev1.exec_parts(name, params.tensors(), rest).unwrap();
+                let o4 = dev4.exec_parts(name, params.tensors(), rest).unwrap();
+                assert_eq!(o1.len(), o4.len(), "{ctx} {name}: arity");
+                for (i, (x, y)) in o1.iter().zip(&o4).enumerate() {
+                    assert!(
+                        x.as_f32().data() == y.as_f32().data(),
+                        "{ctx} {name} out[{i}] not bitwise equal"
+                    );
+                }
+            }
         }
     }
 }

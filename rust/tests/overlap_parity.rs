@@ -24,12 +24,22 @@ use lasp::util::stats::PhaseTimer;
 const STEPS: usize = 4;
 
 fn run(config: &str, sp: usize, schedule: Schedule) -> TrainResult {
+    run_threaded(config, sp, schedule, None)
+}
+
+fn run_threaded(
+    config: &str,
+    sp: usize,
+    schedule: Schedule,
+    kernel_threads: Option<usize>,
+) -> TrainResult {
     // N = 64 split as T ∈ {2, 4}: chunk 32 / 16
     let mut c = TrainConfig::new(config, 64 / sp, sp);
     c.steps = STEPS;
     c.warmup = 10;
     c.lr = 1e-3;
     c.schedule = schedule;
+    c.kernel_threads = kernel_threads;
     train(&c).unwrap()
 }
 
@@ -76,6 +86,27 @@ fn allgather_schedule_is_bitwise_identical() {
             let seq = run(config, sp, Schedule::Sequential);
             let ag = run(config, sp, Schedule::AllGather);
             assert_bitwise_equal(&seq, &ag, &format!("{config} T={sp}"));
+        }
+    }
+}
+
+/// The threading pin (ISSUE 7 tentpole): a 4-lane kernel engine must
+/// train **bitwise identically** to the single-threaded engine — same
+/// losses, same parameter trajectory — on every schedule and both model
+/// families. Per-head fan-out collects in head order and pooled GEMMs
+/// partition rows without reassociating, so thread count must be
+/// invisible to the numerics.
+#[test]
+fn kernel_threads_are_bitwise_invisible() {
+    for config in ["tiny", "tiny_lt"] {
+        for schedule in Schedule::ALL {
+            let t1 = run_threaded(config, 2, schedule, Some(1));
+            let t4 = run_threaded(config, 2, schedule, Some(4));
+            assert_bitwise_equal(
+                &t1,
+                &t4,
+                &format!("{config} {} threads 1 vs 4", schedule.name()),
+            );
         }
     }
 }
