@@ -17,6 +17,6 @@ pub use comm_volume::{allgather_wire_bytes, volume_elements, SpMethod};
 pub use memory::{max_seq_len, memory_per_gpu, DdpBackend, MemoryBreakdown};
 pub use models::ModelShape;
 pub use speed::{
-    step_time, step_time_scheduled, throughput_tokens_per_sec,
-    throughput_tokens_per_sec_scheduled, RingSchedule,
+    decode_time, prefill_time, step_time, step_time_scheduled,
+    throughput_tokens_per_sec, throughput_tokens_per_sec_scheduled, RingSchedule,
 };

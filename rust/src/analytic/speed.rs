@@ -163,6 +163,30 @@ pub fn step_time_scheduled(
     Some(STEP_OVERHEAD_SEC + compute + comm + gsync)
 }
 
+/// Fixed per-engine-call overhead on the serving path (kernel launch +
+/// scheduler bookkeeping). Far below [`STEP_OVERHEAD_SEC`]: a decode
+/// step launches a handful of GEMV-shaped kernels, not a full training
+/// step with optimizer and dataloader.
+const DECODE_OVERHEAD_SEC: f64 = 50e-6;
+
+/// Simulated wall-clock seconds for one continuous-batching decode tick
+/// producing one token for each of `batch` resident sequences. LASP
+/// decode is O(1) in context length — the recurrent `(H, d, d)` state
+/// replaces the softmax KV scan — so the cost is `batch` single-token
+/// forwards plus a fixed launch overhead shared by the whole batch.
+/// Drives the serving simulator's virtual clock (`serve/sim.rs`), which
+/// is what makes its latency percentiles deterministic by seed.
+pub fn decode_time(shape: &ModelShape, topo: &Topology, batch: u64) -> f64 {
+    DECODE_OVERHEAD_SEC + batch as f64 * shape.fwd_flops_linear(1) / topo.gpu_flops
+}
+
+/// Simulated wall-clock seconds to prefill (or replay after eviction) a
+/// `tokens`-long prefix for one sequence: one chunked forward over the
+/// prompt, linear in its length.
+pub fn prefill_time(shape: &ModelShape, topo: &Topology, tokens: u64) -> f64 {
+    DECODE_OVERHEAD_SEC + shape.fwd_flops_linear(tokens) / topo.gpu_flops
+}
+
 /// Gradient all-reduce time for one step.
 ///
 /// The trainer all-reduces gradients over the **full world** T·G
@@ -379,6 +403,27 @@ mod tests {
             grad_sync_time(&TNL_1B, &topo, 4, 0),
             grad_sync_time(&TNL_1B, &topo, 4, 1)
         );
+    }
+
+    #[test]
+    fn decode_batching_amortizes_overhead() {
+        let topo = Topology::a100(1);
+        let one = decode_time(&TNL_1B, &topo, 1);
+        let eight = decode_time(&TNL_1B, &topo, 8);
+        // one tick for 8 sequences beats 8 single-sequence ticks: the
+        // launch overhead is paid once per tick, not per sequence
+        assert!(eight < 8.0 * one, "{eight} vs 8×{one}");
+        // but compute still scales with batch
+        assert!(eight > one);
+    }
+
+    #[test]
+    fn decode_and_prefill_times_are_monotone() {
+        let topo = Topology::a100(1);
+        assert!(decode_time(&TNL_1B, &topo, 4) < decode_time(&TNL_1B, &topo, 5));
+        assert!(prefill_time(&TNL_1B, &topo, 64) < prefill_time(&TNL_1B, &topo, 128));
+        // a decode tick is one-token work: cheaper than any real prefill
+        assert!(decode_time(&TNL_1B, &topo, 1) < prefill_time(&TNL_1B, &topo, 64));
     }
 
     #[test]

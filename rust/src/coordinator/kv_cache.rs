@@ -11,21 +11,54 @@
 //! The Table-5 ablation ("KV State Cache = No") disables this, forcing
 //! the coordinator to replay the forward ring before the backward pass —
 //! recomputing the whole KV chain *and* re-communicating every state.
+//!
+//! The serving layer (`serve/`) reuses this cache as the residency
+//! controller for per-sequence decode states: constructed with a
+//! capacity ([`KvCache::with_capacity`]), the cache tracks LRU order
+//! across [`KvCache::put_evicting`]/[`KvCache::touch`] and evicts the
+//! least-recently-used resident whenever the memory budget is
+//! exceeded, reporting the victims so the scheduler can requeue their
+//! sequences for recompute. The training ring uses the unbounded
+//! construction and never evicts.
 
 use crate::tensor::Tensor;
 
-/// Per-worker cache keyed by micro-batch slot (batch index within a step).
+/// Per-worker cache keyed by micro-batch slot (batch index within a
+/// step; the serving path keys by request id instead).
 #[derive(Default, Debug)]
 pub struct KvCache {
     slots: Vec<Option<Tensor>>,
     enabled: bool,
     /// cumulative bytes held (metrics; constant in sequence length)
     peak_bytes: usize,
+    /// max resident entries; `None` = unbounded (training ring)
+    capacity: Option<usize>,
+    /// resident slots, least-recently-used first
+    lru: Vec<usize>,
+    evictions: u64,
 }
 
 impl KvCache {
     pub fn new(enabled: bool, n_slots: usize) -> KvCache {
-        KvCache { slots: vec![None; n_slots], enabled, peak_bytes: 0 }
+        KvCache {
+            slots: vec![None; n_slots],
+            enabled,
+            peak_bytes: 0,
+            capacity: None,
+            lru: Vec::new(),
+            evictions: 0,
+        }
+    }
+
+    /// Serving construction: an enabled cache holding at most
+    /// `capacity` resident states (the memory budget, denominated in
+    /// states — every entry is the same `(L, H, dk, dv)` stack, so
+    /// bytes = capacity × state bytes). Capacity 0 keeps nothing
+    /// resident: every put is immediately evicted.
+    pub fn with_capacity(n_slots: usize, capacity: usize) -> KvCache {
+        let mut c = KvCache::new(true, n_slots);
+        c.capacity = Some(capacity);
+        c
     }
 
     pub fn enabled(&self) -> bool {
@@ -43,8 +76,17 @@ impl KvCache {
     /// it with the same clear assert instead of `put` panicking on a raw
     /// index while `get` silently returned `None`.
     pub fn put(&mut self, slot: usize, kv_in: &Tensor) {
+        let _ = self.put_evicting(slot, kv_in);
+    }
+
+    /// [`KvCache::put`] on the serving path: store `kv_in`, mark `slot`
+    /// most-recently-used, then evict least-recently-used residents
+    /// until the capacity holds. Returns the evicted slots (oldest
+    /// first) so the scheduler can requeue their sequences; always
+    /// empty on an unbounded cache.
+    pub fn put_evicting(&mut self, slot: usize, kv_in: &Tensor) -> Vec<usize> {
         if !self.enabled {
-            return;
+            return Vec::new();
         }
         assert!(
             slot < self.slots.len(),
@@ -52,6 +94,9 @@ impl KvCache {
             self.slots.len()
         );
         self.slots[slot] = Some(kv_in.clone());
+        self.touch(slot);
+        // account the high-water mark before eviction: the incoming
+        // state was momentarily resident even if it is evicted below
         let held: usize = self
             .slots
             .iter()
@@ -59,6 +104,27 @@ impl KvCache {
             .map(|t| t.nbytes())
             .sum();
         self.peak_bytes = self.peak_bytes.max(held);
+        let mut evicted = Vec::new();
+        if let Some(cap) = self.capacity {
+            while self.lru.len() > cap {
+                let victim = self.lru.remove(0);
+                self.slots[victim] = None;
+                self.evictions += 1;
+                evicted.push(victim);
+            }
+        }
+        evicted
+    }
+
+    /// Mark a resident `slot` most-recently-used (a decode step touched
+    /// its state). No-op for empty slots.
+    pub fn touch(&mut self, slot: usize) {
+        if let Some(i) = self.lru.iter().position(|&s| s == slot) {
+            self.lru.remove(i);
+        }
+        if self.slots.get(slot).is_some_and(|s| s.is_some()) {
+            self.lru.push(slot);
+        }
     }
 
     /// Retrieve (and keep) the cached state for `slot`. `None` means the
@@ -73,15 +139,50 @@ impl KvCache {
         self.slots[slot].as_ref()
     }
 
+    /// Remove and return `slot`'s state (sequence completed), freeing
+    /// its residency for the budget.
+    pub fn take(&mut self, slot: usize) -> Option<Tensor> {
+        assert!(
+            slot < self.slots.len(),
+            "KvCache::take: slot {slot} out of range (n_slots = {})",
+            self.slots.len()
+        );
+        if let Some(i) = self.lru.iter().position(|&s| s == slot) {
+            self.lru.remove(i);
+        }
+        self.slots[slot].take()
+    }
+
     /// Drop all cached states (end of step).
     pub fn clear(&mut self) {
         for s in self.slots.iter_mut() {
             *s = None;
         }
+        self.lru.clear();
     }
 
     pub fn peak_bytes(&self) -> usize {
         self.peak_bytes
+    }
+
+    /// Currently resident entries.
+    pub fn resident(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Resident slots, least-recently-used first.
+    pub fn lru_order(&self) -> &[usize] {
+        &self.lru
+    }
+
+    /// The residency budget (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Cumulative LRU evictions (0 on the training ring).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 }
 
@@ -149,6 +250,84 @@ mod tests {
         let mut c = KvCache::new(false, 1);
         c.put(7, &Tensor::zeros(&[2]));
         assert_eq!(c.peak_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_and_touch_reorders() {
+        let mut c = KvCache::with_capacity(4, 2);
+        let t = Tensor::zeros(&[2]);
+        assert!(c.put_evicting(0, &t).is_empty());
+        assert!(c.put_evicting(1, &t).is_empty());
+        assert_eq!(c.lru_order(), &[0, 1]);
+        // touching slot 0 promotes it to MRU, so slot 1 is the victim
+        c.touch(0);
+        assert_eq!(c.lru_order(), &[1, 0]);
+        assert_eq!(c.put_evicting(2, &t), vec![1]);
+        assert!(c.get(1).is_none(), "victim's state must be dropped");
+        assert!(c.get(0).is_some() && c.get(2).is_some());
+        assert_eq!(c.resident(), 2);
+        assert_eq!(c.evictions(), 1);
+        // touching an empty slot is a no-op, not a resurrection
+        c.touch(1);
+        assert_eq!(c.lru_order(), &[0, 2]);
+    }
+
+    #[test]
+    fn re_put_after_evict_restores_residency() {
+        let mut c = KvCache::with_capacity(3, 1);
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]);
+        assert!(c.put_evicting(0, &a).is_empty());
+        assert_eq!(c.put_evicting(1, &b), vec![0]);
+        // the evicted sequence is recomputed and re-admitted: slot 0
+        // comes back as MRU, displacing slot 1 in turn
+        assert_eq!(c.put_evicting(0, &a), vec![1]);
+        assert_eq!(c.get(0).unwrap().data(), &[1.0, 2.0]);
+        assert!(c.get(1).is_none());
+        assert_eq!(c.lru_order(), &[0]);
+        assert_eq!(c.evictions(), 2);
+        // a put of a slot that is already resident never evicts others
+        assert!(c.put_evicting(0, &b).is_empty());
+        assert_eq!(c.get(0).unwrap().data(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_capacity_keeps_nothing_resident() {
+        let mut c = KvCache::with_capacity(2, 0);
+        let t = Tensor::zeros(&[2]);
+        // the incoming state itself is the victim
+        assert_eq!(c.put_evicting(0, &t), vec![0]);
+        assert!(c.get(0).is_none());
+        assert_eq!(c.resident(), 0);
+        assert_eq!(c.evictions(), 1);
+        // peak still saw the transient residency before eviction
+        assert_eq!(c.peak_bytes(), 8);
+    }
+
+    #[test]
+    fn take_frees_residency_without_counting_as_eviction() {
+        let mut c = KvCache::with_capacity(2, 2);
+        let t = Tensor::zeros(&[2]);
+        c.put_evicting(0, &t);
+        c.put_evicting(1, &t);
+        assert!(c.take(0).is_some());
+        assert!(c.take(0).is_none(), "second take finds the slot empty");
+        assert_eq!(c.lru_order(), &[1]);
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn unbounded_put_never_evicts() {
+        let mut c = KvCache::new(true, 8);
+        let t = Tensor::zeros(&[2]);
+        for s in 0..8 {
+            assert!(c.put_evicting(s, &t).is_empty());
+        }
+        assert_eq!(c.resident(), 8);
+        assert_eq!(c.capacity(), None);
+        assert_eq!(c.evictions(), 0);
+        c.clear();
+        assert_eq!(c.resident(), 0);
     }
 
     #[test]

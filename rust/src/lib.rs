@@ -35,6 +35,7 @@ pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -13,6 +13,7 @@ use lasp::analytic::{self, DdpBackend, SpMethod};
 use lasp::cluster::Topology;
 use lasp::coordinator::{train, Schedule, TrainConfig};
 use lasp::runtime::{load_bundle, Device};
+use lasp::serve::{render_bench_json, simulate, ServeConfig};
 use lasp::train::{evaluate, DataGen};
 use lasp::util::cli::{Args, Cli};
 use lasp::util::stats::{fmt_klen, Table};
@@ -91,6 +92,41 @@ fn train_cli() -> Cli {
         .flag("no-overlap", "deprecated: alias for --schedule sequential")
 }
 
+/// The `lasp serve` argument set (extracted for parse tests, mirroring
+/// [`train_cli`]).
+fn serve_cli() -> Cli {
+    Cli::new("lasp serve", "continuous-batching decode simulator")
+        .opt("config", "tiny", "model config (artifact bundle name)")
+        .opt("chunk", "32", "prefill chunk length C")
+        .opt("requests", "16", "number of requests in the arrival stream")
+        .opt("rate", "500", "mean arrivals per simulated second")
+        .opt("prompt-min", "8", "minimum prompt length")
+        .opt("prompt-max", "48", "maximum prompt length")
+        .opt("max-new", "24", "decode budgets are drawn from 1..=max-new")
+        .opt("max-batch", "8", "decode batch cap per tick")
+        .opt("budget", "8", "memory budget in resident decode states")
+        .opt("seed", "0", "RNG seed (arrivals, prompts, params)")
+        .opt("kernel-threads", "1", "kernel-engine threads")
+        .flag("json", "write BENCH_serve.json next to the workspace root")
+}
+
+/// Build a [`ServeConfig`] from parsed `lasp serve` arguments.
+fn serve_config_of(a: &Args) -> ServeConfig {
+    ServeConfig {
+        config: a.get("config").to_string(),
+        chunk: a.get_usize("chunk"),
+        requests: a.get_usize("requests"),
+        arrival_rate: a.get_f64("rate"),
+        prompt_min: a.get_usize("prompt-min"),
+        prompt_max: a.get_usize("prompt-max"),
+        max_new_tokens: a.get_usize("max-new"),
+        max_batch: a.get_usize("max-batch"),
+        budget_states: a.get_usize("budget"),
+        seed: a.get_usize("seed") as u64,
+        kernel_threads: a.get_usize("kernel-threads"),
+    }
+}
+
 fn main() -> Result<()> {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = if args.is_empty() { "help".to_string() } else { args.remove(0) };
@@ -143,6 +179,44 @@ fn main() -> Result<()> {
                     "heldout: nll {:.4}  ppl {:.2}  acc {:.3}  ({} tokens)",
                     rep.nll, rep.perplexity, rep.accuracy, rep.tokens
                 );
+            }
+        }
+        "serve" => {
+            let a = serve_cli().parse_from(&args).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            let cfg = serve_config_of(&a);
+            let rep = simulate(&cfg)?;
+            println!(
+                "served {}/{} requests, {} tokens in {:.4}s simulated \
+                 ({:.1} tokens/sec; wall {:.2}s)",
+                rep.completed, cfg.requests, rep.total_tokens, rep.sim_seconds,
+                rep.tokens_per_sec, rep.wall_seconds
+            );
+            println!(
+                "residency: peak {} / budget {} states, {} evictions, \
+                 {} tokens replayed",
+                rep.peak_resident, cfg.budget_states, rep.evictions,
+                rep.replayed_tokens
+            );
+            let mut tab = Table::new(&["Latency", "p50", "p95", "p99", "max"]);
+            let row = |name: &str, s: &lasp::util::stats::Summary| {
+                [
+                    name.to_string(),
+                    format!("{:.3}ms", s.p50 * 1e3),
+                    format!("{:.3}ms", s.p95 * 1e3),
+                    format!("{:.3}ms", s.p99 * 1e3),
+                    format!("{:.3}ms", s.max * 1e3),
+                ]
+            };
+            tab.row(&row("TTFT", &rep.ttft));
+            tab.row(&row("inter-token", &rep.itl));
+            println!("{}", tab.render());
+            if a.has("json") {
+                let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+                std::fs::write(path, render_bench_json(&cfg, &rep))?;
+                println!("wrote {path}");
             }
         }
         "comm-volume" => {
@@ -215,6 +289,8 @@ fn main() -> Result<()> {
                  subcommands:\n\
                  \x20 train        run distributed LASP training\n\
                  \x20 eval         train then evaluate on held-out data\n\
+                 \x20 serve        continuous-batching decode simulator (--json\n\
+                 \x20              writes BENCH_serve.json)\n\
                  \x20 comm-volume  print the Table-1 communication volumes\n\
                  \x20 scaling      print the Fig.3/Table-4 scale projection\n\
                  \x20 info         inspect an artifact bundle\n\n\
@@ -271,5 +347,31 @@ mod tests {
         assert_eq!(kernel_threads_of(&parse(&[])), None);
         assert_eq!(kernel_threads_of(&parse(&["--kernel-threads", "0"])), Some(0));
         assert_eq!(kernel_threads_of(&parse(&["--kernel-threads", "4"])), Some(4));
+    }
+
+    #[test]
+    fn serve_cli_defaults_and_overrides() {
+        let toks: Vec<String> = Vec::new();
+        let a = serve_cli().parse_from(&toks).unwrap();
+        let cfg = serve_config_of(&a);
+        assert_eq!(cfg.config, "tiny");
+        assert_eq!(cfg.chunk, 32);
+        assert_eq!(cfg.requests, 16);
+        assert_eq!(cfg.arrival_rate, 500.0);
+        assert_eq!((cfg.prompt_min, cfg.prompt_max), (8, 48));
+        assert_eq!(cfg.max_new_tokens, 24);
+        assert_eq!((cfg.max_batch, cfg.budget_states), (8, 8));
+        assert_eq!((cfg.seed, cfg.kernel_threads), (0, 1));
+        assert!(!a.has("json"));
+        let toks: Vec<String> =
+            ["--budget", "2", "--requests", "5", "--rate", "50", "--json"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = serve_cli().parse_from(&toks).unwrap();
+        let cfg = serve_config_of(&a);
+        assert_eq!((cfg.budget_states, cfg.requests), (2, 5));
+        assert_eq!(cfg.arrival_rate, 50.0);
+        assert!(a.has("json"));
     }
 }

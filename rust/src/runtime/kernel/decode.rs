@@ -1,0 +1,273 @@
+//! Autoregressive decode path: the inter-chunk recurrence *is* the
+//! decode recurrence.
+//!
+//! A single-token step is exactly a C = 1 chunk of the paper's
+//! right-product decomposition — the intra term collapses to the scalar
+//! `(q·k)·v`, the inter term is `diag(λ)·q·KV`, and the state update is
+//! the rank-1 recurrence `KV ← λ·KV + k⊗v`. [`Kernel::decode_step`]
+//! writes that specialization directly against the GEMM engine
+//! (`dot`-scored attention, serial per-head loop: the per-token working
+//! set is one `d`-row, far below any fan-out threshold, so the step is
+//! thread-count invariant by construction).
+//!
+//! Per-element summation order matches the chunk kernels: intra output
+//! first, inter accumulated on top in plain state-row order, state
+//! update as `λ·KV[i][j] + k[i]·v[j]` — so a decode step at a
+//! chunk-initial position is **bitwise identical** to running
+//! [`Kernel::forward_full`] on a C = 1 bundle (pinned by the test
+//! below). Inside a chunk the two paths are the same real-valued
+//! function with different f64 rounding, which is why the
+//! decode↔training parity suite asserts ≤1e-6 at the f32 ABI rather
+//! than bitwise (`tests/decode_parity.rs`).
+//!
+//! [`Kernel::prefill`] consumes a prompt into a fresh [`DecodeState`]:
+//! full chunks run the fused [`Kernel::forward_full`] path (the
+//! identical FP-op sequence training executes), the sub-chunk tail runs
+//! single-token steps. Both paths are deterministic, so replaying the
+//! same tokens through `prefill` + `decode_step` restores a
+//! bitwise-identical `DecodeState` — the guarantee the serving layer's
+//! evict-then-recompute cycle rests on.
+
+use super::workspace::Workspace;
+use super::{
+    gemm, layer_base, rmsnorm, silu, Kernel, L_ATTN_NORM, L_FFN_NORM, L_W1,
+    L_W2, L_W3, L_WK, L_WO, L_WQ, L_WV, P_EMBED, P_FINAL_NORM,
+};
+
+/// Per-sequence decode context: the per-layer f64 KV state stack
+/// (layout `(L, H, dh, dh)`, identical to the ring's state messages)
+/// plus the position counter. RMSNorm is per-row, so no rolling
+/// normalization context survives a token boundary — the KV stack and
+/// the position are the *entire* sequence state, which is what makes
+/// O(1)-per-token decode (and cheap eviction accounting) possible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecodeState {
+    pub(crate) kv: Vec<f64>,
+    pub(crate) pos: usize,
+}
+
+impl DecodeState {
+    /// The f64 KV state stack, flattened `(L, H, dh, dh)`.
+    pub fn kv(&self) -> &[f64] {
+        &self.kv
+    }
+
+    /// Tokens consumed so far (prompt + replayed/generated).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Resident bytes of the f64 state — the unit the serving memory
+    /// budget is denominated in.
+    pub fn nbytes(&self) -> usize {
+        self.kv.len() * std::mem::size_of::<f64>()
+    }
+}
+
+impl Kernel {
+    /// Fresh all-zeros decode state for this model (position 0).
+    pub fn decode_state(&self) -> DecodeState {
+        DecodeState {
+            kv: vec![0.0; self.n_layers * self.n_heads * self.dh * self.dh],
+            pos: 0,
+        }
+    }
+
+    /// Advance one token: full transformer forward for a single row,
+    /// returning the f64 logits row (length V) and updating the state
+    /// in place. See the module docs for the bitwise-equivalence
+    /// argument against the C = 1 chunk kernel.
+    pub fn decode_step(
+        &self,
+        p: &[Vec<f64>],
+        token: i32,
+        st: &mut DecodeState,
+        ws: &mut Workspace,
+    ) -> Vec<f64> {
+        let (d, f, dh) = (self.d, self.f, self.dh);
+        let head_elems = dh * dh;
+        let layer_elems = self.n_heads * head_elems;
+        debug_assert_eq!(st.kv.len(), self.n_layers * layer_elems);
+
+        let embed = &p[P_EMBED];
+        let row = token as usize * d;
+        let mut x = embed[row..row + d].to_vec();
+
+        for l in 0..self.n_layers {
+            let b = layer_base(l);
+            let h = rmsnorm(&x, Some(&p[b + L_ATTN_NORM]), 1, d);
+            let mut zq = vec![0.0; d];
+            gemm::matmul_into(&mut zq, &h, &p[b + L_WQ], 1, d, d, false);
+            let mut zk = vec![0.0; d];
+            gemm::matmul_into(&mut zk, &h, &p[b + L_WK], 1, d, d, false);
+            let mut v = vec![0.0; d];
+            gemm::matmul_into(&mut v, &h, &p[b + L_WV], 1, d, d, false);
+            let q: Vec<f64> = zq.iter().map(|&z| silu(z)).collect();
+            let k: Vec<f64> = zk.iter().map(|&z| silu(z)).collect();
+
+            let kv_l = &mut st.kv[l * layer_elems..(l + 1) * layer_elems];
+            let mut o = vec![0.0; d];
+            for hh in 0..self.n_heads {
+                let lam = self.lam[hh];
+                let qh = &q[hh * dh..(hh + 1) * dh];
+                let kh = &k[hh * dh..(hh + 1) * dh];
+                let vh = &v[hh * dh..(hh + 1) * dh];
+                let kv_h =
+                    &mut kv_l[hh * head_elems..(hh + 1) * head_elems];
+                let oh = &mut o[hh * dh..(hh + 1) * dh];
+                // intra term first (the C = 1 decay mask is λ^0 = 1) …
+                let s = gemm::dot(qh, kh);
+                for j in 0..dh {
+                    oh[j] = s * vh[j];
+                }
+                // … then the inter term `diag(λ)q·KV` accumulated in
+                // state-row order, fused with the rank-1 update
+                // `KV ← λ·KV + k⊗v` (each element is read for the
+                // output before it is overwritten).
+                for i in 0..dh {
+                    let qs = lam * qh[i];
+                    let ki = kh[i];
+                    let kvrow = &mut kv_h[i * dh..(i + 1) * dh];
+                    for j in 0..dh {
+                        oh[j] += qs * kvrow[j];
+                        kvrow[j] = lam * kvrow[j] + ki * vh[j];
+                    }
+                }
+            }
+
+            let on = rmsnorm(&o, None, 1, d);
+            let mut x_mid = x;
+            gemm::matmul_into(&mut x_mid, &on, &p[b + L_WO], 1, d, d, true);
+            let h2 = rmsnorm(&x_mid, Some(&p[b + L_FFN_NORM]), 1, d);
+            let mut z1 = vec![0.0; f];
+            gemm::matmul_into(&mut z1, &h2, &p[b + L_W1], 1, d, f, false);
+            let mut z3 = vec![0.0; f];
+            gemm::matmul_into(&mut z3, &h2, &p[b + L_W3], 1, d, f, false);
+            let mut gate = ws.take(f);
+            for ((g, &za), &zb) in gate.iter_mut().zip(&z1).zip(&z3) {
+                *g = silu(za) * zb;
+            }
+            gemm::matmul_into(&mut x_mid, &gate, &p[b + L_W2], 1, f, d, true);
+            ws.put(gate);
+            x = x_mid;
+        }
+
+        let y = rmsnorm(&x, Some(&p[P_FINAL_NORM]), 1, d);
+        st.pos += 1;
+        gemm::matmul_nt(&y, &p[P_EMBED], 1, d, self.v)
+    }
+
+    /// Prefill `tokens` into a fresh [`DecodeState`]: full chunks run
+    /// through the fused chunk forward (chaining the f64 state between
+    /// chunks, exactly like the training schedules), the sub-chunk tail
+    /// through [`Kernel::decode_step`]. Returns the advanced state and
+    /// the last token's f64 logits row — the greedy next-token source.
+    ///
+    /// `tokens` must be non-empty (the caller validates at the device
+    /// boundary); the result is position `tokens.len()`.
+    pub fn prefill(
+        &self,
+        p: &[Vec<f64>],
+        tokens: &[i32],
+        ws: &mut Workspace,
+    ) -> (DecodeState, Vec<f64>) {
+        let mut st = self.decode_state();
+        let mut logits = Vec::new();
+        let n_full = tokens.len() / self.c;
+        for ci in 0..n_full {
+            let chunk = &tokens[ci * self.c..(ci + 1) * self.c];
+            let kv_in = std::mem::take(&mut st.kv);
+            let (acts, kv_out) = self.forward_full(p, chunk, &kv_in, ws);
+            st.kv = kv_out;
+            st.pos += self.c;
+            if st.pos == tokens.len() {
+                // prompt ends exactly on a chunk boundary — take the
+                // chunk-final row of the training logits head
+                let all = self.logits(p, &acts);
+                logits = all[(self.c - 1) * self.v..].to_vec();
+            }
+        }
+        for &t in &tokens[n_full * self.c..] {
+            logits = self.decode_step(p, t, &mut st, ws);
+        }
+        (st, logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{f64_of, Kernel};
+    use super::*;
+    use crate::model::ParamStore;
+    use crate::runtime::load_bundle;
+    use crate::util::rng::Rng;
+
+    /// The headline identity: a decode step at a chunk-initial position
+    /// is bitwise equal to the C = 1 chunk kernel — same state update,
+    /// same logits, down to the last bit.
+    #[test]
+    fn decode_step_is_bitwise_a_c1_chunk() {
+        let b = load_bundle("tiny", 1).unwrap();
+        let params = ParamStore::init(&b, 5);
+        let p64: Vec<Vec<f64>> =
+            params.tensors().iter().map(f64_of).collect();
+        let kern = Kernel::new(&b);
+        let mut ws = Workspace::new();
+
+        let mut rng = Rng::new(11);
+        let mut st = kern.decode_state();
+        // seed a non-trivial state by consuming a few tokens first
+        for _ in 0..3 {
+            let t = rng.below(b.config.vocab as u64) as i32;
+            kern.decode_step(&p64, t, &mut st, &mut ws);
+        }
+
+        let t = rng.below(b.config.vocab as u64) as i32;
+        let mut chunk_st = st.clone();
+        let (acts, kv_out) =
+            kern.forward_full(&p64, &[t], &chunk_st.kv, &mut ws);
+        let chunk_logits = kern.logits(&p64, &acts);
+        chunk_st.kv = kv_out;
+
+        let dec_logits = kern.decode_step(&p64, t, &mut st, &mut ws);
+        assert!(st.kv == chunk_st.kv, "state update not bitwise");
+        assert!(dec_logits == chunk_logits, "logits not bitwise");
+    }
+
+    /// Prefill chunking: a prompt of exactly k chunks goes through the
+    /// fused chunk path and must reproduce the chained chunk forward
+    /// bitwise; the tail tokens advance the position correctly.
+    #[test]
+    fn prefill_chains_full_chunks_bitwise() {
+        let b = load_bundle("tiny", 8).unwrap();
+        let params = ParamStore::init(&b, 2);
+        let p64: Vec<Vec<f64>> =
+            params.tensors().iter().map(f64_of).collect();
+        let kern = Kernel::new(&b);
+        let mut ws = Workspace::new();
+
+        let mut rng = Rng::new(4);
+        let tokens: Vec<i32> = (0..19)
+            .map(|_| rng.below(b.config.vocab as u64) as i32)
+            .collect();
+
+        let (st, logits) = kern.prefill(&p64, &tokens, &mut ws);
+        assert_eq!(st.pos(), 19);
+        assert_eq!(logits.len(), b.config.vocab);
+
+        // manual oracle: two fused chunks + three decode steps
+        let mut kv = vec![0.0; st.kv().len()];
+        for ci in 0..2 {
+            let (_, kv_out) =
+                kern.forward_full(&p64, &tokens[ci * 8..(ci + 1) * 8], &kv, &mut ws);
+            kv = kv_out;
+        }
+        let mut oracle = DecodeState { kv, pos: 16 };
+        let mut last = Vec::new();
+        for &t in &tokens[16..] {
+            last = kern.decode_step(&p64, t, &mut oracle, &mut ws);
+        }
+        assert!(st.kv() == oracle.kv(), "prefill state not bitwise");
+        assert!(logits == last, "prefill logits not bitwise");
+    }
+}

@@ -15,6 +15,9 @@
 //!  * [`reference`] — the pre-refactor scalar kernels, kept verbatim as
 //!    the numerical oracle for `tests/kernel_parity.rs` (and as the
 //!    "before" engine in the perf bench). Never on the hot path.
+//!  * [`decode`]    — the autoregressive serving path: single-token
+//!    decode steps (the inter-chunk recurrence specialized to C = 1)
+//!    and chunked prefill into a per-sequence [`decode::DecodeState`].
 //!
 //! This module owns the orchestration: the full transformer forward over
 //! one chunk (embedding → L × [attention + FFN] → final norm → tied CE
@@ -22,6 +25,7 @@
 //! ABI applied only at the device boundary.
 
 pub mod attention;
+pub mod decode;
 pub mod gemm;
 pub mod pool;
 pub mod reference;

@@ -32,6 +32,7 @@ pub mod literals;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use kernel::decode::DecodeState;
 pub use manifest::{ArtifactSpec, Bundle, IoSpec, ParamSpec};
 pub use native::NativeDevice;
 
@@ -340,11 +341,55 @@ impl Device {
         }
     }
 
+    /// Serving prefill (see [`NativeDevice::decode_prefill`]): consume
+    /// a prompt into a fresh f64 [`DecodeState`], returning the state
+    /// and the last token's logits row. Native-only: like the
+    /// all-gather stepping entry points, the f64 decode state has no
+    /// artifact-ABI equivalent — rounding it to f32 at the boundary
+    /// would break the evict-then-replay bitwise guarantee.
+    pub fn decode_prefill(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        tokens: &[i32],
+    ) -> Result<(DecodeState, Tensor)> {
+        match self {
+            Device::Native(d) => d.decode_prefill(params, version, tokens),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::decode_unsupported("decode_prefill"),
+        }
+    }
+
+    /// Serving decode step (see [`NativeDevice::decode_step`]): advance
+    /// a caller-owned [`DecodeState`] by one token, returning the new
+    /// logits row.
+    pub fn decode_step(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        token: i32,
+        dec: &mut DecodeState,
+    ) -> Result<Tensor> {
+        match self {
+            Device::Native(d) => d.decode_step(params, version, token, dec),
+            #[cfg(feature = "pjrt")]
+            Device::Pjrt(_) => Self::decode_unsupported("decode_step"),
+        }
+    }
+
     #[cfg(feature = "pjrt")]
     fn ag_unsupported<T>(name: &str) -> Result<T> {
         anyhow::bail!(
             "{name}: the all-gather schedule requires the native backend \
              (its f64 stepping state has no artifact-ABI equivalent)"
+        )
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn decode_unsupported<T>(name: &str) -> Result<T> {
+        anyhow::bail!(
+            "{name}: the decode engine requires the native backend \
+             (its f64 DecodeState has no artifact-ABI equivalent)"
         )
     }
 }

@@ -36,6 +36,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
+use super::kernel::decode::DecodeState;
 use super::kernel::workspace::{
     ActCache, ActEntry, ParamCache, PendingAgBwd, PendingAgFwd, PendingBwd,
     PendingFwd, PhaseCache, Workspace,
@@ -328,6 +329,57 @@ impl NativeDevice {
             .map(|(g, s)| tensor_of(s, g))
             .collect();
         Ok((grads, loss as f32))
+    }
+
+    /// Serving prefill: consume `tokens` into a fresh f64
+    /// [`DecodeState`] — full chunks through the fused chunk forward,
+    /// the sub-chunk tail through single-token steps — and return the
+    /// state plus the last token's logits row (shape `(V,)`, f32 ABI).
+    ///
+    /// Like the `ag_*` entry points, the f64 state crosses the call
+    /// boundary unrounded: only the logits pass through the f32 ABI,
+    /// so an evict-then-replay cycle restores the state bitwise.
+    pub fn decode_prefill(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        tokens: &[i32],
+    ) -> Result<(DecodeState, Tensor)> {
+        let kern = &self.kern;
+        check_ids("decode_prefill", tokens, kern.v)?;
+        anyhow::ensure!(!tokens.is_empty(), "decode_prefill: empty prompt");
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let prefs: Vec<&Tensor> = params.iter().collect();
+        let p64 = st.params.get(Some(version), &prefs);
+        let (dec, logits) = kern.prefill(&p64, tokens, &mut st.ws);
+        Ok((dec, tensor_of(&[kern.v], &logits)))
+    }
+
+    /// Serving decode: advance `dec` by one token and return the new
+    /// logits row (shape `(V,)`, f32 ABI). The state stays f64 and is
+    /// owned by the caller — one per live sequence, not per device.
+    pub fn decode_step(
+        &self,
+        params: &[Tensor],
+        version: u64,
+        token: i32,
+        dec: &mut DecodeState,
+    ) -> Result<Tensor> {
+        let kern = &self.kern;
+        check_ids("decode_step", &[token], kern.v)?;
+        let expect = kern.n_layers * kern.n_heads * kern.dh * kern.dh;
+        anyhow::ensure!(
+            dec.kv().len() == expect,
+            "decode_step: state has {} elems, model needs {expect}",
+            dec.kv().len()
+        );
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let prefs: Vec<&Tensor> = params.iter().collect();
+        let p64 = st.params.get(Some(version), &prefs);
+        let logits = kern.decode_step(&p64, token, dec, &mut st.ws);
+        Ok(tensor_of(&[kern.v], &logits))
     }
 
     fn spec(&self, name: &str) -> Result<&ArtifactSpec> {

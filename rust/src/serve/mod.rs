@@ -1,0 +1,31 @@
+//! Autoregressive decode engine + continuous-batching serving simulator.
+//!
+//! Training reproduces the paper's chunked right-product recurrence;
+//! this module exercises the same kernels at serving time. A LASP model
+//! decodes with O(1) state per sequence — the `(L, H, dk, dv)` KV
+//! recurrence replaces the softmax KV scan — so a serving engine keeps
+//! one [`crate::runtime::DecodeState`] per in-flight request and steps
+//! all of them one token per tick (continuous batching).
+//!
+//! Split:
+//!
+//! * [`scheduler`] — deterministic request generation (Poisson-ish
+//!   arrivals from the repo's own [`crate::util::rng::Rng`]), the FIFO
+//!   admission / LRU eviction policy over an extended
+//!   [`crate::coordinator::KvCache`], and the per-tick batch plan.
+//! * [`sim`] — the engine: drives the native device's
+//!   `decode_prefill`/`decode_step` entry points for real greedy
+//!   tokens, advances a *virtual clock* by the analytic cost model
+//!   ([`crate::analytic::decode_time`]/[`crate::analytic::prefill_time`])
+//!   so latency percentiles are deterministic by seed, and renders
+//!   `BENCH_serve.json`.
+//!
+//! Correctness is pinned by `tests/decode_parity.rs` (decode logits vs
+//! the training `chunk_logits` path) and `tests/serve_sim.rs`
+//! (determinism, memory-budget invariant, starvation guard).
+
+pub mod scheduler;
+pub mod sim;
+
+pub use scheduler::{gen_requests, BatchRecord, Request, SchedStep, Scheduler, ServeConfig};
+pub use sim::{render_bench_json, simulate, ServeReport};

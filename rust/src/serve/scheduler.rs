@@ -1,0 +1,365 @@
+//! Continuous-batching scheduler: request streams, FIFO admission, LRU
+//! eviction under a state-count budget.
+//!
+//! The scheduler owns no kernel state. It decides *which* requests run
+//! each tick and tracks residency through a capacity-bounded
+//! [`KvCache`]; the engine (`sim.rs`) owns the f64 [`DecodeState`]s and
+//! performs the actual compute. The cache slot holds a state-*shaped*
+//! f32 placeholder purely for residency and byte accounting — the
+//! engine never reads a state back out of the cache, because eviction
+//! recovery is always a bitwise *replay* (prefill the prompt, re-step
+//! the generated tokens) rather than a lossy f32 round-trip.
+//!
+//! Tick semantics (one [`Scheduler::step`] call):
+//!
+//! 1. deliver every arrival with `arrival <= now` into the FIFO queue;
+//! 2. decode set = resident sequences in LRU order, capped at
+//!    `max_batch`; each is touched (moved to MRU);
+//! 3. admit at most one prefill from the queue front; the admission's
+//!    `put_evicting` may evict LRU residents, which are requeued FIFO
+//!    with `replays += 1` and reported in the batch record so the
+//!    engine drops their states.
+//!
+//! Starvation guard / termination: admissions enter as MRU (capacity
+//! ≥ 1 protects them), every residency produces at least one token
+//! before it can be evicted (the victim is chosen at the *next*
+//! admission, after this tick's decode), and each request needs a
+//! finite token count — so total work is finite and every request
+//! finishes, even at `budget_states = 1`.
+//!
+//! [`DecodeState`]: crate::runtime::DecodeState
+
+use std::collections::VecDeque;
+
+use crate::coordinator::KvCache;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Serving-run parameters (CLI `serve` subcommand maps 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// model config name (`tiny`, `tiny_lt`, ...)
+    pub config: String,
+    /// chunk length for the prefill path
+    pub chunk: usize,
+    /// number of requests in the arrival stream
+    pub requests: usize,
+    /// mean arrivals per simulated second (exponential gaps)
+    pub arrival_rate: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// per-request decode lengths are drawn from `1..=max_new_tokens`
+    pub max_new_tokens: usize,
+    /// decode batch cap per tick
+    pub max_batch: usize,
+    /// memory budget in resident decode states
+    pub budget_states: usize,
+    pub seed: u64,
+    pub kernel_threads: usize,
+}
+
+/// One sequence in flight. Times are virtual-clock seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    pub arrival: f64,
+    pub prompt: Vec<i32>,
+    /// decode budget: the request finishes after this many tokens
+    pub max_new: usize,
+    /// greedy tokens emitted so far; the last one is the next decode input
+    pub generated: Vec<i32>,
+    pub first_token_at: Option<f64>,
+    /// emission time of each generated token (for inter-token latency)
+    pub token_times: Vec<f64>,
+    pub finished_at: Option<f64>,
+    /// evict→replay round-trips this request suffered
+    pub replays: u32,
+}
+
+/// Deterministic request stream: independent [`Rng`] forks for arrival
+/// gaps, prompt lengths, prompt tokens and decode budgets, so the
+/// stream depends only on (`seed`, the generation parameters) and not
+/// on consumption order.
+pub fn gen_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
+    let base = Rng::new(cfg.seed);
+    let mut arr = base.fork(1);
+    let mut plen = base.fork(2);
+    let mut toks = base.fork(3);
+    let mut news = base.fork(4);
+    let span = (cfg.prompt_max - cfg.prompt_min + 1) as u64;
+    let mut t = 0.0;
+    (0..cfg.requests)
+        .map(|id| {
+            // exponential inter-arrival gap (inverse CDF on [0,1))
+            t += -(1.0 - arr.uniform()).ln() / cfg.arrival_rate;
+            let n = cfg.prompt_min + plen.below(span) as usize;
+            let prompt = (0..n).map(|_| toks.below(vocab as u64) as i32).collect();
+            Request {
+                id,
+                arrival: t,
+                prompt,
+                max_new: 1 + news.below(cfg.max_new_tokens as u64) as usize,
+                generated: Vec::new(),
+                first_token_at: None,
+                token_times: Vec::new(),
+                finished_at: None,
+                replays: 0,
+            }
+        })
+        .collect()
+}
+
+/// The batch plan for one tick. `decodes` run against states that
+/// already exist; `prefills` build (or replay) states; `evicted` lost
+/// residency to this tick's admission and were requeued.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchRecord {
+    pub tick: usize,
+    pub prefills: Vec<usize>,
+    pub decodes: Vec<usize>,
+    pub evicted: Vec<usize>,
+}
+
+/// One scheduling decision.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedStep {
+    /// run this batch and charge its cost to the clock
+    Run(BatchRecord),
+    /// nothing runnable: sleep until this arrival time
+    Idle(f64),
+    /// every request has finished
+    Done,
+}
+
+pub struct Scheduler {
+    requests: Vec<Request>,
+    waiting: VecDeque<usize>,
+    cache: KvCache,
+    next_arrival: usize,
+    finished: usize,
+    tick: usize,
+    max_batch: usize,
+    /// state-shaped placeholder put into the cache per admission
+    state_view: Tensor,
+}
+
+impl Scheduler {
+    /// `state_shape` is the bundle's `(L, H, dk, dv)` KV-state shape,
+    /// used only to size the cache's byte accounting.
+    pub fn new(cfg: &ServeConfig, requests: Vec<Request>, state_shape: &[usize]) -> Scheduler {
+        Scheduler {
+            waiting: VecDeque::new(),
+            cache: KvCache::with_capacity(requests.len(), cfg.budget_states),
+            next_arrival: 0,
+            finished: 0,
+            tick: 0,
+            max_batch: cfg.max_batch.max(1),
+            state_view: Tensor::zeros(state_shape),
+            requests,
+        }
+    }
+
+    /// Plan the next tick at virtual time `now` (see module docs for
+    /// the tick semantics).
+    pub fn step(&mut self, now: f64) -> SchedStep {
+        while self.next_arrival < self.requests.len()
+            && self.requests[self.next_arrival].arrival <= now
+        {
+            self.waiting.push_back(self.next_arrival);
+            self.next_arrival += 1;
+        }
+
+        // Residents are exactly the running sequences (finished ones are
+        // taken out in `complete`), least-recently-decoded first.
+        let decodes: Vec<usize> =
+            self.cache.lru_order().iter().copied().take(self.max_batch).collect();
+        for &rid in &decodes {
+            self.cache.touch(rid);
+        }
+
+        let mut prefills = Vec::new();
+        let mut evicted = Vec::new();
+        if let Some(rid) = self.waiting.pop_front() {
+            // Admit after touching the decode set: this tick's decoded
+            // states are MRU, so the victim is the stalest resident.
+            for v in self.cache.put_evicting(rid, &self.state_view) {
+                self.requests[v].replays += 1;
+                self.waiting.push_back(v);
+                evicted.push(v);
+            }
+            prefills.push(rid);
+        }
+
+        if prefills.is_empty() && decodes.is_empty() {
+            if self.finished == self.requests.len() {
+                return SchedStep::Done;
+            }
+            debug_assert!(
+                self.next_arrival < self.requests.len(),
+                "scheduler stalled: unfinished requests but nothing runnable or arriving"
+            );
+            return SchedStep::Idle(self.requests[self.next_arrival].arrival);
+        }
+
+        let rec = BatchRecord { tick: self.tick, prefills, decodes, evicted };
+        self.tick += 1;
+        SchedStep::Run(rec)
+    }
+
+    /// Mark `rid` finished at `now` and free its residency. Also drops
+    /// any pending requeue: a request evicted on the same tick its
+    /// decode emitted the final token is already back in `waiting`, and
+    /// leaving it there would re-admit a finished sequence that nothing
+    /// ever completes again (a permanently resident zombie that keeps
+    /// the run from terminating).
+    pub fn complete(&mut self, rid: usize, now: f64) {
+        debug_assert!(self.requests[rid].finished_at.is_none());
+        let _ = self.cache.take(rid);
+        self.waiting.retain(|&w| w != rid);
+        self.requests[rid].finished_at = Some(now);
+        self.finished += 1;
+    }
+
+    pub fn requests(&self) -> &[Request] {
+        &self.requests
+    }
+
+    pub fn requests_mut(&mut self) -> &mut [Request] {
+        &mut self.requests
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(requests: usize, budget: usize, max_batch: usize) -> ServeConfig {
+        ServeConfig {
+            config: "tiny".into(),
+            chunk: 8,
+            requests,
+            arrival_rate: 100.0,
+            prompt_min: 2,
+            prompt_max: 6,
+            max_new_tokens: 4,
+            max_batch,
+            budget_states: budget,
+            seed: 0,
+            kernel_threads: 1,
+        }
+    }
+
+    #[test]
+    fn request_stream_is_deterministic_and_in_range() {
+        let c = cfg(16, 4, 4);
+        let a = gen_requests(&c, 64);
+        let b = gen_requests(&c, 64);
+        assert_eq!(a, b);
+        let mut prev = 0.0;
+        for r in &a {
+            assert!(r.arrival > prev, "arrivals strictly increase");
+            prev = r.arrival;
+            assert!((2..=6).contains(&r.prompt.len()));
+            assert!((1..=4).contains(&r.max_new));
+            assert!(r.prompt.iter().all(|&t| (0..64).contains(&t)));
+        }
+        let mut c2 = c.clone();
+        c2.seed = 1;
+        assert_ne!(gen_requests(&c2, 64), a, "seed must matter");
+    }
+
+    #[test]
+    fn admission_is_fifo_one_per_tick() {
+        let c = cfg(3, 4, 4);
+        let reqs = gen_requests(&c, 64);
+        let last = reqs.last().unwrap().arrival;
+        let mut s = Scheduler::new(&c, reqs, &[1]);
+        // all three have arrived by `last`; admissions come out in order
+        for want in 0..3 {
+            match s.step(last) {
+                SchedStep::Run(b) => {
+                    assert_eq!(b.prefills, vec![want]);
+                    assert!(b.evicted.is_empty(), "budget 4 never evicts 3 requests");
+                }
+                other => panic!("tick {want}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_requeues_the_stalest_resident() {
+        let c = cfg(3, 1, 4);
+        let reqs = gen_requests(&c, 64);
+        let last = reqs.last().unwrap().arrival;
+        let mut s = Scheduler::new(&c, reqs, &[1]);
+        let SchedStep::Run(b0) = s.step(last) else { panic!() };
+        assert_eq!((b0.prefills.as_slice(), b0.evicted.as_slice()), ([0].as_slice(), [].as_slice()));
+        // tick 1: request 0 decodes (touched, MRU) but budget 1 still
+        // forces it out when request 1 is admitted
+        let SchedStep::Run(b1) = s.step(last) else { panic!() };
+        assert_eq!(b1.decodes, vec![0]);
+        assert_eq!(b1.prefills, vec![1]);
+        assert_eq!(b1.evicted, vec![0]);
+        assert_eq!(s.requests()[0].replays, 1);
+        // the victim rejoined the FIFO queue behind request 2
+        let SchedStep::Run(b2) = s.step(last) else { panic!() };
+        assert_eq!(b2.prefills, vec![2]);
+        assert_eq!(b2.evicted, vec![1]);
+        let SchedStep::Run(b3) = s.step(last) else { panic!() };
+        assert_eq!(b3.prefills, vec![0], "evicted request re-admitted FIFO");
+    }
+
+    #[test]
+    fn completing_an_evicted_request_cancels_its_requeue() {
+        // budget 1: request 0 decodes its final token on the same tick
+        // request 1's admission evicts it — completing it must also pull
+        // it back out of the FIFO queue, or a finished zombie gets
+        // re-admitted and the run never terminates
+        let c = cfg(2, 1, 4);
+        let reqs = gen_requests(&c, 64);
+        let last = reqs.last().unwrap().arrival;
+        let mut s = Scheduler::new(&c, reqs, &[1]);
+        let SchedStep::Run(b0) = s.step(last) else { panic!() };
+        assert_eq!(b0.prefills, vec![0]);
+        s.requests_mut()[0].generated.push(7);
+        let SchedStep::Run(b1) = s.step(last) else { panic!() };
+        assert_eq!((b1.decodes.as_slice(), b1.evicted.as_slice()), ([0].as_slice(), [0].as_slice()));
+        s.requests_mut()[0].generated.push(7);
+        s.complete(0, last); // finished on its eviction tick
+        let SchedStep::Run(b2) = s.step(last) else { panic!() };
+        assert_eq!(b2.decodes, vec![1]);
+        assert!(b2.prefills.is_empty(), "finished request must not be re-admitted");
+        s.requests_mut()[1].generated.push(7);
+        s.complete(1, last);
+        assert_eq!(s.step(last), SchedStep::Done);
+    }
+
+    #[test]
+    fn idle_reports_the_next_arrival() {
+        let c = cfg(2, 4, 4);
+        let reqs = gen_requests(&c, 64);
+        let (t0, t1) = (reqs[0].arrival, reqs[1].arrival);
+        let mut s = Scheduler::new(&c, reqs, &[1]);
+        match s.step(0.0) {
+            SchedStep::Idle(t) => assert_eq!(t, t0),
+            other => panic!("{other:?}"),
+        }
+        // after request 0 completes, the clock must jump to arrival 1
+        let SchedStep::Run(b) = s.step(t0) else { panic!() };
+        assert_eq!(b.prefills, vec![0]);
+        s.requests_mut()[0].generated.push(1);
+        s.complete(0, t0);
+        match s.step(t0) {
+            SchedStep::Idle(t) => assert_eq!(t, t1),
+            other => panic!("{other:?}"),
+        }
+        let SchedStep::Run(_) = s.step(t1) else { panic!() };
+        s.requests_mut()[1].generated.push(1);
+        s.complete(1, t1);
+        assert_eq!(s.step(t1), SchedStep::Done);
+    }
+}

@@ -1,0 +1,261 @@
+//! The serving engine: real greedy decode on the native kernel, timed
+//! on a virtual clock.
+//!
+//! Tokens are *real*: every tick drives the device's
+//! `decode_prefill`/`decode_step` entry points and picks the greedy
+//! (first-max) token from the returned logits, so the generated text is
+//! exactly what the kernel computes — `tests/decode_parity.rs` pins it
+//! against the training `chunk_logits` path. Time is *simulated*: the
+//! clock advances by the analytic cost model
+//! ([`decode_time`]/[`prefill_time`] on a single-GPU
+//! [`Topology::a100`]), which makes throughput and the TTFT /
+//! inter-token latency percentiles a pure function of the seed — CI can
+//! assert them without owning the hardware. Wall-clock time is reported
+//! informationally only.
+//!
+//! Eviction recovery is replay: prefill the prompt again, then re-step
+//! all but the last generated token (discarding logits). The replay
+//! takes the *same* code path as the original trajectory, so the
+//! restored f64 [`DecodeState`] is bitwise identical — never a lossy
+//! f32 round-trip through the residency cache.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::analytic::{decode_time, prefill_time, ModelShape};
+use crate::cluster::Topology;
+use crate::model::ParamStore;
+use crate::runtime::{load_bundle, DecodeState, Device};
+use crate::util::stats::Summary;
+
+use super::scheduler::{gen_requests, BatchRecord, SchedStep, Scheduler, ServeConfig};
+
+/// Everything a serving run produces: aggregate counters, latency
+/// summaries, and the full per-tick batch trace (the determinism tests
+/// compare traces across same-seed runs with `==`).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// requests that ran to their decode budget
+    pub completed: usize,
+    /// greedy tokens emitted across all requests
+    pub total_tokens: usize,
+    /// virtual-clock end time
+    pub sim_seconds: f64,
+    pub tokens_per_sec: f64,
+    /// time-to-first-token (arrival → first emission), virtual seconds
+    pub ttft: Summary,
+    /// inter-token latency (consecutive emissions per request)
+    pub itl: Summary,
+    pub evictions: u64,
+    /// tokens re-computed by eviction replays (prefill-path tokens)
+    pub replayed_tokens: usize,
+    /// max concurrently resident decode states (≤ budget by invariant)
+    pub peak_resident: usize,
+    pub trace: Vec<BatchRecord>,
+    /// real elapsed time, informational only (not deterministic)
+    pub wall_seconds: f64,
+}
+
+/// Greedy sampling: index of the first maximum (ties break low, so the
+/// choice is independent of iteration quirks).
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Run the continuous-batching simulation to completion.
+pub fn simulate(cfg: &ServeConfig) -> Result<ServeReport> {
+    anyhow::ensure!(cfg.requests > 0, "serve: --requests must be > 0");
+    anyhow::ensure!(
+        cfg.budget_states > 0,
+        "serve: --budget must be >= 1 resident state (0 can never make progress)"
+    );
+    anyhow::ensure!(cfg.max_batch > 0, "serve: --max-batch must be > 0");
+    anyhow::ensure!(cfg.max_new_tokens > 0, "serve: --max-new must be > 0");
+    anyhow::ensure!(
+        cfg.prompt_min > 0 && cfg.prompt_min <= cfg.prompt_max,
+        "serve: need 0 < --prompt-min <= --prompt-max (got {}..{})",
+        cfg.prompt_min,
+        cfg.prompt_max
+    );
+    anyhow::ensure!(cfg.arrival_rate > 0.0, "serve: --rate must be > 0");
+
+    let wall = Instant::now();
+    let bundle = Arc::new(load_bundle(&cfg.config, cfg.chunk)?);
+    let shape = ModelShape {
+        name: "serve",
+        d_model: bundle.config.d_model,
+        n_layers: bundle.config.n_layers,
+        n_heads: bundle.config.n_heads,
+        ffn_dim: bundle.config.ffn_dim,
+        vocab: bundle.config.vocab,
+    };
+    let topo = Topology::a100(1);
+    let vocab = bundle.config.vocab;
+    let state_shape = bundle.kv_state_shape.clone();
+    let params = ParamStore::init(&bundle, cfg.seed);
+    let device = Device::from_arc_with_threads(bundle, &[], cfg.kernel_threads)?;
+    let ptens = params.tensors();
+    let ver = params.version();
+
+    let mut sched = Scheduler::new(cfg, gen_requests(cfg, vocab), &state_shape);
+    let mut states: HashMap<usize, DecodeState> = HashMap::new();
+    let mut now = 0.0_f64;
+    let mut trace = Vec::new();
+    let mut peak_resident = 0usize;
+    let mut replayed_tokens = 0usize;
+
+    loop {
+        match sched.step(now) {
+            SchedStep::Done => break,
+            SchedStep::Idle(t) => now = t.max(now),
+            SchedStep::Run(batch) => {
+                peak_resident = peak_resident.max(sched.cache().resident());
+                let mut cost = 0.0;
+                let mut emitted: Vec<(usize, i32)> = Vec::new();
+
+                // Decode before applying evictions: this tick's victims
+                // were selected *after* the decode set was touched, and
+                // their last token must be produced before the state is
+                // dropped (the replay covers everything up to it).
+                for &rid in &batch.decodes {
+                    let input = *sched.requests()[rid]
+                        .generated
+                        .last()
+                        .expect("a resident sequence has emitted at least one token");
+                    let st = states.get_mut(&rid).expect("resident sequence has a state");
+                    let logits = device.decode_step(ptens, ver, input, st)?;
+                    emitted.push((rid, argmax(logits.data())));
+                }
+                if !batch.decodes.is_empty() {
+                    cost += decode_time(&shape, &topo, batch.decodes.len() as u64);
+                }
+
+                for &rid in &batch.evicted {
+                    states.remove(&rid);
+                }
+
+                for &rid in &batch.prefills {
+                    let r = &sched.requests()[rid];
+                    let prompt = r.prompt.clone();
+                    let gen_len = r.generated.len();
+                    let (mut dec, logits) = device.decode_prefill(ptens, ver, &prompt)?;
+                    let mut prefill_tokens = prompt.len();
+                    if gen_len == 0 {
+                        // first admission: the prefill's logits emit the
+                        // first token (TTFT stops here)
+                        emitted.push((rid, argmax(logits.data())));
+                    } else {
+                        // replay after eviction: re-step all generated
+                        // tokens but the last (which is the next decode
+                        // input), discarding logits — same code path as
+                        // the original trajectory, so bitwise identical
+                        for i in 0..gen_len - 1 {
+                            let t = sched.requests()[rid].generated[i];
+                            device.decode_step(ptens, ver, t, &mut dec)?;
+                        }
+                        prefill_tokens += gen_len - 1;
+                        replayed_tokens += prefill_tokens;
+                    }
+                    cost += prefill_time(&shape, &topo, prefill_tokens as u64);
+                    states.insert(rid, dec);
+                }
+
+                // Advance the clock by the batch cost, then stamp every
+                // token emitted this tick at the new time.
+                now += cost;
+                for (rid, tok) in emitted {
+                    let r = &mut sched.requests_mut()[rid];
+                    r.generated.push(tok);
+                    if r.first_token_at.is_none() {
+                        r.first_token_at = Some(now);
+                    }
+                    r.token_times.push(now);
+                }
+
+                let done: Vec<usize> = batch
+                    .decodes
+                    .iter()
+                    .chain(batch.prefills.iter())
+                    .copied()
+                    .filter(|&rid| {
+                        let r = &sched.requests()[rid];
+                        r.finished_at.is_none() && r.generated.len() >= r.max_new
+                    })
+                    .collect();
+                for rid in done {
+                    sched.complete(rid, now);
+                    states.remove(&rid);
+                }
+                trace.push(batch);
+            }
+        }
+    }
+
+    let reqs = sched.requests();
+    let completed = reqs.iter().filter(|r| r.finished_at.is_some()).count();
+    let total_tokens: usize = reqs.iter().map(|r| r.generated.len()).sum();
+    let ttft: Vec<f64> = reqs
+        .iter()
+        .filter_map(|r| r.first_token_at.map(|t| t - r.arrival))
+        .collect();
+    let mut itl = Vec::new();
+    for r in reqs {
+        for w in r.token_times.windows(2) {
+            itl.push(w[1] - w[0]);
+        }
+    }
+    Ok(ServeReport {
+        completed,
+        total_tokens,
+        sim_seconds: now,
+        tokens_per_sec: total_tokens as f64 / now.max(f64::MIN_POSITIVE),
+        ttft: Summary::of(&ttft),
+        itl: Summary::of(&itl),
+        evictions: sched.cache().evictions(),
+        replayed_tokens,
+        peak_resident,
+        trace,
+        wall_seconds: wall.elapsed().as_secs_f64(),
+    })
+}
+
+/// `BENCH_serve.json` — same hand-rolled style as the other bench
+/// reports (`{:e}` floats so the parser round-trips exactly).
+pub fn render_bench_json(cfg: &ServeConfig, rep: &ServeReport) -> String {
+    let sum = |s: &Summary| {
+        format!(
+            "{{\"n\": {}, \"p50\": {:e}, \"p95\": {:e}, \"p99\": {:e}, \"max\": {:e}}}",
+            s.n, s.p50, s.p95, s.p99, s.max
+        )
+    };
+    let mut out = String::from("{\n");
+    out += "  \"bench\": \"serve\",\n";
+    out += &format!("  \"config\": \"{}\",\n", cfg.config);
+    out += &format!("  \"chunk\": {},\n", cfg.chunk);
+    out += &format!("  \"requests\": {},\n", cfg.requests);
+    out += &format!("  \"max_batch\": {},\n", cfg.max_batch);
+    out += &format!("  \"budget_states\": {},\n", cfg.budget_states);
+    out += &format!("  \"seed\": {},\n", cfg.seed);
+    out += &format!("  \"kernel_threads\": {},\n", cfg.kernel_threads);
+    out += &format!("  \"completed\": {},\n", rep.completed);
+    out += &format!("  \"total_tokens\": {},\n", rep.total_tokens);
+    out += &format!("  \"sim_seconds\": {:e},\n", rep.sim_seconds);
+    out += &format!("  \"throughput_tokens_per_sec\": {:e},\n", rep.tokens_per_sec);
+    out += &format!("  \"evictions\": {},\n", rep.evictions);
+    out += &format!("  \"replayed_tokens\": {},\n", rep.replayed_tokens);
+    out += &format!("  \"peak_resident\": {},\n", rep.peak_resident);
+    out += &format!("  \"ttft\": {},\n", sum(&rep.ttft));
+    out += &format!("  \"itl\": {},\n", sum(&rep.itl));
+    out += &format!("  \"wall_seconds\": {:e}\n", rep.wall_seconds);
+    out += "}\n";
+    out
+}

@@ -15,6 +15,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -34,6 +35,7 @@ impl Summary {
                 min: 0.0,
                 p50: 0.0,
                 p95: 0.0,
+                p99: 0.0,
                 max: 0.0,
             };
         }
@@ -45,16 +47,48 @@ impl Summary {
         } else {
             0.0
         };
-        let q = |p: f64| s[((p * (n - 1) as f64).round() as usize).min(n - 1)];
         Summary {
             n,
             mean,
             std: var.sqrt(),
             min: s[0],
-            p50: q(0.5),
-            p95: q(0.95),
+            p50: percentile_sorted(&s, 0.5),
+            p95: percentile_sorted(&s, 0.95),
+            p99: percentile_sorted(&s, 0.99),
             max: s[n - 1],
         }
+    }
+}
+
+/// Linearly interpolated percentile of an unsorted sample (`p` in
+/// `[0, 1]`): rank `p·(n−1)` between order statistics, the same
+/// convention as numpy's default. Exported so the serve simulator and
+/// the bench harnesses share one quantile definition instead of each
+/// hand-rolling an indexing rule. Empty samples yield 0.0 (matching
+/// [`Summary::of`]); NaNs total-order-sort to the top and poison the
+/// upper percentiles visibly.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] on an already-sorted slice (ascending).
+fn percentile_sorted(s: &[f64], p: f64) -> f64 {
+    let n = s.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = p.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
     }
 }
 
@@ -207,6 +241,36 @@ mod tests {
         let s = Summary::of(&[2.5]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p95, 2.5);
+    }
+
+    #[test]
+    fn percentile_interpolates_at_n1_and_n2() {
+        // n = 1: every percentile is the lone sample — no interpolation
+        // partner exists, and the rank math must not index out of range
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5, "p={p}");
+        }
+        // n = 2: rank p·(n−1) interpolates linearly between the two
+        // order statistics (numpy's default convention)
+        let two = [1.0, 3.0];
+        assert_eq!(percentile(&two, 0.0), 1.0);
+        assert!((percentile(&two, 0.5) - 2.0).abs() < 1e-12);
+        assert!((percentile(&two, 0.95) - 2.9).abs() < 1e-12);
+        assert!((percentile(&two, 0.99) - 2.98).abs() < 1e-12);
+        assert_eq!(percentile(&two, 1.0), 3.0);
+        // unsorted input is sorted internally
+        assert!((percentile(&[3.0, 1.0], 0.5) - 2.0).abs() < 1e-12);
+        // out-of-range p is clamped, empty samples yield 0.0
+        assert_eq!(percentile(&two, 1.5), 3.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn summary_percentiles_use_the_shared_helper() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.p95 - 4.8).abs() < 1e-12, "p95={}", s.p95);
+        assert!((s.p99 - 4.96).abs() < 1e-12, "p99={}", s.p99);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]

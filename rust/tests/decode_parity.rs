@@ -1,0 +1,212 @@
+//! Decode ↔ training parity: the serving engine's greedy decode logits
+//! must be the *same function* as the training `chunk_logits` path.
+//!
+//! The LASP chunking identity says a causal linear-attention forward is
+//! independent of how the sequence is cut into chunks — decode is just
+//! the C=1 extreme. So after a prefill of P tokens and k greedy decode
+//! steps, every logits row the serving path produced must match a
+//! single monolithic `chunk_logits` call (chunk = P + k) teacher-forced
+//! on the same token sequence, to ≤ 1e-6 at the f32 ABI (both sides
+//! compute in f64 and differ only in summation order across chunk
+//! boundaries).
+//!
+//! The grid crosses configs {tiny, tiny_lt} × prefix lengths
+//! {C−1, C, C+1, 2C+3} (straddling the serving bundle's chunk boundary)
+//! × kernel_threads {1, 4}. Threads must not change a single bit — the
+//! engine's matmuls accumulate per output row in a fixed order
+//! regardless of parallel split. Eviction recovery must also be exact:
+//! replaying prefill + decode over the recorded tokens rebuilds a
+//! bitwise-identical f64 `DecodeState`.
+
+use std::sync::Arc;
+
+use lasp::model::ParamStore;
+use lasp::runtime::{load_bundle, DecodeState, NativeDevice};
+use lasp::tensor::{IntTensor, Tensor, Value};
+use lasp::util::rng::Rng;
+
+const TOL: f32 = 1e-6;
+
+/// Decode steps taken after the prefill in every scenario.
+const K: usize = 5;
+
+fn assert_close(ctx: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{ctx}[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+/// Greedy choice, first maximum — mirrors `serve::sim`.
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn prompt_of(vocab: usize, len: usize, salt: u64) -> Vec<i32> {
+    let mut rng = Rng::new(23).fork(salt);
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+/// Prefill + K greedy decode steps on the serving path. Returns the
+/// logits trace (one `(V,)` row per emitted token, K+1 rows), the
+/// emitted tokens, and the final state.
+fn serve_trajectory(
+    dev: &NativeDevice,
+    params: &ParamStore,
+    prompt: &[i32],
+) -> (Vec<Vec<f32>>, Vec<i32>, DecodeState) {
+    let v = params.version();
+    let (mut st, logits) = dev.decode_prefill(params.tensors(), v, prompt).unwrap();
+    let mut trace = vec![logits.data().to_vec()];
+    let mut generated = vec![argmax(logits.data())];
+    for _ in 0..K {
+        let input = *generated.last().unwrap();
+        let l = dev.decode_step(params.tensors(), v, input, &mut st).unwrap();
+        generated.push(argmax(l.data()));
+        trace.push(l.data().to_vec());
+    }
+    (trace, generated, st)
+}
+
+/// Headline pin: serving logits vs a monolithic teacher-forced
+/// `chunk_logits` oracle, across configs × prefixes × thread counts.
+#[test]
+fn decode_matches_monolithic_chunk_logits() {
+    for config in ["tiny", "tiny_lt"] {
+        let c = 8usize; // serving bundle chunk
+        for prefix in [c - 1, c, c + 1, 2 * c + 3] {
+            // --- serving side: prefill (chunked at C=8) + K decode steps
+            let bundle = Arc::new(load_bundle(config, c).unwrap());
+            let vocab = bundle.config.vocab;
+            let prompt = prompt_of(vocab, prefix, prefix as u64);
+            let params = ParamStore::init(&bundle, 0);
+
+            let mut per_thread = Vec::new();
+            for threads in [1usize, 4] {
+                let dev =
+                    NativeDevice::from_arc_with_threads(bundle.clone(), &[], threads)
+                        .unwrap();
+                per_thread.push(serve_trajectory(&dev, &params, &prompt));
+            }
+            let (trace, generated, st) = &per_thread[0];
+            for (t_other, g_other, st_other) in &per_thread[1..] {
+                assert_eq!(
+                    g_other, generated,
+                    "{config}/P={prefix}: greedy tokens depend on kernel_threads"
+                );
+                for (i, (a, b)) in trace.iter().zip(t_other).enumerate() {
+                    assert!(
+                        a == b,
+                        "{config}/P={prefix} step {i}: logits not bitwise across threads"
+                    );
+                }
+                assert_eq!(
+                    st_other, st,
+                    "{config}/P={prefix}: f64 state not bitwise across threads"
+                );
+            }
+            assert_eq!(st.pos(), prefix + K, "state position tracks consumed tokens");
+
+            // --- oracle: ONE chunk covering the whole consumed sequence.
+            // Params are chunk-independent (ParamStore::init forks the
+            // rng per parameter index from specs that depend only on the
+            // config), so seed 0 gives the identical model.
+            let consumed: Vec<i32> = prompt
+                .iter()
+                .chain(&generated[..K])
+                .copied()
+                .collect();
+            let mono_c = consumed.len(); // prefix + K
+            let mono = load_bundle(config, mono_c).unwrap();
+            let dev = NativeDevice::new(&mono, &[]).unwrap();
+            let oracle_params = ParamStore::init(&mono, 0);
+            assert_eq!(
+                oracle_params.tensors()[0].data(),
+                params.tensors()[0].data(),
+                "oracle params must be bitwise identical across chunk lengths"
+            );
+            let rest: Vec<Value> = vec![
+                IntTensor::new(vec![mono_c], consumed.clone()).into(),
+                Tensor::zeros(&mono.kv_state_shape).into(),
+            ];
+            let out = dev
+                .exec_versioned(
+                    "chunk_logits",
+                    oracle_params.tensors(),
+                    oracle_params.version(),
+                    &rest,
+                )
+                .unwrap();
+            let logits = out[0].as_f32();
+            assert_eq!(logits.shape(), &[mono_c, vocab]);
+
+            // serving trace row i is the logits after consuming
+            // prefix + i tokens — oracle row (prefix - 1 + i)
+            for (i, row) in trace.iter().enumerate() {
+                let at = prefix - 1 + i;
+                let want = &logits.data()[at * vocab..(at + 1) * vocab];
+                assert_close(
+                    &format!("{config}/P={prefix} logits row {i} (oracle pos {at})"),
+                    row,
+                    want,
+                    TOL,
+                );
+            }
+        }
+    }
+}
+
+/// Eviction recovery is a bitwise replay: prefill the prompt again and
+/// re-step all recorded tokens but the last — the rebuilt f64 state and
+/// every subsequent logits row must be identical to the uninterrupted
+/// trajectory, on both configs and thread counts.
+#[test]
+fn eviction_replay_restores_bitwise_identical_state() {
+    for config in ["tiny", "tiny_lt"] {
+        for threads in [1usize, 4] {
+            let bundle = Arc::new(load_bundle(config, 8).unwrap());
+            let prompt = prompt_of(bundle.config.vocab, 11, 7);
+            let params = ParamStore::init(&bundle, 0);
+            let v = params.version();
+            let dev =
+                NativeDevice::from_arc_with_threads(bundle.clone(), &[], threads)
+                    .unwrap();
+            let (_, generated, st_orig) = serve_trajectory(&dev, &params, &prompt);
+
+            // replay exactly as serve::sim does after an eviction: the
+            // last generated token is the *next* decode input, so it is
+            // not replayed
+            let (mut st_replay, _) =
+                dev.decode_prefill(params.tensors(), v, &prompt).unwrap();
+            for &t in &generated[..generated.len() - 1] {
+                dev.decode_step(params.tensors(), v, t, &mut st_replay).unwrap();
+            }
+            assert_eq!(
+                st_replay, st_orig,
+                "{config}/threads={threads}: replayed state differs"
+            );
+
+            // both states must continue identically
+            let mut a = st_orig.clone();
+            let next = *generated.last().unwrap();
+            let la = dev.decode_step(params.tensors(), v, next, &mut a).unwrap();
+            let lb = dev
+                .decode_step(params.tensors(), v, next, &mut st_replay)
+                .unwrap();
+            assert!(
+                la.data() == lb.data(),
+                "{config}/threads={threads}: post-replay logits not bitwise"
+            );
+            assert_eq!(a, st_replay);
+        }
+    }
+}

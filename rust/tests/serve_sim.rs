@@ -1,0 +1,140 @@
+//! Serving-simulator invariants: determinism by seed, the memory-budget
+//! bound, the starvation guard, and the BENCH_serve.json schema.
+//!
+//! The simulator's clock is virtual (advanced by the analytic cost
+//! model), so everything here — batch traces, latency percentiles,
+//! throughput — is a pure function of the `ServeConfig`, and the tests
+//! can assert exact equality across runs rather than tolerances.
+
+use lasp::serve::{render_bench_json, simulate, ServeConfig};
+use lasp::util::json::Json;
+
+fn cfg() -> ServeConfig {
+    ServeConfig {
+        config: "tiny".into(),
+        chunk: 8,
+        requests: 10,
+        // mean gap 50µs ≈ one decode tick's overhead: requests pile up
+        // and genuinely contend for the residency budget
+        arrival_rate: 20_000.0,
+        prompt_min: 4,
+        prompt_max: 12,
+        max_new_tokens: 6,
+        max_batch: 4,
+        budget_states: 4,
+        seed: 0,
+        kernel_threads: 1,
+    }
+}
+
+#[test]
+fn same_seed_reproduces_trace_and_latencies_exactly() {
+    let c = cfg();
+    let a = simulate(&c).unwrap();
+    let b = simulate(&c).unwrap();
+    assert_eq!(a.trace, b.trace, "batch trace must be identical by seed");
+    assert_eq!(a.total_tokens, b.total_tokens);
+    assert_eq!(a.sim_seconds, b.sim_seconds);
+    assert_eq!(a.tokens_per_sec, b.tokens_per_sec);
+    for (x, y) in [(&a.ttft, &b.ttft), (&a.itl, &b.itl)] {
+        assert_eq!(x.n, y.n);
+        assert_eq!(x.p50, y.p50);
+        assert_eq!(x.p95, y.p95);
+        assert_eq!(x.p99, y.p99);
+        assert_eq!(x.max, y.max);
+    }
+    // wall-clock is the one field allowed to differ — everything the
+    // bench report keys on is virtual
+
+    let mut c2 = cfg();
+    c2.seed = 1;
+    let d = simulate(&c2).unwrap();
+    assert_ne!(
+        (a.sim_seconds, a.total_tokens),
+        (d.sim_seconds, d.total_tokens),
+        "a different seed must produce a different run"
+    );
+}
+
+#[test]
+fn memory_budget_bounds_residency_and_forces_evictions() {
+    let mut c = cfg();
+    c.budget_states = 2;
+    let r = simulate(&c).unwrap();
+    assert!(
+        r.peak_resident <= 2,
+        "budget 2 violated: peak {} states resident",
+        r.peak_resident
+    );
+    assert!(
+        r.evictions > 0,
+        "10 overlapping requests against budget 2 must evict"
+    );
+    assert!(r.replayed_tokens > 0, "evictions imply replays");
+    // the generous budget run never needed to evict
+    let loose = simulate(&cfg()).unwrap();
+    assert!(loose.peak_resident <= 4);
+    // and eviction churn costs simulated time
+    assert!(r.sim_seconds > loose.sim_seconds);
+}
+
+#[test]
+fn no_request_starves_even_at_budget_one() {
+    for budget in [1usize, 2] {
+        let mut c = cfg();
+        c.budget_states = budget;
+        c.max_batch = 2;
+        let r = simulate(&c).unwrap();
+        assert_eq!(
+            r.completed, c.requests,
+            "budget {budget}: every request must finish"
+        );
+        assert!(r.total_tokens > 0);
+        assert!(
+            r.ttft.n == c.requests,
+            "budget {budget}: every request got a first token"
+        );
+    }
+}
+
+#[test]
+fn bench_json_is_schema_valid() {
+    let c = cfg();
+    let r = simulate(&c).unwrap();
+    let j = Json::parse(&render_bench_json(&c, &r)).unwrap();
+    assert_eq!(j.req("bench").as_str().unwrap(), "serve");
+    for key in [
+        "config",
+        "chunk",
+        "requests",
+        "max_batch",
+        "budget_states",
+        "seed",
+        "kernel_threads",
+        "completed",
+        "total_tokens",
+        "sim_seconds",
+        "throughput_tokens_per_sec",
+        "evictions",
+        "replayed_tokens",
+        "peak_resident",
+        "ttft",
+        "itl",
+        "wall_seconds",
+    ] {
+        assert!(j.get(key).is_some(), "missing key {key}");
+    }
+    assert!(j.req("throughput_tokens_per_sec").as_f64().unwrap() > 0.0);
+    assert_eq!(j.req("completed").as_usize().unwrap(), c.requests);
+    for lat in ["ttft", "itl"] {
+        let s = j.req(lat);
+        let p50 = s.req("p50").as_f64().unwrap();
+        let p95 = s.req("p95").as_f64().unwrap();
+        let p99 = s.req("p99").as_f64().unwrap();
+        let max = s.req("max").as_f64().unwrap();
+        assert!(
+            0.0 < p50 && p50 <= p95 && p95 <= p99 && p99 <= max,
+            "{lat}: percentiles not monotone ({p50}, {p95}, {p99}, {max})"
+        );
+    }
+}
