@@ -67,7 +67,7 @@ fn ring_wallclock(schedule: Schedule, warmup: usize, iters: usize) -> Summary {
                 let mut timer = PhaseTimer::default();
                 let mut samples = Vec::with_capacity(iters);
                 for it in 0..warmup + iters {
-                    comm.barrier();
+                    comm.barrier().unwrap();
                     let t0 = Instant::now();
                     let ctx = RingCtx {
                         dev: &dev,
@@ -84,7 +84,7 @@ fn ring_wallclock(schedule: Schedule, warmup: usize, iters: usize) -> Summary {
                     backward_chunk(&ctx, &tokens, &labels, &cache, 0, None,
                                    loss_scale, &mut timer)
                         .unwrap();
-                    comm.barrier();
+                    comm.barrier().unwrap();
                     if it >= warmup {
                         samples.push(t0.elapsed().as_secs_f64());
                     }
@@ -287,11 +287,11 @@ fn main() {
     let shape = kv.shape().to_vec();
     let h = std::thread::spawn(move || {
         for _ in 0..1000 {
-            c1.recv(0, &shape);
+            c1.recv(0, &shape).unwrap();
         }
     });
     let s = bench(0, 1000, || {
-        c0.send(1, &kv2);
+        c0.send(1, &kv2).unwrap();
     });
     row(&mut tab, &mut json_rows, "ring hop send (KV state)", s);
     h.join().unwrap();
@@ -306,7 +306,7 @@ fn main() {
             std::thread::spawn(move || {
                 let g = comm.world_group();
                 let mut t = Tensor::zeros(&[n]);
-                let s = bench(1, 10, || comm.all_reduce(&g, &mut t));
+                let s = bench(1, 10, || comm.all_reduce(&g, &mut t).unwrap());
                 if comm.rank() == 0 {
                     Some(s)
                 } else {

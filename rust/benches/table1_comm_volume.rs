@@ -17,7 +17,7 @@ fn measured_elements(method: SpMethod, t: usize, c: usize, d: usize, h: usize) -
         .map(|comm| {
             std::thread::spawn(move || {
                 let g = comm.world_group();
-                sp_layer_traffic(&comm, &g, method, c, d, h);
+                sp_layer_traffic(&comm, &g, method, c, d, h).unwrap();
             })
         })
         .collect();

@@ -57,10 +57,10 @@ pub fn ring_attention_layer(
         }
         if m + 1 < t {
             // rotate k/v around the ring: 2 sequence-sized messages/hop
-            comm.send(next, &cur_k);
-            comm.send(next, &cur_v);
-            cur_k = comm.recv(prev, k.shape());
-            cur_v = comm.recv(prev, v.shape());
+            comm.send(next, &cur_k)?;
+            comm.send(next, &cur_v)?;
+            cur_k = comm.recv(prev, k.shape())?;
+            cur_v = comm.recv(prev, v.shape())?;
         }
     }
     let _ = me;

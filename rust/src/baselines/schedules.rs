@@ -7,7 +7,7 @@
 //! produces its "measured" column without running 64 GPUs.
 
 use crate::analytic::SpMethod;
-use crate::comm::{Communicator, Group, OpKind, Payload};
+use crate::comm::{CommError, Communicator, Group, OpKind, Payload};
 use crate::tensor::Tensor;
 
 /// Execute the per-layer communication of `method` over `group`.
@@ -22,7 +22,7 @@ pub fn sp_layer_traffic(
     c: usize,
     d: usize,
     h: usize,
-) {
+) -> Result<(), CommError> {
     let t = group.size();
     let me = group
         .ranks
@@ -37,17 +37,17 @@ pub fn sp_layer_traffic(
             let state = Tensor::zeros(&[d * d / h]);
             // forward hop
             if me + 1 < t {
-                comm.send(next, &state);
+                comm.send(next, &state)?;
             }
             if me > 0 {
-                comm.recv(prev, &[d * d / h]);
+                comm.recv(prev, &[d * d / h])?;
             }
             // backward hop
             if me > 0 {
-                comm.send(prev, &state);
+                comm.send(prev, &state)?;
             }
             if me + 1 < t {
-                comm.recv(next, &[d * d / h]);
+                comm.recv(next, &[d * d / h])?;
             }
         }
         // Ring Attention: rotate K and V chunks T-1 times (fwd), and the
@@ -63,15 +63,15 @@ pub fn sp_layer_traffic(
                         1_000_000 + s as u64,
                         Payload::F32(kv.data().to_vec()),
                         OpKind::P2p,
-                    );
+                    )?;
                     comm.send_tagged(
                         next,
                         2_000_000 + s as u64,
                         Payload::F32(kv.data().to_vec()),
                         OpKind::P2p,
-                    );
-                    comm.recv_tagged(prev, 1_000_000 + s as u64);
-                    comm.recv_tagged(prev, 2_000_000 + s as u64);
+                    )?;
+                    comm.recv_tagged(prev, 1_000_000 + s as u64)?;
+                    comm.recv_tagged(prev, 2_000_000 + s as u64)?;
                 }
             }
         }
@@ -83,7 +83,7 @@ pub fn sp_layer_traffic(
                     let shard_elems = c * d / t;
                     let inputs: Vec<Tensor> =
                         (0..t).map(|_| Tensor::zeros(&[shard_elems])).collect();
-                    comm.all_to_all(group, inputs);
+                    comm.all_to_all(group, inputs)?;
                 }
             }
         }
@@ -94,15 +94,16 @@ pub fn sp_layer_traffic(
             for _ in 0..2 {
                 let local = Tensor::zeros(&[c * d]);
                 for _ in 0..2 {
-                    comm.all_gather(group, &local);
+                    comm.all_gather(group, &local)?;
                 }
                 let full = Tensor::zeros(&[c * d * t]);
                 for _ in 0..2 {
-                    comm.reduce_scatter(group, &full);
+                    comm.reduce_scatter(group, &full)?;
                 }
             }
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -121,7 +122,7 @@ mod tests {
             .map(|comm| {
                 std::thread::spawn(move || {
                     let g = comm.world_group();
-                    sp_layer_traffic(&comm, &g, method, c, d, h);
+                    sp_layer_traffic(&comm, &g, method, c, d, h).unwrap();
                 })
             })
             .collect();

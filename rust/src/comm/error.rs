@@ -1,0 +1,108 @@
+//! Typed communication errors.
+//!
+//! The substrate used to die with a bare `panic!` on a recv timeout, a
+//! barrier timeout, or a payload-kind mismatch — at 128-GPU scale those
+//! are the *routine* failure modes, and a panic with no rank/tag context
+//! is useless for diagnosis. Every blocking primitive now returns
+//! `Result<_, CommError>` instead, and a rank that dies notifies its
+//! peers ([`Communicator::mark_dead`]) so they fail fast with
+//! [`CommError::RankDead`] naming the dead rank rather than burning the
+//! full 600 s deadlock timeout.
+//!
+//! [`Communicator::mark_dead`]: super::Communicator::mark_dead
+
+use std::fmt;
+
+/// Everything that can go wrong on the comm substrate. Implements
+/// `std::error::Error`, so it threads through `anyhow::Result` with `?`
+/// and can be recovered from an error chain via `downcast_ref`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// A blocking receive exhausted its total-elapsed deadline.
+    /// `rank` is the waiting rank, `src`/`tag` identify the exchange.
+    Timeout { rank: usize, src: usize, tag: u64 },
+    /// The named rank declared itself dead (crash, error exit, or an
+    /// injected fault) while we depended on it.
+    RankDead { rank: usize },
+    /// A received payload had the wrong element kind for the exchange.
+    PayloadMismatch {
+        expected: &'static str,
+        got: &'static str,
+        src: usize,
+        tag: u64,
+    },
+    /// The reliable-delivery path gave up: every retransmit attempt of
+    /// a message was dropped by the fault plan.
+    DeliveryFailed { src: usize, dst: usize, tag: u64, attempts: u32 },
+    /// A barrier waiter exhausted its deadline (a rank hung without
+    /// declaring itself dead).
+    BarrierTimeout { rank: usize },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Timeout { rank, src, tag } => write!(
+                f,
+                "comm: rank {rank} recv(src={src}, tag={tag}) timed out — \
+                 ring deadlock?"
+            ),
+            CommError::RankDead { rank } => {
+                write!(f, "comm: rank {rank} is dead")
+            }
+            CommError::PayloadMismatch { expected, got, src, tag } => write!(
+                f,
+                "comm: expected {expected} payload from src {src} \
+                 (tag {tag}), got {got}"
+            ),
+            CommError::DeliveryFailed { src, dst, tag, attempts } => write!(
+                f,
+                "comm: send {src}->{dst} (tag {tag}) dropped on all \
+                 {attempts} retransmit attempts"
+            ),
+            CommError::BarrierTimeout { rank } => write!(
+                f,
+                "comm: rank {rank} barrier timed out — a rank died \
+                 before reaching it?"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_parties() {
+        let e = CommError::Timeout { rank: 2, src: 1, tag: 77 };
+        let s = e.to_string();
+        assert!(s.contains("rank 2") && s.contains("src=1") && s.contains("tag=77"));
+        assert_eq!(
+            CommError::RankDead { rank: 3 }.to_string(),
+            "comm: rank 3 is dead"
+        );
+        let m = CommError::PayloadMismatch {
+            expected: "f32",
+            got: "i32",
+            src: 0,
+            tag: 5,
+        }
+        .to_string();
+        assert!(m.contains("f32") && m.contains("i32") && m.contains("src 0"));
+    }
+
+    #[test]
+    fn threads_through_anyhow_and_downcasts_back() {
+        let e: anyhow::Error = CommError::RankDead { rank: 1 }.into();
+        let e = e.context("worker rank 0 failed");
+        assert!(e
+            .chain()
+            .any(|c| matches!(
+                c.downcast_ref::<CommError>(),
+                Some(CommError::RankDead { rank: 1 })
+            )));
+    }
+}

@@ -1,0 +1,286 @@
+//! Deterministic fault injection for the comm substrate.
+//!
+//! A [`FaultPlan`] is a *pure function* of `(seed, src, dst, op, seq)`:
+//! whether a given logical message is delayed, dropped (and how many
+//! retransmits it takes), or duplicated depends only on those inputs,
+//! never on wall-clock time or thread interleaving. Per-channel message
+//! sequence numbers are themselves deterministic (each `(src, dst)` pair
+//! has its own counter and the sender is a single thread), so the same
+//! plan perturbs the same messages on every run — which is what lets the
+//! chaos tests demand *bitwise* training parity under faults.
+//!
+//! Faults never alter payload bytes or tag-matching order; they only
+//! move delivery in time (delay, retransmit backoff), suppress copies
+//! (drop + retransmit), or add copies (duplicate, deduped by `seq` at
+//! the receiver). Rank crashes are separate: `crash=R@S` tells the
+//! trainer to kill rank `R` at the top of step `S`.
+
+use std::time::Duration;
+
+/// Retransmit budget for the reliable-delivery path. With `drop=p`, a
+/// logical send fails outright with probability `p^MAX_ATTEMPTS`
+/// (`0.5^16 ≈ 1.5e-5`), surfaced as `CommError::DeliveryFailed`.
+pub const MAX_ATTEMPTS: u32 = 16;
+
+/// Base unit of the exponential retransmit backoff.
+const BACKOFF_BASE_US: u64 = 100;
+
+/// Exponent cap so a deep retransmit chain backs off at most ~25 ms.
+const BACKOFF_MAX_EXP: u32 = 8;
+
+/// A seeded, deterministic fault-injection plan for a `CommWorld`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed mixed into every fault decision.
+    pub seed: u64,
+    /// Probability a logical send's transmission attempt is dropped
+    /// (each attempt rolls independently; delivery retries up to
+    /// [`MAX_ATTEMPTS`] with exponential backoff).
+    pub drop_prob: f64,
+    /// Probability a delivered message is duplicated (the receiver
+    /// dedups by sequence number, so this must be invisible).
+    pub dup_prob: f64,
+    /// Probability a delivered message is held for [`delay`](Self::delay)
+    /// extra before the receiver may consume it.
+    pub delay_prob: f64,
+    /// Extra in-flight delay applied when the delay roll fires.
+    pub delay: Duration,
+    /// `(rank, step)` pairs: rank crashes at the top of that step.
+    crashes: Vec<(usize, usize)>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec:
+    ///
+    /// `seed=42,drop=0.2,dup=0.1,delay=0.3:2ms,crash=1@3`
+    ///
+    /// - `seed=<u64>`
+    /// - `drop=<p>` / `dup=<p>` with `p ∈ [0, 1]`
+    /// - `delay=<p>` or `delay=<p>:<dur>` where `<dur>` is `<n>us`,
+    ///   `<n>ms`, or `<n>s` (default 1ms)
+    /// - `crash=<rank>@<step>` (repeatable)
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan { delay: Duration::from_millis(1), ..FaultPlan::default() };
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: `{item}` is not key=value"))?;
+            match key {
+                "seed" => {
+                    plan.seed = val
+                        .parse()
+                        .map_err(|_| format!("fault plan: bad seed `{val}`"))?;
+                }
+                "drop" => plan.drop_prob = parse_prob(key, val)?,
+                "dup" => plan.dup_prob = parse_prob(key, val)?,
+                "delay" => match val.split_once(':') {
+                    Some((p, d)) => {
+                        plan.delay_prob = parse_prob(key, p)?;
+                        plan.delay = parse_duration(d)?;
+                    }
+                    None => plan.delay_prob = parse_prob(key, val)?,
+                },
+                "crash" => {
+                    let (r, s) = val.split_once('@').ok_or_else(|| {
+                        format!("fault plan: crash wants <rank>@<step>, got `{val}`")
+                    })?;
+                    let rank = r
+                        .parse()
+                        .map_err(|_| format!("fault plan: bad crash rank `{r}`"))?;
+                    let step = s
+                        .parse()
+                        .map_err(|_| format!("fault plan: bad crash step `{s}`"))?;
+                    plan.crashes.push((rank, step));
+                }
+                other => return Err(format!("fault plan: unknown key `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Add a crash of `rank` at the top of `step` (builder-style; the
+    /// string form is `crash=R@S`).
+    pub fn with_crash(mut self, rank: usize, step: usize) -> Self {
+        self.crashes.push((rank, step));
+        self
+    }
+
+    /// The step at which `rank` is scheduled to crash, if any (the
+    /// earliest, should the plan list several).
+    pub fn crash_at(&self, rank: usize) -> Option<usize> {
+        self.crashes
+            .iter()
+            .filter(|(r, _)| *r == rank)
+            .map(|(_, s)| *s)
+            .min()
+    }
+
+    /// Number of dropped transmission attempts before message
+    /// `(src, dst, op, seq)` gets through. Returns [`MAX_ATTEMPTS`] if
+    /// every attempt in the budget is dropped (the send must fail).
+    pub fn drops_for(&self, src: usize, dst: usize, op: u8, seq: u64) -> u32 {
+        if self.drop_prob <= 0.0 {
+            return 0;
+        }
+        (0..MAX_ATTEMPTS)
+            .take_while(|a| self.roll(src, dst, op, seq, 0x0D00 + u64::from(*a)) < self.drop_prob)
+            .count() as u32
+    }
+
+    /// Virtual time spent in the retransmit backoff for `drops` dropped
+    /// attempts: `BASE · (2^min(drops, cap) − 1)`.
+    pub fn backoff(drops: u32) -> Duration {
+        let units = (1u64 << drops.min(BACKOFF_MAX_EXP)) - 1;
+        Duration::from_micros(BACKOFF_BASE_US * units)
+    }
+
+    /// Extra in-flight delay for this message (zero or `self.delay`).
+    pub fn extra_delay(&self, src: usize, dst: usize, op: u8, seq: u64) -> Duration {
+        if self.delay_prob > 0.0 && self.roll(src, dst, op, seq, 0xDE1A) < self.delay_prob {
+            self.delay
+        } else {
+            Duration::ZERO
+        }
+    }
+
+    /// Whether the delivered message is accompanied by a duplicate copy.
+    pub fn duplicates(&self, src: usize, dst: usize, op: u8, seq: u64) -> bool {
+        self.dup_prob > 0.0 && self.roll(src, dst, op, seq, 0x0D0B) < self.dup_prob
+    }
+
+    /// Pure hash of `(seed, src, dst, op, seq, salt)` mapped to `[0, 1)`.
+    fn roll(&self, src: usize, dst: usize, op: u8, seq: u64, salt: u64) -> f64 {
+        let mut x = self
+            .seed
+            .wrapping_add((src as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((dst as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(u64::from(op).wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(seq.wrapping_mul(0xD6E8_FEB8_6659_FD93))
+            .wrapping_add(salt.wrapping_mul(0xA076_1D64_78BD_642F));
+        // splitmix64 finalizer
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64, String> {
+    let p: f64 = val
+        .parse()
+        .map_err(|_| format!("fault plan: bad {key} probability `{val}`"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault plan: {key}={p} outside [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_duration(s: &str) -> Result<Duration, String> {
+    let (num, mul_us) = if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000)
+    } else {
+        return Err(format!("fault plan: duration `{s}` needs a us/ms/s suffix"));
+    };
+    let v: u64 = num
+        .parse()
+        .map_err(|_| format!("fault plan: bad duration `{s}`"))?;
+    Ok(Duration::from_micros(v * mul_us))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_roundtrips() {
+        let p = FaultPlan::parse("seed=42, drop=0.2,dup=0.1,delay=0.3:2ms,crash=1@3,crash=0@9")
+            .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.drop_prob, 0.2);
+        assert_eq!(p.dup_prob, 0.1);
+        assert_eq!(p.delay_prob, 0.3);
+        assert_eq!(p.delay, Duration::from_millis(2));
+        assert_eq!(p.crash_at(1), Some(3));
+        assert_eq!(p.crash_at(0), Some(9));
+        assert_eq!(p.crash_at(2), None);
+    }
+
+    #[test]
+    fn parse_defaults_and_empty() {
+        let p = FaultPlan::parse("").unwrap();
+        assert_eq!(p.drop_prob, 0.0);
+        assert_eq!(p.crash_at(0), None);
+        let p = FaultPlan::parse("delay=0.5").unwrap();
+        assert_eq!(p.delay, Duration::from_millis(1), "default delay duration");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("drop=x").is_err());
+        assert!(FaultPlan::parse("warp=0.1").is_err());
+        assert!(FaultPlan::parse("crash=1").is_err());
+        assert!(FaultPlan::parse("delay=0.1:2")
+            .unwrap_err()
+            .contains("suffix"));
+        assert!(FaultPlan::parse("drop").is_err());
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_vary_with_inputs() {
+        let p = FaultPlan { seed: 7, drop_prob: 0.5, ..FaultPlan::default() };
+        let a = p.drops_for(0, 1, 2, 10);
+        assert_eq!(a, p.drops_for(0, 1, 2, 10), "pure function of inputs");
+        // across many messages the drop decisions must not be constant
+        let distinct: std::collections::HashSet<u32> =
+            (0..64).map(|s| p.drops_for(0, 1, 2, s)).collect();
+        assert!(distinct.len() > 1, "drops_for never varies");
+    }
+
+    #[test]
+    fn drop_one_always_exhausts_the_budget() {
+        let p = FaultPlan { seed: 1, drop_prob: 1.0, ..FaultPlan::default() };
+        assert_eq!(p.drops_for(0, 1, 0, 0), MAX_ATTEMPTS);
+        let p = FaultPlan { seed: 1, drop_prob: 0.0, ..FaultPlan::default() };
+        assert_eq!(p.drops_for(0, 1, 0, 0), 0);
+    }
+
+    #[test]
+    fn drop_rate_roughly_matches_probability() {
+        let p = FaultPlan { seed: 3, drop_prob: 0.3, ..FaultPlan::default() };
+        let n = 2000;
+        let dropped_first = (0..n)
+            .filter(|s| p.drops_for(1, 0, 0, *s) > 0)
+            .count() as f64;
+        let rate = dropped_first / n as f64;
+        assert!((rate - 0.3).abs() < 0.05, "first-attempt drop rate {rate}");
+    }
+
+    #[test]
+    fn backoff_grows_then_caps() {
+        assert_eq!(FaultPlan::backoff(0), Duration::ZERO);
+        assert!(FaultPlan::backoff(2) > FaultPlan::backoff(1));
+        assert_eq!(FaultPlan::backoff(20), FaultPlan::backoff(8), "capped");
+        assert!(FaultPlan::backoff(20) < Duration::from_millis(30));
+    }
+
+    #[test]
+    fn delay_and_dup_respect_zero_probability() {
+        let p = FaultPlan::default();
+        assert_eq!(p.extra_delay(0, 1, 0, 5), Duration::ZERO);
+        assert!(!p.duplicates(0, 1, 0, 5));
+        let p = FaultPlan {
+            seed: 9,
+            dup_prob: 1.0,
+            delay_prob: 1.0,
+            delay: Duration::from_micros(250),
+            ..FaultPlan::default()
+        };
+        assert_eq!(p.extra_delay(0, 1, 0, 5), Duration::from_micros(250));
+        assert!(p.duplicates(0, 1, 0, 5));
+    }
+}

@@ -12,18 +12,34 @@
 //! how sequence-parallel groups and data-parallel groups coexist
 //! (Algorithm 1 / Fig. 2's `SP-GROUP`s).
 //!
-//! An optional [`LinkModel`] injects per-message latency + bandwidth
-//! delays so cluster-scale interconnects can be emulated in wall-clock
-//! experiments (used by the Fig. 4 bench to mimic slower links).
+//! Robustness layer (see DESIGN.md §6):
+//! - every blocking primitive returns `Result<_, `[`CommError`]`>`
+//!   instead of panicking — timeouts, payload mismatches and dead peers
+//!   are typed, rank-addressed diagnostics;
+//! - a rank that errors out calls [`Communicator::mark_dead`], which
+//!   wakes every peer blocked on it so they fail fast with
+//!   [`CommError::RankDead`] instead of burning the 600 s trip-wire;
+//! - an optional [`LinkModel`] injects per-message latency + bandwidth
+//!   delay, charged to *delivery* (a `deliver_at` stamp the receiver
+//!   honors), never to the sender's compute thread;
+//! - an optional [`FaultPlan`] deterministically drops (with bounded
+//!   retransmit + exponential backoff), duplicates (receiver dedups by
+//!   message seq) and delays messages — all delivery-time perturbations
+//!   that leave payload bytes and tag-matching order untouched, so
+//!   training under faults stays bitwise identical.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::tensor::Tensor;
 
+pub mod error;
+pub mod fault;
 pub mod stats;
+pub use error::CommError;
+pub use fault::FaultPlan;
 pub use stats::{CommStats, OpKind};
 
 /// Message payload; token scatters are i32, ring/collective tensor data
@@ -46,24 +62,73 @@ impl Payload {
         }
     }
 
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Payload::F32(_) => "f32",
+            Payload::F64(_) => "f64",
+            Payload::I32(_) => "i32",
+        }
+    }
+
+    /// Typed conversion carrying the exchange context: a mismatch names
+    /// the variant received plus the src/tag it arrived on.
+    pub fn expect_f32(self, src: usize, tag: u64) -> Result<Vec<f32>, CommError> {
+        match self {
+            Payload::F32(v) => Ok(v),
+            other => Err(CommError::PayloadMismatch {
+                expected: "f32",
+                got: other.kind_name(),
+                src,
+                tag,
+            }),
+        }
+    }
+
+    pub fn expect_f64(self, src: usize, tag: u64) -> Result<Vec<f64>, CommError> {
+        match self {
+            Payload::F64(v) => Ok(v),
+            other => Err(CommError::PayloadMismatch {
+                expected: "f64",
+                got: other.kind_name(),
+                src,
+                tag,
+            }),
+        }
+    }
+
+    pub fn expect_i32(self, src: usize, tag: u64) -> Result<Vec<i32>, CommError> {
+        match self {
+            Payload::I32(v) => Ok(v),
+            other => Err(CommError::PayloadMismatch {
+                expected: "i32",
+                got: other.kind_name(),
+                src,
+                tag,
+            }),
+        }
+    }
+
+    /// Contextless conversions for callers that already hold a payload
+    /// outside any exchange; prefer [`Payload::expect_f32`] & co on recv
+    /// paths, which name the src/tag of the mismatched exchange.
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             Payload::F32(v) => v,
-            _ => panic!("expected f32 payload"),
+            other => panic!("expected f32 payload, got {}", other.kind_name()),
         }
     }
 
     pub fn into_f64(self) -> Vec<f64> {
         match self {
             Payload::F64(v) => v,
-            _ => panic!("expected f64 payload"),
+            other => panic!("expected f64 payload, got {}", other.kind_name()),
         }
     }
 
     pub fn into_i32(self) -> Vec<i32> {
         match self {
             Payload::I32(v) => v,
-            _ => panic!("expected i32 payload"),
+            other => panic!("expected i32 payload, got {}", other.kind_name()),
         }
     }
 }
@@ -71,14 +136,31 @@ impl Payload {
 #[derive(Debug)]
 struct Msg {
     tag: u64,
+    /// Per-(src,dst)-channel sequence number; receivers dedup duplicate
+    /// deliveries by it. Deterministic: each channel has one sender
+    /// thread, so draw order never depends on cross-thread interleaving.
+    seq: u64,
+    /// Earliest instant `pop` may hand the message out — link delay and
+    /// injected faults are charged here, to delivery, never to the
+    /// sender's compute thread.
+    deliver_at: Instant,
     payload: Payload,
+}
+
+#[derive(Default)]
+struct MailboxInner {
+    q: VecDeque<Msg>,
+    /// Seqs already consumed: a duplicate delivery of any of these is
+    /// dropped on the floor (idempotent receive).
+    seen: HashSet<u64>,
 }
 
 /// One src->dst mailbox: eager (buffered) delivery, blocking receive.
 #[derive(Default)]
 struct Mailbox {
-    q: Mutex<VecDeque<Msg>>,
+    inner: Mutex<MailboxInner>,
     cv: Condvar,
+    next_seq: AtomicU64,
 }
 
 /// Deadlock trip-wire for blocking receives: total time a `recv` may
@@ -89,32 +171,63 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(600);
 
 impl Mailbox {
     fn push(&self, msg: Msg) {
-        self.q.lock().unwrap().push_back(msg);
+        self.inner.lock().unwrap().q.push_back(msg);
         self.cv.notify_all();
     }
 
-    fn pop(&self, tag: u64, timeout: Duration) -> Payload {
+    /// Blocking receive: first matching tag whose `deliver_at` has
+    /// passed. `me` is the waiting rank and `src_dead` its view of the
+    /// sender's liveness — a dead sender fails the wait immediately.
+    fn pop(
+        &self,
+        me: usize,
+        src: usize,
+        tag: u64,
+        timeout: Duration,
+        src_dead: &AtomicBool,
+    ) -> Result<Payload, CommError> {
         let deadline = Instant::now() + timeout;
-        let mut q = self.q.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         loop {
+            let MailboxInner { q, seen } = &mut *inner;
+            // purge duplicate deliveries of already-consumed seqs
+            q.retain(|m| !seen.contains(&m.seq));
             if let Some(idx) = q.iter().position(|m| m.tag == tag) {
-                return q.remove(idx).unwrap().payload;
+                let deliver_at = q[idx].deliver_at;
+                let now = Instant::now();
+                if deliver_at <= now {
+                    let msg = q.remove(idx).unwrap();
+                    seen.insert(msg.seq);
+                    return Ok(msg.payload);
+                }
+                // matched but still in flight: wait for the earlier of
+                // its delivery time and our deadline
+                if now >= deadline {
+                    return Err(CommError::Timeout { rank: me, src, tag });
+                }
+                let wait = deliver_at.min(deadline) - now;
+                let (guard, _) = self.cv.wait_timeout(inner, wait).unwrap();
+                inner = guard;
+                continue;
+            }
+            if src_dead.load(Ordering::SeqCst) {
+                return Err(CommError::RankDead { rank: src });
             }
             let now = Instant::now();
             if now >= deadline {
-                panic!(
-                    "comm: recv(tag={tag}) timed out after {timeout:?} — ring deadlock?"
-                );
+                return Err(CommError::Timeout { rank: me, src, tag });
             }
             // Wait only for the *remaining* budget so the total elapsed
             // time is bounded no matter how often we are woken.
-            let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
-            q = guard;
+            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
         }
     }
 }
 
-/// Bandwidth/latency emulation applied to every P2P message.
+/// Bandwidth/latency emulation applied to every P2P message. The delay
+/// is stamped onto the message's `deliver_at` and enforced by the
+/// receiver — eager sends never block.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkModel {
     /// fixed per-message latency
@@ -143,6 +256,10 @@ struct Shared {
     barrier_cv: Condvar,
     stats: CommStats,
     link: Option<LinkModel>,
+    faults: Option<FaultPlan>,
+    /// dead[r]: rank r declared itself dead (error exit or injected
+    /// crash); peers blocked on it fail fast with `RankDead`.
+    dead: Vec<AtomicBool>,
     seq: AtomicU64,
 }
 
@@ -154,14 +271,28 @@ pub struct CommWorld {
 
 impl CommWorld {
     pub fn new(world: usize) -> CommWorld {
-        Self::build(world, None)
+        Self::build(world, None, None)
     }
 
     pub fn with_link_model(world: usize, link: LinkModel) -> CommWorld {
-        Self::build(world, Some(link))
+        Self::build(world, Some(link), None)
     }
 
-    fn build(world: usize, link: Option<LinkModel>) -> CommWorld {
+    /// A world whose message deliveries are perturbed by a deterministic
+    /// [`FaultPlan`] (drops with retransmit, duplicates, delays).
+    pub fn with_faults(world: usize, plan: FaultPlan) -> CommWorld {
+        Self::build(world, None, Some(plan))
+    }
+
+    pub fn with_options(
+        world: usize,
+        link: Option<LinkModel>,
+        faults: Option<FaultPlan>,
+    ) -> CommWorld {
+        Self::build(world, link, faults)
+    }
+
+    fn build(world: usize, link: Option<LinkModel>, faults: Option<FaultPlan>) -> CommWorld {
         assert!(world > 0);
         let mailboxes = (0..world)
             .map(|_| (0..world).map(|_| Mailbox::default()).collect())
@@ -174,6 +305,8 @@ impl CommWorld {
                 barrier_cv: Condvar::new(),
                 stats: CommStats::new(world),
                 link,
+                faults,
+                dead: (0..world).map(|_| AtomicBool::new(false)).collect(),
                 seq: AtomicU64::new(1),
             }),
         }
@@ -234,51 +367,128 @@ impl Communicator {
         Group::new((0..self.shared.world).collect())
     }
 
+    /// Declare this rank dead and wake every peer blocked on it — their
+    /// pending receives and barrier waits fail with
+    /// [`CommError::RankDead`] naming this rank, instead of burning the
+    /// full 600 s deadlock trip-wire. Called by the trainer on any
+    /// worker error exit and by injected rank crashes.
+    pub fn mark_dead(&self) {
+        self.shared.dead[self.rank].store(true, Ordering::SeqCst);
+        // Acquiring each lock before notifying closes the lost-wakeup
+        // race with a waiter that checked the flag and is about to
+        // sleep on the condvar.
+        for dst in 0..self.shared.world {
+            let mb = &self.shared.mailboxes[dst][self.rank];
+            drop(mb.inner.lock().unwrap());
+            mb.cv.notify_all();
+        }
+        drop(self.shared.barrier_count.lock().unwrap());
+        self.shared.barrier_cv.notify_all();
+    }
+
+    /// First rank flagged dead, if any.
+    fn first_dead(&self) -> Option<usize> {
+        self.shared.dead.iter().position(|d| d.load(Ordering::SeqCst))
+    }
+
     // ---- P2P ------------------------------------------------------------
 
-    /// Eager (buffered) send; never blocks.
-    pub fn send_tagged(&self, dst: usize, tag: u64, payload: Payload, kind: OpKind) {
+    /// Eager (buffered) send; never blocks. Link delay and injected
+    /// faults are stamped onto the message's `deliver_at`; an injected
+    /// drop retransmits (virtually) with exponential backoff until the
+    /// bounded attempt budget is exhausted, at which point the send
+    /// fails with [`CommError::DeliveryFailed`].
+    pub fn send_tagged(
+        &self,
+        dst: usize,
+        tag: u64,
+        payload: Payload,
+        kind: OpKind,
+    ) -> Result<(), CommError> {
         let nbytes = payload.nbytes();
-        self.shared.stats.record(self.rank, kind, nbytes);
-        if let Some(link) = &self.shared.link {
-            std::thread::sleep(link.delay_for(nbytes));
+        let mb = &self.shared.mailboxes[dst][self.rank];
+        let seq = mb.next_seq.fetch_add(1, Ordering::Relaxed);
+        let mut delay = match &self.shared.link {
+            Some(link) => link.delay_for(nbytes),
+            None => Duration::ZERO,
+        };
+        let mut dup = false;
+        if let Some(plan) = &self.shared.faults {
+            let op = kind as u8;
+            let drops = plan.drops_for(self.rank, dst, op, seq);
+            if drops >= fault::MAX_ATTEMPTS {
+                return Err(CommError::DeliveryFailed {
+                    src: self.rank,
+                    dst,
+                    tag,
+                    attempts: drops,
+                });
+            }
+            delay += FaultPlan::backoff(drops) + plan.extra_delay(self.rank, dst, op, seq);
+            dup = plan.duplicates(self.rank, dst, op, seq);
         }
-        self.shared.mailboxes[dst][self.rank].push(Msg { tag, payload });
+        // Stats count logical sends only — retransmits and duplicate
+        // copies are virtual — so byte accounting stays exactly the
+        // Table-1 wire volume regardless of the fault plan.
+        self.shared.stats.record(self.rank, kind, nbytes);
+        let deliver_at = Instant::now() + delay;
+        if dup {
+            // duplicate delivery: same seq, so the receiver dedups it
+            mb.push(Msg { tag, seq, deliver_at, payload: payload.clone() });
+        }
+        mb.push(Msg { tag, seq, deliver_at, payload });
+        Ok(())
     }
 
     /// Blocking receive of the matching tag from `src`.
-    pub fn recv_tagged(&self, src: usize, tag: u64) -> Payload {
-        self.shared.mailboxes[self.rank][src].pop(tag, RECV_TIMEOUT)
+    pub fn recv_tagged(&self, src: usize, tag: u64) -> Result<Payload, CommError> {
+        self.shared.mailboxes[self.rank][src].pop(
+            self.rank,
+            src,
+            tag,
+            RECV_TIMEOUT,
+            &self.shared.dead[src],
+        )
     }
 
     /// Untagged convenience pair (tag 0) for simple P2P exchanges.
-    pub fn send(&self, dst: usize, t: &Tensor) {
-        self.send_tagged(dst, 0, Payload::F32(t.data().to_vec()), OpKind::P2p);
+    pub fn send(&self, dst: usize, t: &Tensor) -> Result<(), CommError> {
+        self.send_tagged(dst, 0, Payload::F32(t.data().to_vec()), OpKind::P2p)
     }
 
-    pub fn recv(&self, src: usize, shape: &[usize]) -> Tensor {
-        Tensor::new(shape.to_vec(), self.recv_tagged(src, 0).into_f32())
+    pub fn recv(&self, src: usize, shape: &[usize]) -> Result<Tensor, CommError> {
+        let v = self.recv_tagged(src, 0)?.expect_f32(src, 0)?;
+        Ok(Tensor::new(shape.to_vec(), v))
     }
 
     /// Tagged tensor P2P used by the LASP ring: the tag encodes
     /// (step, phase) so a replayed forward ring can never cross-talk
     /// with the backward ring (see `coordinator::ring::ring_tag`).
-    pub fn send_tensor(&self, dst: usize, tag: u64, t: &Tensor) {
-        self.send_tagged(dst, tag, Payload::F32(t.data().to_vec()), OpKind::P2p);
+    pub fn send_tensor(&self, dst: usize, tag: u64, t: &Tensor) -> Result<(), CommError> {
+        self.send_tagged(dst, tag, Payload::F32(t.data().to_vec()), OpKind::P2p)
     }
 
-    pub fn recv_tensor(&self, src: usize, tag: u64, shape: &[usize]) -> Tensor {
-        Tensor::new(shape.to_vec(), self.recv_tagged(src, tag).into_f32())
+    pub fn recv_tensor(
+        &self,
+        src: usize,
+        tag: u64,
+        shape: &[usize],
+    ) -> Result<Tensor, CommError> {
+        let v = self.recv_tagged(src, tag)?.expect_f32(src, tag)?;
+        Ok(Tensor::new(shape.to_vec(), v))
     }
 
     // ---- barrier ---------------------------------------------------------
 
     /// Sense-reversing barrier with the same total-elapsed deadlock
-    /// trip-wire as the blocking recv: a rank that dies before reaching
-    /// the barrier must turn into a bounded panic on the waiters, not an
-    /// unbounded hang (the trainer joins workers before reading results,
-    /// so a silent hang here would never surface the real error).
-    pub fn barrier(&self) {
+    /// trip-wire as the blocking recv. A rank that dies before reaching
+    /// the barrier turns into a fast [`CommError::RankDead`] on the
+    /// waiters (via [`Communicator::mark_dead`]) or a bounded
+    /// [`CommError::BarrierTimeout`] if it hung without declaring
+    /// itself — never an unbounded hang (the trainer joins workers
+    /// before reading results, so a silent hang here would never
+    /// surface the real error).
+    pub fn barrier(&self) -> Result<(), CommError> {
         let shared = &self.shared;
         let deadline = Instant::now() + RECV_TIMEOUT;
         let mut g = shared.barrier_count.lock().unwrap();
@@ -288,22 +498,27 @@ impl Communicator {
             g.0 = 0;
             g.1 = g.1.wrapping_add(1);
             shared.barrier_cv.notify_all();
-        } else {
-            while g.1 == gen {
-                let now = Instant::now();
-                if now >= deadline {
-                    panic!(
-                        "comm: barrier timed out after {RECV_TIMEOUT:?} — \
-                         a rank died before reaching it?"
-                    );
-                }
-                let (guard, _) = shared
-                    .barrier_cv
-                    .wait_timeout(g, deadline - now)
-                    .unwrap();
-                g = guard;
-            }
+            return Ok(());
         }
+        while g.1 == gen {
+            if let Some(dead) = self.first_dead() {
+                // withdraw our arrival so a later barrier generation is
+                // not corrupted by this aborted one
+                g.0 -= 1;
+                return Err(CommError::RankDead { rank: dead });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                g.0 -= 1;
+                return Err(CommError::BarrierTimeout { rank: self.rank });
+            }
+            let (guard, _) = shared
+                .barrier_cv
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = guard;
+        }
+        Ok(())
     }
 
     fn fresh_tag(&self) -> u64 {
@@ -318,23 +533,32 @@ impl Communicator {
 
     /// Leader draws a fresh tag block and distributes it to the group on
     /// the control plane (tag u64::MAX; zero-cost, not counted as data).
-    fn group_tag(&self, group: &Group, _kind: OpKind) -> u64 {
+    /// Control-plane pushes are fault-exempt — a "dropped" handshake
+    /// would stall the collective itself rather than exercise the data
+    /// path — but still seq-stamped so receiver dedup stays consistent.
+    fn group_tag(&self, group: &Group, _kind: OpKind) -> Result<u64, CommError> {
         let leader = group.ranks[0];
         if self.rank == leader {
             let tag = self.fresh_tag() << 16;
             for &r in &group.ranks[1..] {
-                self.shared.mailboxes[r][leader].push(Msg {
+                let mb = &self.shared.mailboxes[r][leader];
+                let seq = mb.next_seq.fetch_add(1, Ordering::Relaxed);
+                mb.push(Msg {
                     tag: u64::MAX,
+                    seq,
+                    deliver_at: Instant::now(),
                     payload: Payload::I32(vec![
                         (tag >> 32) as i32,
                         (tag & 0xFFFF_FFFF) as i32,
                     ]),
                 });
             }
-            tag
+            Ok(tag)
         } else {
-            let v = self.recv_tagged(leader, u64::MAX).into_i32();
-            (((v[0] as u32) as u64) << 32) | ((v[1] as u32) as u64)
+            let v = self
+                .recv_tagged(leader, u64::MAX)?
+                .expect_i32(leader, u64::MAX)?;
+            Ok((((v[0] as u32) as u64) << 32) | ((v[1] as u32) as u64))
         }
     }
 
@@ -342,12 +566,12 @@ impl Communicator {
 
     /// Ring all-reduce (sum): reduce-scatter phase + all-gather phase.
     /// Wire traffic per rank: `2 * (n-1)/n * |t|` — the NCCL ring volume.
-    pub fn all_reduce(&self, group: &Group, t: &mut Tensor) {
+    pub fn all_reduce(&self, group: &Group, t: &mut Tensor) -> Result<(), CommError> {
         let n = group.size();
         if n == 1 {
-            return;
+            return Ok(());
         }
-        let tag = self.group_tag(group, OpKind::AllReduce);
+        let tag = self.group_tag(group, OpKind::AllReduce)?;
         let me = group.index_of(self.rank);
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
@@ -367,8 +591,10 @@ impl Communicator {
                 tag + s as u64,
                 Payload::F32(send_slice),
                 OpKind::AllReduce,
-            );
-            let recv = self.recv_tagged(prev, tag + s as u64).into_f32();
+            )?;
+            let recv = self
+                .recv_tagged(prev, tag + s as u64)?
+                .expect_f32(prev, tag + s as u64)?;
             for (a, b) in data[off(rc)..off(rc + 1)].iter_mut().zip(recv) {
                 *a += b;
             }
@@ -383,20 +609,23 @@ impl Communicator {
                 tag + (n + s) as u64,
                 Payload::F32(send_slice),
                 OpKind::AllReduce,
-            );
-            let recv = self.recv_tagged(prev, tag + (n + s) as u64).into_f32();
+            )?;
+            let recv = self
+                .recv_tagged(prev, tag + (n + s) as u64)?
+                .expect_f32(prev, tag + (n + s) as u64)?;
             data[off(rc)..off(rc + 1)].copy_from_slice(&recv);
         }
+        Ok(())
     }
 
     /// Ring all-gather: returns the concatenation of every rank's tensor
     /// in group order. Wire traffic per rank: `(n-1) * |t|`.
-    pub fn all_gather(&self, group: &Group, t: &Tensor) -> Vec<Tensor> {
+    pub fn all_gather(&self, group: &Group, t: &Tensor) -> Result<Vec<Tensor>, CommError> {
         let n = group.size();
         if n == 1 {
-            return vec![t.clone()];
+            return Ok(vec![t.clone()]);
         }
-        let tag = self.group_tag(group, OpKind::AllGather);
+        let tag = self.group_tag(group, OpKind::AllGather)?;
         let me = group.index_of(self.rank);
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
@@ -409,13 +638,15 @@ impl Communicator {
                 tag + s as u64,
                 Payload::F32(cur.data().to_vec()),
                 OpKind::AllGather,
-            );
-            let recv = self.recv_tagged(prev, tag + s as u64).into_f32();
+            )?;
+            let recv = self
+                .recv_tagged(prev, tag + s as u64)?
+                .expect_f32(prev, tag + s as u64)?;
             let src = (me + n - 1 - s) % n;
             cur = Tensor::new(t.shape().to_vec(), recv);
             slots[src] = Some(cur.clone());
         }
-        slots.into_iter().map(Option::unwrap).collect()
+        Ok(slots.into_iter().map(Option::unwrap).collect())
     }
 
     /// Ring all-gather of raw f64 buffers, in group order. Same ring
@@ -424,12 +655,16 @@ impl Communicator {
     /// schedule exchanges KV increments at full accumulator precision so
     /// its local prefix combine reproduces the sequential ring bitwise.
     /// Wire traffic per rank: `(n-1) * 8 * len` bytes.
-    pub fn all_gather_f64(&self, group: &Group, data: &[f64]) -> Vec<Vec<f64>> {
+    pub fn all_gather_f64(
+        &self,
+        group: &Group,
+        data: &[f64],
+    ) -> Result<Vec<Vec<f64>>, CommError> {
         let n = group.size();
         if n == 1 {
-            return vec![data.to_vec()];
+            return Ok(vec![data.to_vec()]);
         }
-        let tag = self.group_tag(group, OpKind::AllGather);
+        let tag = self.group_tag(group, OpKind::AllGather)?;
         let me = group.index_of(self.rank);
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
@@ -442,24 +677,26 @@ impl Communicator {
                 tag + s as u64,
                 Payload::F64(cur.clone()),
                 OpKind::AllGather,
-            );
-            cur = self.recv_tagged(prev, tag + s as u64).into_f64();
+            )?;
+            cur = self
+                .recv_tagged(prev, tag + s as u64)?
+                .expect_f64(prev, tag + s as u64)?;
             let src = (me + n - 1 - s) % n;
             slots[src] = Some(cur.clone());
         }
-        slots.into_iter().map(Option::unwrap).collect()
+        Ok(slots.into_iter().map(Option::unwrap).collect())
     }
 
     /// Ring reduce-scatter (sum): every rank contributes `t` (same shape);
     /// rank `i` in the group receives the reduced `i`-th of `n` shards.
     /// Wire traffic per rank: `(n-1)/n * |t|`.
-    pub fn reduce_scatter(&self, group: &Group, t: &Tensor) -> Tensor {
+    pub fn reduce_scatter(&self, group: &Group, t: &Tensor) -> Result<Tensor, CommError> {
         let n = group.size();
         if n == 1 {
-            return t.clone();
+            return Ok(t.clone());
         }
         assert_eq!(t.len() % n, 0, "reduce_scatter needs len divisible by group");
-        let tag = self.group_tag(group, OpKind::ReduceScatter);
+        let tag = self.group_tag(group, OpKind::ReduceScatter)?;
         let me = group.index_of(self.rank);
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
@@ -476,22 +713,28 @@ impl Communicator {
                 tag + s as u64,
                 Payload::F32(send_slice),
                 OpKind::ReduceScatter,
-            );
-            let recv = self.recv_tagged(prev, tag + s as u64).into_f32();
+            )?;
+            let recv = self
+                .recv_tagged(prev, tag + s as u64)?
+                .expect_f32(prev, tag + s as u64)?;
             for (a, b) in data[rc * c..(rc + 1) * c].iter_mut().zip(recv) {
                 *a += b;
             }
         }
-        Tensor::new(vec![c], data[me * c..(me + 1) * c].to_vec())
+        Ok(Tensor::new(vec![c], data[me * c..(me + 1) * c].to_vec()))
     }
 
     /// Pairwise all-to-all: `inputs[j]` goes to the group's `j`-th rank;
     /// returns what every rank sent to me. Wire traffic per rank:
     /// `(n-1)/n * Σ|inputs|` (the self-chunk never hits the wire).
-    pub fn all_to_all(&self, group: &Group, inputs: Vec<Tensor>) -> Vec<Tensor> {
+    pub fn all_to_all(
+        &self,
+        group: &Group,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>, CommError> {
         let n = group.size();
         assert_eq!(inputs.len(), n);
-        let tag = self.group_tag(group, OpKind::AllToAll);
+        let tag = self.group_tag(group, OpKind::AllToAll)?;
         let me = group.index_of(self.rank);
         let mut out: Vec<Option<Tensor>> = vec![None; n];
         for (j, inp) in inputs.iter().enumerate() {
@@ -503,25 +746,32 @@ impl Communicator {
                     tag + me as u64,
                     Payload::F32(inp.data().to_vec()),
                     OpKind::AllToAll,
-                );
+                )?;
             }
         }
         for j in 0..n {
             if j != me {
-                let recv = self.recv_tagged(group.ranks[j], tag + j as u64).into_f32();
+                let recv = self
+                    .recv_tagged(group.ranks[j], tag + j as u64)?
+                    .expect_f32(group.ranks[j], tag + j as u64)?;
                 out[j] = Some(Tensor::new(inputs[j].shape().to_vec(), recv));
             }
         }
-        out.into_iter().map(Option::unwrap).collect()
+        Ok(out.into_iter().map(Option::unwrap).collect())
     }
 
     /// Broadcast from the group-relative `root` index.
-    pub fn broadcast(&self, group: &Group, root: usize, t: &mut Tensor) {
+    pub fn broadcast(
+        &self,
+        group: &Group,
+        root: usize,
+        t: &mut Tensor,
+    ) -> Result<(), CommError> {
         let n = group.size();
         if n == 1 {
-            return;
+            return Ok(());
         }
-        let tag = self.group_tag(group, OpKind::Broadcast);
+        let tag = self.group_tag(group, OpKind::Broadcast)?;
         let me = group.index_of(self.rank);
         if me == root {
             for (j, &r) in group.ranks.iter().enumerate() {
@@ -531,20 +781,28 @@ impl Communicator {
                         tag,
                         Payload::F32(t.data().to_vec()),
                         OpKind::Broadcast,
-                    );
+                    )?;
                 }
             }
         } else {
-            let recv = self.recv_tagged(group.ranks[root], tag).into_f32();
+            let recv = self
+                .recv_tagged(group.ranks[root], tag)?
+                .expect_f32(group.ranks[root], tag)?;
             t.data_mut().copy_from_slice(&recv);
         }
+        Ok(())
     }
 
     /// Scatter i32 payloads (Algorithm 1's token distribution) from the
     /// group-relative `root`.
-    pub fn scatter_i32(&self, group: &Group, root: usize, chunks: Option<Vec<Vec<i32>>>) -> Vec<i32> {
+    pub fn scatter_i32(
+        &self,
+        group: &Group,
+        root: usize,
+        chunks: Option<Vec<Vec<i32>>>,
+    ) -> Result<Vec<i32>, CommError> {
         let n = group.size();
-        let tag = self.group_tag(group, OpKind::Scatter);
+        let tag = self.group_tag(group, OpKind::Scatter)?;
         let me = group.index_of(self.rank);
         if me == root {
             let chunks = chunks.expect("root must supply scatter chunks");
@@ -559,12 +817,13 @@ impl Communicator {
                         tag,
                         Payload::I32(c),
                         OpKind::Scatter,
-                    );
+                    )?;
                 }
             }
-            mine
+            Ok(mine)
         } else {
-            self.recv_tagged(group.ranks[root], tag).into_i32()
+            self.recv_tagged(group.ranks[root], tag)?
+                .expect_i32(group.ranks[root], tag)
         }
     }
 
@@ -578,11 +837,10 @@ mod tests {
     use super::*;
     use std::thread;
 
-    fn run_world<F>(w: usize, f: F)
+    fn run_comms<F>(world: &CommWorld, f: F)
     where
         F: Fn(Communicator) + Send + Sync + Clone + 'static,
     {
-        let world = CommWorld::new(w);
         let comms = world.communicators();
         let handles: Vec<_> = comms
             .into_iter()
@@ -596,14 +854,21 @@ mod tests {
         }
     }
 
+    fn run_world<F>(w: usize, f: F)
+    where
+        F: Fn(Communicator) + Send + Sync + Clone + 'static,
+    {
+        run_comms(&CommWorld::new(w), f);
+    }
+
     #[test]
     fn p2p_ring_roundtrip() {
         run_world(4, |c| {
             let w = c.world_size();
             let t = Tensor::new(vec![2], vec![c.rank() as f32, 1.0]);
-            c.send((c.rank() + 1) % w, &t);
+            c.send((c.rank() + 1) % w, &t).unwrap();
             let prev = (c.rank() + w - 1) % w;
-            let r = c.recv(prev, &[2]);
+            let r = c.recv(prev, &[2]).unwrap();
             assert_eq!(r.data()[0], prev as f32);
         });
     }
@@ -614,7 +879,7 @@ mod tests {
             run_world(w, move |c| {
                 let g = c.world_group();
                 let mut t = Tensor::new(vec![10], vec![(c.rank() + 1) as f32; 10]);
-                c.all_reduce(&g, &mut t);
+                c.all_reduce(&g, &mut t).unwrap();
                 let expect = (w * (w + 1) / 2) as f32;
                 assert!(t.data().iter().all(|&x| x == expect), "{:?}", t.data());
             });
@@ -626,7 +891,7 @@ mod tests {
         run_world(3, |c| {
             let g = c.world_group();
             let t = Tensor::new(vec![2], vec![c.rank() as f32; 2]);
-            let all = c.all_gather(&g, &t);
+            let all = c.all_gather(&g, &t).unwrap();
             for (i, a) in all.iter().enumerate() {
                 assert_eq!(a.data(), &[i as f32; 2]);
             }
@@ -638,7 +903,7 @@ mod tests {
         run_world(4, |c| {
             let g = c.world_group();
             let t = Tensor::new(vec![8], (0..8).map(|i| i as f32).collect());
-            let shard = c.reduce_scatter(&g, &t);
+            let shard = c.reduce_scatter(&g, &t).unwrap();
             let me = c.rank();
             // every rank contributed the same tensor: shard = 4 * slice
             assert_eq!(shard.data(), &[4.0 * (2 * me) as f32, 4.0 * (2 * me + 1) as f32]);
@@ -652,7 +917,7 @@ mod tests {
             let me = c.rank() as f32;
             let inputs: Vec<Tensor> =
                 (0..3).map(|j| Tensor::new(vec![1], vec![me * 10.0 + j as f32])).collect();
-            let out = c.all_to_all(&g, inputs);
+            let out = c.all_to_all(&g, inputs).unwrap();
             for (j, o) in out.iter().enumerate() {
                 assert_eq!(o.data()[0], j as f32 * 10.0 + me);
             }
@@ -668,7 +933,7 @@ mod tests {
             } else {
                 Tensor::zeros(&[3])
             };
-            c.broadcast(&g, 2, &mut t);
+            c.broadcast(&g, 2, &mut t).unwrap();
             assert_eq!(t.data(), &[7.0, 8.0, 9.0]);
         });
     }
@@ -682,7 +947,7 @@ mod tests {
                 Group::new(vec![2, 3])
             };
             let mut t = Tensor::new(vec![4], vec![c.rank() as f32; 4]);
-            c.all_reduce(&g, &mut t);
+            c.all_reduce(&g, &mut t).unwrap();
             let expect = if c.rank() < 2 { 1.0 } else { 5.0 };
             assert!(t.data().iter().all(|&x| x == expect));
         });
@@ -697,19 +962,19 @@ mod tests {
             } else {
                 None
             };
-            let mine = c.scatter_i32(&g, 0, chunks);
+            let mine = c.scatter_i32(&g, 0, chunks).unwrap();
             assert_eq!(mine, vec![c.rank() as i32; 2]);
         });
     }
 
     #[test]
     fn barrier_synchronizes() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::atomic::AtomicUsize;
         static COUNT: AtomicUsize = AtomicUsize::new(0);
         COUNT.store(0, Ordering::SeqCst);
         run_world(4, |c| {
             COUNT.fetch_add(1, Ordering::SeqCst);
-            c.barrier();
+            c.barrier().unwrap();
             assert_eq!(COUNT.load(Ordering::SeqCst), 4);
         });
     }
@@ -717,20 +982,11 @@ mod tests {
     #[test]
     fn byte_accounting_matches_ring_formula() {
         let world = CommWorld::new(4);
-        let comms = world.communicators();
-        let handles: Vec<_> = comms
-            .into_iter()
-            .map(|c| {
-                thread::spawn(move || {
-                    let g = c.world_group();
-                    let mut t = Tensor::zeros(&[16]);
-                    c.all_reduce(&g, &mut t);
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
+        run_comms(&world, |c| {
+            let g = c.world_group();
+            let mut t = Tensor::zeros(&[16]);
+            c.all_reduce(&g, &mut t).unwrap();
+        });
         // ring all-reduce wire bytes per rank: 2*(n-1)/n*len*4 = 2*3/4*64
         let per_rank = world.stats().bytes(OpKind::AllReduce) / 4;
         assert_eq!(per_rank, 2 * 3 * 16 / 4 * 4);
@@ -740,12 +996,12 @@ mod tests {
     fn tagged_tensor_roundtrip() {
         run_world(2, |c| {
             if c.rank() == 0 {
-                c.send_tensor(1, 77, &Tensor::new(vec![2], vec![1.0, 2.0]));
-                c.send_tensor(1, 78, &Tensor::new(vec![2], vec![3.0, 4.0]));
+                c.send_tensor(1, 77, &Tensor::new(vec![2], vec![1.0, 2.0])).unwrap();
+                c.send_tensor(1, 78, &Tensor::new(vec![2], vec![3.0, 4.0])).unwrap();
             } else {
                 // tags match out of arrival order
-                let b = c.recv_tensor(0, 78, &[2]);
-                let a = c.recv_tensor(0, 77, &[2]);
+                let b = c.recv_tensor(0, 78, &[2]).unwrap();
+                let a = c.recv_tensor(0, 77, &[2]).unwrap();
                 assert_eq!(a.data(), &[1.0, 2.0]);
                 assert_eq!(b.data(), &[3.0, 4.0]);
             }
@@ -757,31 +1013,35 @@ mod tests {
     /// restart its timer on every wakeup and never trip.
     #[test]
     fn recv_timeout_survives_chatty_neighbors() {
-        use std::sync::Arc;
         let mb = Arc::new(Mailbox::default());
         let chatty = {
             let mb = Arc::clone(&mb);
             thread::spawn(move || {
                 // unrelated tags arriving faster than the timeout window
-                for _ in 0..30 {
-                    std::thread::sleep(Duration::from_millis(20));
-                    mb.push(Msg { tag: 1, payload: Payload::F32(vec![0.0]) });
+                for i in 0..30u64 {
+                    thread::sleep(Duration::from_millis(20));
+                    mb.push(Msg {
+                        tag: 1,
+                        seq: i,
+                        deliver_at: Instant::now(),
+                        payload: Payload::F32(vec![0.0]),
+                    });
                 }
             })
         };
-        let t0 = std::time::Instant::now();
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            mb.pop(42, Duration::from_millis(150));
-        }));
-        assert!(r.is_err(), "deadlocked recv must panic");
+        let t0 = Instant::now();
+        let dead = AtomicBool::new(false);
+        let r = mb.pop(0, 1, 42, Duration::from_millis(150), &dead);
+        assert!(
+            matches!(r, Err(CommError::Timeout { rank: 0, src: 1, tag: 42 })),
+            "deadlocked recv must report a typed timeout: {r:?}"
+        );
         let waited = t0.elapsed();
         assert!(
             waited < Duration::from_millis(600),
             "timeout restarted on wakeups: waited {waited:?}"
         );
-        // the pop panic poisons the mailbox mutex; the chatty thread may
-        // observe that and panic too — only completion matters here
-        let _ = chatty.join();
+        chatty.join().unwrap();
     }
 
     #[test]
@@ -791,7 +1051,7 @@ mod tests {
             // values chosen to be unrepresentable in f32: bit-exactness
             // across the wire is the whole point of the f64 payload
             let mine = vec![c.rank() as f64 + 1e-12, -(c.rank() as f64) - 0.1];
-            let all = c.all_gather_f64(&g, &mine);
+            let all = c.all_gather_f64(&g, &mine).unwrap();
             assert_eq!(all.len(), 3);
             for (i, v) in all.iter().enumerate() {
                 assert_eq!(v[0].to_bits(), (i as f64 + 1e-12).to_bits());
@@ -806,30 +1066,21 @@ mod tests {
     #[test]
     fn single_rank_group_collectives_are_local_noops() {
         let world = CommWorld::new(2);
-        let comms = world.communicators();
-        let handles: Vec<_> = comms
-            .into_iter()
-            .map(|c| {
-                thread::spawn(move || {
-                    let g = Group::new(vec![c.rank()]);
-                    let mut t = Tensor::new(vec![3], vec![c.rank() as f32; 3]);
-                    c.all_reduce(&g, &mut t);
-                    assert_eq!(t.data(), &[c.rank() as f32; 3]);
-                    let all = c.all_gather(&g, &t);
-                    assert_eq!(all.len(), 1);
-                    assert_eq!(all[0].data(), t.data());
-                    let all64 = c.all_gather_f64(&g, &[1.5, 2.5]);
-                    assert_eq!(all64, vec![vec![1.5, 2.5]]);
-                    let shard = c.reduce_scatter(&g, &t);
-                    assert_eq!(shard.data(), t.data());
-                    c.broadcast(&g, 0, &mut t);
-                    assert_eq!(t.data(), &[c.rank() as f32; 3]);
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
+        run_comms(&world, |c| {
+            let g = Group::new(vec![c.rank()]);
+            let mut t = Tensor::new(vec![3], vec![c.rank() as f32; 3]);
+            c.all_reduce(&g, &mut t).unwrap();
+            assert_eq!(t.data(), &[c.rank() as f32; 3]);
+            let all = c.all_gather(&g, &t).unwrap();
+            assert_eq!(all.len(), 1);
+            assert_eq!(all[0].data(), t.data());
+            let all64 = c.all_gather_f64(&g, &[1.5, 2.5]).unwrap();
+            assert_eq!(all64, vec![vec![1.5, 2.5]]);
+            let shard = c.reduce_scatter(&g, &t).unwrap();
+            assert_eq!(shard.data(), t.data());
+            c.broadcast(&g, 0, &mut t).unwrap();
+            assert_eq!(t.data(), &[c.rank() as f32; 3]);
+        });
         assert_eq!(world.stats().total_bytes(), 0);
     }
 
@@ -844,12 +1095,12 @@ mod tests {
             let g = Group::new(vec![2, 3]);
             let me = g.index_of(c.rank());
             let t = Tensor::new(vec![2], vec![c.rank() as f32; 2]);
-            let all = c.all_gather(&g, &t);
+            let all = c.all_gather(&g, &t).unwrap();
             assert_eq!(all[0].data(), &[2.0; 2]);
             assert_eq!(all[1].data(), &[3.0; 2]);
-            let all64 = c.all_gather_f64(&g, &[c.rank() as f64]);
+            let all64 = c.all_gather_f64(&g, &[c.rank() as f64]).unwrap();
             assert_eq!(all64, vec![vec![2.0], vec![3.0]]);
-            let shard = c.reduce_scatter(&g, &t);
+            let shard = c.reduce_scatter(&g, &t).unwrap();
             // both ranks contributed [r, r]; shard `me` is the reduced slice
             assert_eq!(shard.data(), &[5.0]);
             let mut b = if me == 1 {
@@ -857,7 +1108,7 @@ mod tests {
             } else {
                 Tensor::zeros(&[2])
             };
-            c.broadcast(&g, 1, &mut b);
+            c.broadcast(&g, 1, &mut b).unwrap();
             assert_eq!(b.data(), &[7.0, 8.0]);
         });
     }
@@ -871,25 +1122,16 @@ mod tests {
         let n = 4u64;
         let len = 16u64;
         let world = CommWorld::new(n as usize);
-        let handles: Vec<_> = world
-            .communicators()
-            .into_iter()
-            .map(|c| {
-                thread::spawn(move || {
-                    let g = c.world_group();
-                    let t = Tensor::zeros(&[len as usize]);
-                    c.all_gather(&g, &t);
-                    c.reduce_scatter(&g, &t);
-                    let mut b = Tensor::zeros(&[len as usize]);
-                    c.broadcast(&g, 0, &mut b);
-                    let buf = vec![0.0f64; len as usize];
-                    c.all_gather_f64(&g, &buf);
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
+        run_comms(&world, move |c| {
+            let g = c.world_group();
+            let t = Tensor::zeros(&[len as usize]);
+            c.all_gather(&g, &t).unwrap();
+            c.reduce_scatter(&g, &t).unwrap();
+            let mut b = Tensor::zeros(&[len as usize]);
+            c.broadcast(&g, 0, &mut b).unwrap();
+            let buf = vec![0.0f64; len as usize];
+            c.all_gather_f64(&g, &buf).unwrap();
+        });
         let s = world.stats();
         assert_eq!(s.bytes(OpKind::AllGather), n * (n - 1) * len * 4 + n * (n - 1) * len * 8);
         assert_eq!(s.msgs(OpKind::AllGather), 2 * n * (n - 1));
@@ -908,11 +1150,171 @@ mod tests {
         let c1 = comms[1].clone();
         let h = thread::spawn(move || {
             let t = Tensor::zeros(&[64, 64]);
-            c0.send(1, &t);
+            c0.send(1, &t).unwrap();
         });
-        let r = c1.recv(0, &[64, 64]);
+        let r = c1.recv(0, &[64, 64]).unwrap();
         h.join().unwrap();
         assert_eq!(r.len(), 4096);
         assert_eq!(world.stats().bytes(OpKind::P2p), 4096 * 4);
+    }
+
+    /// Satellite pin: link delay is charged to *delivery*, not to the
+    /// sender's compute thread. The send must return near-instantly; the
+    /// receiver must not see the message before the link latency.
+    #[test]
+    fn link_delay_is_charged_to_delivery_not_the_sender() {
+        let world = CommWorld::with_link_model(
+            2,
+            LinkModel { latency: Duration::from_millis(60), bytes_per_sec: 0.0 },
+        );
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        let t0 = Instant::now();
+        c0.send(1, &Tensor::zeros(&[4])).unwrap();
+        let send_elapsed = t0.elapsed();
+        assert!(
+            send_elapsed < Duration::from_millis(40),
+            "eager send blocked on the link model: {send_elapsed:?}"
+        );
+        let r = c1.recv(0, &[4]).unwrap();
+        let total = t0.elapsed();
+        assert!(
+            total >= Duration::from_millis(60),
+            "delivered before the link delay elapsed: {total:?}"
+        );
+        assert_eq!(r.len(), 4);
+    }
+
+    #[test]
+    fn dead_rank_fails_pending_recv_fast_and_names_it() {
+        let world = CommWorld::new(2);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        let killer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(50));
+            c1.mark_dead();
+        });
+        let t0 = Instant::now();
+        let r = c0.recv_tagged(1, 9);
+        killer.join().unwrap();
+        assert!(
+            matches!(r, Err(CommError::RankDead { rank: 1 })),
+            "expected RankDead naming rank 1: {r:?}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "dead-rank notification did not short-circuit the timeout"
+        );
+    }
+
+    #[test]
+    fn dead_rank_fails_barrier_fast() {
+        let world = CommWorld::new(2);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        c1.mark_dead();
+        let t0 = Instant::now();
+        let r = c0.barrier();
+        assert!(
+            matches!(r, Err(CommError::RankDead { rank: 1 })),
+            "expected RankDead naming rank 1: {r:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(30));
+    }
+
+    #[test]
+    fn payload_mismatch_names_variant_and_exchange() {
+        let world = CommWorld::new(2);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        c0.send_tagged(1, 5, Payload::I32(vec![1, 2]), OpKind::P2p).unwrap();
+        let err = c1.recv_tensor(0, 5, &[2]).unwrap_err();
+        assert_eq!(
+            err,
+            CommError::PayloadMismatch { expected: "f32", got: "i32", src: 0, tag: 5 }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("i32") && msg.contains("src 0") && msg.contains("tag 5"), "{msg}");
+    }
+
+    #[test]
+    fn injected_duplicates_are_deduped_by_seq() {
+        let plan = FaultPlan { seed: 5, dup_prob: 1.0, ..FaultPlan::default() };
+        let world = CommWorld::with_faults(2, plan);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        for i in 0..4u64 {
+            c0.send_tagged(1, i, Payload::F32(vec![i as f32]), OpKind::P2p).unwrap();
+        }
+        for i in 0..4u64 {
+            let v = c1.recv_tagged(0, i).unwrap().expect_f32(0, i).unwrap();
+            assert_eq!(v, vec![i as f32], "duplicate copy leaked through");
+        }
+        // every message carried a duplicate; after each seq is consumed
+        // once, any copies still queued must be invisible (seen seqs)
+        let inner = world.shared.mailboxes[1][0].inner.lock().unwrap();
+        assert!(inner.q.iter().all(|m| inner.seen.contains(&m.seq)));
+    }
+
+    #[test]
+    fn drops_retransmit_transparently() {
+        let plan = FaultPlan { seed: 11, drop_prob: 0.4, ..FaultPlan::default() };
+        let world = CommWorld::with_faults(2, plan);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        let n = 50u64;
+        let sender = thread::spawn(move || {
+            for i in 0..n {
+                c0.send_tagged(1, i, Payload::F32(vec![i as f32]), OpKind::P2p).unwrap();
+            }
+        });
+        for i in 0..n {
+            let v = c1.recv_tagged(0, i).unwrap().expect_f32(0, i).unwrap();
+            assert_eq!(v, vec![i as f32]);
+        }
+        sender.join().unwrap();
+        // retransmits are virtual: stats still count each logical send once
+        assert_eq!(world.stats().msgs(OpKind::P2p), n);
+        assert_eq!(world.stats().bytes(OpKind::P2p), n * 4);
+    }
+
+    #[test]
+    fn certain_drop_exhausts_retransmit_budget() {
+        let plan = FaultPlan { seed: 1, drop_prob: 1.0, ..FaultPlan::default() };
+        let world = CommWorld::with_faults(2, plan);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let err = c0
+            .send_tagged(1, 3, Payload::F32(vec![0.0]), OpKind::P2p)
+            .unwrap_err();
+        assert_eq!(
+            err,
+            CommError::DeliveryFailed { src: 0, dst: 1, tag: 3, attempts: fault::MAX_ATTEMPTS }
+        );
+        // a failed send is not a logical delivery: no bytes counted
+        assert_eq!(world.stats().bytes(OpKind::P2p), 0);
+    }
+
+    /// Faults perturb delivery *time* only: under combined drop + dup +
+    /// delay, a collective still produces exactly the fault-free result
+    /// and exactly the fault-free byte accounting.
+    #[test]
+    fn faulty_collectives_stay_bitwise_correct() {
+        let plan = FaultPlan::parse("seed=3,drop=0.4,dup=0.5,delay=0.5:200us").unwrap();
+        let world = CommWorld::with_faults(4, plan);
+        run_comms(&world, |c| {
+            let g = c.world_group();
+            let mut t = Tensor::new(vec![8], vec![(c.rank() + 1) as f32; 8]);
+            c.all_reduce(&g, &mut t).unwrap();
+            assert!(t.data().iter().all(|&x| x == 10.0), "{:?}", t.data());
+        });
+        // logical wire volume: 4 ranks * 2*(n-1)/n*len*4 bytes
+        assert_eq!(world.stats().bytes(OpKind::AllReduce), 4 * 2 * 3 * 8 / 4 * 4);
     }
 }

@@ -1,0 +1,429 @@
+//! Bitwise checkpoint/resume for the distributed trainer.
+//!
+//! A checkpoint captures everything the step loop consumes that is not a
+//! pure function of the config: parameter f32 bits, per-rank Adam moments
+//! (the ZeRO backend shards them), the step index, and the loss history.
+//! The data stream needs no cursor — [`DataGen`](crate::train::data::DataGen)
+//! is a pure function of `(seed, step, group)` — so restoring `(params,
+//! optimizer, step)` restores the entire trajectory bit for bit.
+//!
+//! Durability protocol (all-or-nothing at directory granularity):
+//!
+//! 1. rank 0 creates `<dir>/step_<N>.part` (clearing any stale one),
+//! 2. every rank writes its files into it via temp-file + rename, each
+//!    framed with a magic, version, length, and FNV-1a checksum,
+//! 3. rank 0 renames `.part` → `step_<N>`.
+//!
+//! Barriers separate the three stages, so a crash at any point leaves
+//! either no `step_<N>` directory or a complete, checksummed one;
+//! [`latest_step`] never picks up a `.part` in progress.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::trainer::TrainConfig;
+use crate::comm::Communicator;
+use crate::model::ParamStore;
+use crate::optim::{DistOptimizer, OptimState};
+
+const MAGIC: &[u8; 8] = b"LASPCKPT";
+const VERSION: u32 = 1;
+
+/// Everything a checkpoint must match to be resumable: a config that
+/// differs in any of these fields would not reproduce the trajectory.
+fn fingerprint(cfg: &TrainConfig) -> String {
+    format!(
+        "{} c{} T{} G{} {} sched={:?} fused={} kv={} seed={} lr={:08x} warmup={} bucket={:?}",
+        cfg.config,
+        cfg.chunk,
+        cfg.sp_size,
+        cfg.data_groups,
+        cfg.backend.name(),
+        cfg.schedule,
+        cfg.fused,
+        cfg.kv_cache,
+        cfg.seed,
+        cfg.lr.to_bits(),
+        cfg.warmup,
+        cfg.bucket_elems,
+    )
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- framing: magic + version + len + payload + checksum ----------------
+
+/// Atomically write `payload` under the checkpoint frame: the bytes land
+/// in `<path>.tmp` first and only an intact file is renamed into place.
+fn write_frame(path: &Path, payload: &[u8]) -> Result<()> {
+    let mut buf = Vec::with_capacity(payload.len() + 28);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, &buf)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
+fn read_frame(path: &Path) -> Result<Vec<u8>> {
+    let buf =
+        fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    if buf.len() < 28 || &buf[..8] != MAGIC {
+        bail!("{}: not a LASP checkpoint file", path.display());
+    }
+    let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    if version != VERSION {
+        bail!("{}: checkpoint version {version}, expected {VERSION}", path.display());
+    }
+    let len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+    if buf.len() != 28 + len {
+        bail!(
+            "{}: truncated checkpoint ({} bytes, framed length {})",
+            path.display(),
+            buf.len(),
+            28 + len
+        );
+    }
+    let payload = &buf[20..20 + len];
+    let stored = u64::from_le_bytes(buf[20 + len..].try_into().unwrap());
+    let actual = fnv1a(payload);
+    if stored != actual {
+        bail!(
+            "{}: checksum mismatch (stored {stored:016x}, computed {actual:016x}) — corrupt checkpoint",
+            path.display()
+        );
+    }
+    Ok(payload.to_vec())
+}
+
+// ---- payload encoding (little-endian, f32 as raw bits) ------------------
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(buf, xs.len() as u64);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("checkpoint payload underrun at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "checkpoint payload has {} trailing bytes",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+fn encode_meta(fp: &str, step: usize, losses: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, fp.len() as u64);
+    buf.extend_from_slice(fp.as_bytes());
+    put_u64(&mut buf, step as u64);
+    put_f32s(&mut buf, losses);
+    buf
+}
+
+fn decode_meta(payload: &[u8]) -> Result<(String, usize, Vec<f32>)> {
+    let mut r = Reader::new(payload);
+    let fp = String::from_utf8(r.bytes()?).context("fingerprint not UTF-8")?;
+    let step = r.u64()? as usize;
+    let losses = r.f32s()?;
+    r.finish()?;
+    Ok((fp, step, losses))
+}
+
+fn encode_params(params: &ParamStore) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, params.tensors().len() as u64);
+    for t in params.tensors() {
+        put_f32s(&mut buf, t.data());
+    }
+    buf
+}
+
+fn decode_params_into(payload: &[u8], params: &mut ParamStore) -> Result<()> {
+    let mut r = Reader::new(payload);
+    let n = r.u64()? as usize;
+    if n != params.tensors().len() {
+        bail!(
+            "checkpoint holds {n} parameter tensors, model has {}",
+            params.tensors().len()
+        );
+    }
+    for i in 0..n {
+        let data = r.f32s()?;
+        let t = &mut params.tensors_mut()[i];
+        if data.len() != t.len() {
+            bail!(
+                "parameter {i}: checkpoint has {} elements, model expects {}",
+                data.len(),
+                t.len()
+            );
+        }
+        t.data_mut().copy_from_slice(&data);
+    }
+    r.finish()
+}
+
+fn encode_optim(st: &OptimState) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, st.step as u64);
+    put_u64(&mut buf, st.m.len() as u64);
+    for (m, v) in st.m.iter().zip(&st.v) {
+        put_f32s(&mut buf, m);
+        put_f32s(&mut buf, v);
+    }
+    buf
+}
+
+fn decode_optim(payload: &[u8]) -> Result<OptimState> {
+    let mut r = Reader::new(payload);
+    let step = r.u64()? as usize;
+    let n = r.u64()? as usize;
+    let mut m = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        m.push(r.f32s()?);
+        v.push(r.f32s()?);
+    }
+    r.finish()?;
+    Ok(OptimState { step, m, v })
+}
+
+// ---- the collective save / load protocol --------------------------------
+
+fn step_dir(dir: &str, step: usize) -> PathBuf {
+    Path::new(dir).join(format!("step_{step}"))
+}
+
+/// Write checkpoint `step_<step>` under `dir`. Collective: every rank of
+/// `comm`'s world must call this with the same `step`; each rank persists
+/// its own optimizer shard, rank 0 additionally persists params + meta
+/// and performs the commit rename.
+pub fn save(
+    dir: &str,
+    cfg: &TrainConfig,
+    comm: &Communicator,
+    step: usize,
+    losses: &[f32],
+    params: &ParamStore,
+    optim: &DistOptimizer,
+) -> Result<()> {
+    let rank = comm.rank();
+    let part = Path::new(dir).join(format!("step_{step}.part"));
+    if rank == 0 {
+        if part.exists() {
+            fs::remove_dir_all(&part)
+                .with_context(|| format!("clear stale {}", part.display()))?;
+        }
+        fs::create_dir_all(&part)
+            .with_context(|| format!("create {}", part.display()))?;
+    }
+    comm.barrier()?; // stage 1 → 2: the .part directory exists
+
+    write_frame(
+        &part.join(format!("optim_rank{rank}.bin")),
+        &encode_optim(&optim.export_state()),
+    )?;
+    if rank == 0 {
+        write_frame(&part.join("params.bin"), &encode_params(params))?;
+        write_frame(
+            &part.join("meta.bin"),
+            &encode_meta(&fingerprint(cfg), step, losses),
+        )?;
+    }
+    comm.barrier()?; // stage 2 → 3: every rank's files are in place
+
+    if rank == 0 {
+        let done = step_dir(dir, step);
+        if done.exists() {
+            fs::remove_dir_all(&done)
+                .with_context(|| format!("clear stale {}", done.display()))?;
+        }
+        fs::rename(&part, &done)
+            .with_context(|| format!("commit {}", done.display()))?;
+    }
+    comm.barrier()?; // commit visible before anyone proceeds
+    Ok(())
+}
+
+/// Newest committed checkpoint step under `dir`, ignoring in-progress
+/// `.part` directories. `None` when the directory holds no checkpoint.
+pub fn latest_step(dir: &str) -> Option<usize> {
+    let entries = fs::read_dir(dir).ok()?;
+    entries
+        .filter_map(|e| {
+            let name = e.ok()?.file_name().into_string().ok()?;
+            name.strip_prefix("step_")?.parse::<usize>().ok()
+        })
+        .max()
+}
+
+/// Restore `params` and `optim` from `<dir>/step_<step>` and return the
+/// loss history recorded up to that step. Verifies every file's checksum
+/// and that the checkpoint's config fingerprint matches `cfg`.
+pub fn load_into(
+    dir: &str,
+    step: usize,
+    cfg: &TrainConfig,
+    rank: usize,
+    params: &mut ParamStore,
+    optim: &mut DistOptimizer,
+) -> Result<Vec<f32>> {
+    let d = step_dir(dir, step);
+    let (fp, meta_step, losses) = decode_meta(&read_frame(&d.join("meta.bin"))?)?;
+    let want = fingerprint(cfg);
+    if fp != want {
+        bail!(
+            "checkpoint {} was written by a different run\n  checkpoint: {fp}\n  this run:   {want}",
+            d.display()
+        );
+    }
+    if meta_step != step {
+        bail!(
+            "checkpoint {} records step {meta_step}, directory names step {step}",
+            d.display()
+        );
+    }
+    decode_params_into(&read_frame(&d.join("params.bin"))?, params)?;
+    let st = decode_optim(&read_frame(&d.join(format!("optim_rank{rank}.bin")))?)?;
+    optim
+        .load_state(st)
+        .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+    fn scratch_dir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "lasp_ckpt_test_{}_{}",
+            std::process::id(),
+            DIR_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn frame_roundtrips_bitwise() {
+        let dir = scratch_dir();
+        let path = dir.join("x.bin");
+        let payload: Vec<u8> = (0..=255).collect();
+        write_frame(&path, &payload).unwrap();
+        assert_eq!(read_frame(&path).unwrap(), payload);
+        // the temp file must not linger after the rename
+        assert!(!path.with_extension("tmp").exists());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = scratch_dir();
+        let path = dir.join("x.bin");
+        write_frame(&path, b"all your state are belong to us").unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[24] ^= 0x40; // flip one payload bit
+        fs::write(&path, &bytes).unwrap();
+        let err = read_frame(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        // truncation is also caught
+        fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = read_frame(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "got: {err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn latest_step_ignores_in_progress_parts() {
+        let dir = scratch_dir();
+        let dir_s = dir.to_str().unwrap();
+        assert_eq!(latest_step(dir_s), None);
+        fs::create_dir(dir.join("step_3")).unwrap();
+        fs::create_dir(dir.join("step_12")).unwrap();
+        fs::create_dir(dir.join("step_20.part")).unwrap();
+        fs::create_dir(dir.join("not_a_step")).unwrap();
+        assert_eq!(latest_step(dir_s), Some(12));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn optim_state_roundtrips_bitwise() {
+        let st = OptimState {
+            step: 7,
+            m: vec![vec![1.0e-30, -2.5], vec![f32::MIN_POSITIVE]],
+            v: vec![vec![0.125, 3.0], vec![1.0]],
+        };
+        let back = decode_optim(&encode_optim(&st)).unwrap();
+        assert_eq!(back.step, st.step);
+        let bits = |vs: &[Vec<f32>]| {
+            vs.iter()
+                .map(|v| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&back.m), bits(&st.m));
+        assert_eq!(bits(&back.v), bits(&st.v));
+    }
+}

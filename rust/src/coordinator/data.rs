@@ -6,7 +6,7 @@
 //! `T` chunks of `C = N/T` tokens, scattered from the group's source rank
 //! (the first rank of the group) so every rank retains exactly one chunk.
 
-use crate::comm::{Communicator, Group};
+use crate::comm::{CommError, Communicator, Group};
 
 /// Static placement derived from (world, sp_size) — Algorithm 1 lines 2–5.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -77,7 +77,7 @@ pub fn distribute(
     comm: &Communicator,
     placement: &Placement,
     seq: Option<&[i32]>,
-) -> (Vec<i32>, Vec<i32>) {
+) -> Result<(Vec<i32>, Vec<i32>), CommError> {
     let rank = comm.rank();
     let group = placement.sp_group(placement.group_of(rank));
     let is_src = rank == placement.source_rank(rank);
@@ -96,9 +96,9 @@ pub fn distribute(
     } else {
         None
     };
-    let mine = comm.scatter_i32(&group, 0, chunks);
+    let mine = comm.scatter_i32(&group, 0, chunks)?;
     let c = mine.len() / 2;
-    (mine[..c].to_vec(), mine[c..].to_vec())
+    Ok((mine[..c].to_vec(), mine[c..].to_vec()))
 }
 
 #[cfg(test)]
@@ -199,7 +199,8 @@ mod tests {
                     let seq: Vec<i32> = (0..9).map(|x| x + 100 * g).collect();
                     let is_src = c.rank() == p.source_rank(c.rank());
                     let (tok, lab) =
-                        distribute(&c, &p, if is_src { Some(&seq) } else { None });
+                        distribute(&c, &p, if is_src { Some(&seq) } else { None })
+                            .unwrap();
                     let t = p.chunk_index(c.rank()) as i32;
                     assert_eq!(tok[0], 100 * g + 4 * t);
                     assert_eq!(lab[0], tok[0] + 1);

@@ -5,7 +5,9 @@
 //!  * [`kv_cache`] — the HBM KV-state cache (§2.4)
 //!  * [`trainer`]  — worker threads, hybrid data-sequence parallelism,
 //!                   gradient sync across DDP/ZeRO backends
+//!  * [`checkpoint`] — bitwise checkpoint/resume of a training run
 
+pub mod checkpoint;
 pub mod data;
 pub mod kv_cache;
 pub mod ring;

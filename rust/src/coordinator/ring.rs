@@ -190,7 +190,7 @@ pub fn forward_chunk(
     let kv_in = if t_idx > 0 {
         timer.time("comm_wait", || {
             ctx.comm.recv_tensor(group.ranks[t_idx - 1], tag, kv_shape)
-        })
+        })?
     } else {
         Tensor::zeros(kv_shape)
     };
@@ -219,7 +219,7 @@ pub fn forward_chunk(
     if t_idx < t_max {
         timer.time("comm_send", || {
             ctx.comm.send_tensor(group.ranks[t_idx + 1], tag, &kv_out)
-        });
+        })?;
     }
     Ok(ForwardOut { loss_sum, kv_in, kv_out })
 }
@@ -283,7 +283,7 @@ pub fn backward_chunk(
     let dkv_out = if t_idx < t_max {
         timer.time("comm_wait", || {
             ctx.comm.recv_tensor(group.ranks[t_idx + 1], tag, kv_shape)
-        })
+        })?
     } else {
         Tensor::zeros(kv_shape)
     };
@@ -315,7 +315,7 @@ pub fn backward_chunk(
     if t_idx > 0 {
         timer.time("comm_send", || {
             ctx.comm.send_tensor(group.ranks[t_idx - 1], tag, &dkv_in)
-        });
+        })?;
     }
     Ok(BackwardOut { grads, loss_sum })
 }
@@ -349,7 +349,7 @@ fn forward_chunk_allgather(
         Vec::with_capacity(kv_shape.iter().product());
     loop {
         let all = timer
-            .time("comm_wait", || ctx.comm.all_gather_f64(&group, &delta));
+            .time("comm_wait", || ctx.comm.all_gather_f64(&group, &delta))?;
         let kv_l = prefix_combine(&all, t_idx, &lam_c, head_elems);
         kv_in_stack.extend(kv_l.iter().map(|&x| x as f32));
         match timer.time("compute", || ctx.dev.ag_fwd_step(&kv_l))? {
@@ -408,7 +408,7 @@ fn backward_chunk_allgather(
     })?;
     loop {
         let all = timer
-            .time("comm_wait", || ctx.comm.all_gather_f64(&group, &delta));
+            .time("comm_wait", || ctx.comm.all_gather_f64(&group, &delta))?;
         let dkv_l = suffix_combine(&all, t_idx, &lam_c, head_elems);
         match timer.time("compute", || ctx.dev.ag_bwd_step(&dkv_l))? {
             Some(d) => delta = d,

@@ -13,11 +13,12 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::checkpoint;
 use super::data::{distribute, Placement};
 use super::kv_cache::KvCache;
 use super::ring::{backward_chunk, forward_chunk, RingCtx, RingPhase};
 use crate::analytic::DdpBackend;
-use crate::comm::{CommWorld, Communicator, OpKind};
+use crate::comm::{fault::FaultPlan, CommError, CommWorld, Communicator, OpKind};
 use crate::model::ParamStore;
 use crate::optim::DistOptimizer;
 use crate::runtime::{load_bundle, Bundle, Device};
@@ -62,6 +63,18 @@ pub struct TrainConfig {
     pub kernel_threads: Option<usize>,
     /// log every k steps (0 = silent)
     pub log_every: usize,
+    /// deterministic fault injection on the comm substrate (`None` =
+    /// faults off — the zero-overhead fast path)
+    pub fault_plan: Option<FaultPlan>,
+    /// write a checkpoint every k steps (0 = never); requires
+    /// [`checkpoint_dir`](TrainConfig::checkpoint_dir)
+    pub checkpoint_every: usize,
+    /// directory receiving `step_<N>/` checkpoints
+    pub checkpoint_dir: Option<String>,
+    /// resume from the newest checkpoint under this directory before
+    /// training; the run then finishes bitwise equal to an uninterrupted
+    /// one
+    pub resume: Option<String>,
 }
 
 impl TrainConfig {
@@ -82,6 +95,10 @@ impl TrainConfig {
             bucket_elems: None,
             kernel_threads: None,
             log_every: 0,
+            fault_plan: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: None,
         }
     }
 
@@ -138,6 +155,9 @@ pub struct TrainResult {
 
 /// Run a training job; blocks until all workers finish.
 pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
+    if cfg.checkpoint_every > 0 && cfg.checkpoint_dir.is_none() {
+        anyhow::bail!("checkpoint_every > 0 requires a checkpoint_dir");
+    }
     // one shared bundle: workers (and their devices) take Arc clones
     // instead of copying the whole parameter/artifact table per rank
     let bundle = Arc::new(
@@ -146,7 +166,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     );
     let world = cfg.world();
     let placement = Placement::new(world, cfg.sp_size);
-    let comm_world = CommWorld::new(world);
+    let comm_world = match &cfg.fault_plan {
+        Some(plan) => CommWorld::with_faults(world, plan.clone()),
+        None => CommWorld::new(world),
+    };
     let comms = comm_world.communicators();
     let (tx, rx) = mpsc::channel::<WorkerResult>();
 
@@ -157,31 +180,43 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         let placement = placement.clone();
         let tx = tx.clone();
         handles.push(std::thread::spawn(move || -> Result<()> {
-            worker(&cfg, bundle, &placement, comm, tx)
+            let r = worker(&cfg, bundle, &placement, &comm, tx);
+            if r.is_err() {
+                // Death notification: peers blocked on this rank fail
+                // fast with `CommError::RankDead` instead of burning the
+                // full recv timeout.
+                comm.mark_dead();
+            }
+            r
         }));
     }
     drop(tx);
 
     // Join every worker *before* touching the result channel: a failing
     // worker must surface its own error, not the generic "no result from
-    // rank 0" the channel would report. The first real error (lowest
-    // rank) wins.
+    // rank 0" the channel would report. Among the failures, the first
+    // *root cause* wins: a rank that died on its own error beats the
+    // cascade of peers that merely observed its death (`RankDead`).
     let mut first_err: Option<anyhow::Error> = None;
+    let mut first_is_cascade = false;
     for (rank, h) in handles.into_iter().enumerate() {
-        match h.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                if first_err.is_none() {
-                    first_err =
-                        Some(e.context(format!("worker rank {rank} failed")));
-                }
-            }
+        let err = match h.join() {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(e.context(format!("worker rank {rank} failed"))),
             Err(p) => {
-                if first_err.is_none() {
-                    first_err = Some(anyhow::anyhow!(
-                        "worker rank {rank} panicked: {p:?}"
-                    ));
-                }
+                Some(anyhow::anyhow!("worker rank {rank} panicked: {p:?}"))
+            }
+        };
+        if let Some(e) = err {
+            let is_cascade = e.chain().any(|c| {
+                matches!(
+                    c.downcast_ref::<CommError>(),
+                    Some(CommError::RankDead { .. })
+                )
+            });
+            if first_err.is_none() || (first_is_cascade && !is_cascade) {
+                first_err = Some(e);
+                first_is_cascade = is_cascade;
             }
         }
     }
@@ -218,7 +253,7 @@ fn worker(
     cfg: &TrainConfig,
     bundle: Arc<Bundle>,
     placement: &Placement,
-    comm: Communicator,
+    comm: &Communicator,
     tx: mpsc::Sender<WorkerResult>,
 ) -> Result<()> {
     let rank = comm.rank();
@@ -268,13 +303,33 @@ fn worker(
     // of the global batch.
     let loss_scale = 1.0 / (n * g) as f32;
 
+    // ---- resume: restore (params, optimizer, step, losses) bit-for-bit ----
+    // DataGen is a pure function of (seed, step, group), so no data
+    // cursor needs restoring — the loop below just starts at start_step.
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut start_step = 0;
+    if let Some(dir) = &cfg.resume {
+        let step0 = checkpoint::latest_step(dir)
+            .with_context(|| format!("resume: no checkpoint under {dir}"))?;
+        losses = phases.time("checkpoint", || {
+            checkpoint::load_into(dir, step0, cfg, rank, &mut params, &mut optim)
+        })?;
+        start_step = step0;
+    }
+
     // Throughput covers the training steps only: every worker finishes
     // compile + parameter/optimizer construction before the clock starts.
-    comm.barrier();
+    comm.barrier()?;
     let t_steps = Instant::now();
 
-    let mut losses = Vec::with_capacity(cfg.steps);
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
+        // ---- deterministic rank-crash injection ----------------------------
+        if let Some(plan) = &cfg.fault_plan {
+            if plan.crash_at(rank) == Some(step) {
+                anyhow::bail!("fault plan: rank {rank} crashed at step {step}");
+            }
+        }
+
         // ---- Algorithm 1: data distribution --------------------------------
         let seq = if rank == placement.source_rank(rank) {
             Some(datagen.sequence(step, group_id, n + 1))
@@ -282,13 +337,13 @@ fn worker(
             None
         };
         let (tokens, labels) = phases.time("data", || {
-            distribute(&comm, placement, seq.as_deref())
-        });
+            distribute(comm, placement, seq.as_deref())
+        })?;
 
         let (fwd, bwd) = {
             let ctx = RingCtx {
                 dev: &dev,
-                comm: &comm,
+                comm,
                 placement,
                 params: &params,
                 step,
@@ -344,15 +399,23 @@ fn worker(
         // ---- gradient sync + optimizer (hybrid: sum over chunks ∧ groups) ---
         let mut grads = bwd.grads;
         phases.time("optimizer", || {
-            optim.step(&comm, &world_group, &mut params, &mut grads, 1.0)
-        });
+            optim.step(comm, &world_group, &mut params, &mut grads, 1.0)
+        })?;
 
         // ---- loss reduction --------------------------------------------------
         let mut loss_t = Tensor::scalar(fwd.loss_sum);
-        comm.all_reduce(&world_group, &mut loss_t);
+        comm.all_reduce(&world_group, &mut loss_t)?;
         let mean_loss = loss_t.item() / (n * g) as f32;
         losses.push(mean_loss);
         cache.clear();
+
+        // ---- checkpoint (collective; `step_<N>` = state entering step N) -----
+        if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+            let dir = cfg.checkpoint_dir.as_deref().expect("validated in train");
+            phases.time("checkpoint", || {
+                checkpoint::save(dir, cfg, comm, step + 1, &losses, &params, &optim)
+            })?;
+        }
 
         if is_rank0 && cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
             crate::info!(

@@ -11,6 +11,7 @@
 use anyhow::Result;
 use lasp::analytic::{self, DdpBackend, SpMethod};
 use lasp::cluster::Topology;
+use lasp::comm::fault::FaultPlan;
 use lasp::coordinator::{train, Schedule, TrainConfig};
 use lasp::runtime::{load_bundle, Device};
 use lasp::serve::{render_bench_json, simulate, ServeConfig};
@@ -65,6 +66,27 @@ fn kernel_threads_of(a: &Args) -> Option<usize> {
     }
 }
 
+/// Parse `--fault-plan` (empty = faults off).
+fn fault_plan_of(a: &Args) -> Result<Option<FaultPlan>, String> {
+    let spec = a.get("fault-plan");
+    if spec.is_empty() {
+        return Ok(None);
+    }
+    FaultPlan::parse(spec).map(Some).map_err(|e| format!("--fault-plan: {e}"))
+}
+
+/// Map an empty-string CLI default to `None` (unset path option).
+fn opt_path_of(a: &Args, name: &str) -> Option<String> {
+    let v = a.get(name);
+    if v.is_empty() { None } else { Some(v.to_string()) }
+}
+
+/// Map `--deadline 0` (the default) to "no deadline".
+fn deadline_of(a: &Args) -> Option<f64> {
+    let d = a.get_f64("deadline");
+    if d > 0.0 { Some(d) } else { None }
+}
+
 /// The `lasp train` / `lasp eval` argument set (extracted so the parse +
 /// resolve pipeline is testable without spawning the binary).
 fn train_cli() -> Cli {
@@ -87,6 +109,15 @@ fn train_cli() -> Cli {
         .opt("kernel-threads", "0",
              "kernel-engine threads per device (0 = one per core; \
               unset = 1 inside SP workers, auto single-device)")
+        .opt("fault-plan", "",
+             "deterministic fault injection, e.g. \
+              'seed=42,drop=0.2,dup=0.1,delay=0.3:2ms,crash=1@3'")
+        .opt("checkpoint-every", "0",
+             "write a checkpoint every N steps (0 = never; needs \
+              --checkpoint-dir)")
+        .opt("checkpoint-dir", "", "directory receiving step_<N>/ checkpoints")
+        .opt("resume", "",
+             "resume from the newest checkpoint under this directory")
         .flag("unfused", "disable kernel fusion (Table-5 ablation)")
         .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)")
         .flag("no-overlap", "deprecated: alias for --schedule sequential")
@@ -107,6 +138,9 @@ fn serve_cli() -> Cli {
         .opt("budget", "8", "memory budget in resident decode states")
         .opt("seed", "0", "RNG seed (arrivals, prompts, params)")
         .opt("kernel-threads", "1", "kernel-engine threads")
+        .opt("deadline", "0",
+             "per-request deadline in simulated seconds from arrival; \
+              expired waiting requests are shed (0 = no deadline)")
         .flag("json", "write BENCH_serve.json next to the workspace root")
 }
 
@@ -124,6 +158,7 @@ fn serve_config_of(a: &Args) -> ServeConfig {
         budget_states: a.get_usize("budget"),
         seed: a.get_usize("seed") as u64,
         kernel_threads: a.get_usize("kernel-threads"),
+        deadline: deadline_of(a),
     }
 }
 
@@ -159,8 +194,21 @@ fn main() -> Result<()> {
             cfg.bucket_elems = if bucket == 0 { None } else { Some(bucket) };
             cfg.kernel_threads = kernel_threads_of(&a);
             cfg.log_every = a.get_usize("log-every");
+            cfg.fault_plan = fault_plan_of(&a).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            cfg.checkpoint_every = a.get_usize("checkpoint-every");
+            cfg.checkpoint_dir = opt_path_of(&a, "checkpoint-dir");
+            cfg.resume = opt_path_of(&a, "resume");
             let r = train(&cfg)?;
             println!("final loss: {:.4}", r.losses.last().unwrap());
+            // raw f32 bits: the bitwise-determinism handle the chaos-smoke
+            // CI job compares across fault plans and crash/resume runs
+            println!(
+                "final loss bits: 0x{:08x}",
+                r.losses.last().unwrap().to_bits()
+            );
             println!("throughput: {:.1} tokens/sec", r.tokens_per_sec);
             println!("ring bytes: {} (KV/dKV states)", r.ring_bytes);
             if r.allgather_bytes > 0 {
@@ -194,6 +242,13 @@ fn main() -> Result<()> {
                 rep.completed, cfg.requests, rep.total_tokens, rep.sim_seconds,
                 rep.tokens_per_sec, rep.wall_seconds
             );
+            if rep.shed > 0 {
+                println!(
+                    "shed {} requests that missed the {:.3}s deadline",
+                    rep.shed,
+                    cfg.deadline.unwrap_or(0.0)
+                );
+            }
             println!(
                 "residency: peak {} / budget {} states, {} evictions, \
                  {} tokens replayed",
@@ -347,6 +402,43 @@ mod tests {
         assert_eq!(kernel_threads_of(&parse(&[])), None);
         assert_eq!(kernel_threads_of(&parse(&["--kernel-threads", "0"])), Some(0));
         assert_eq!(kernel_threads_of(&parse(&["--kernel-threads", "4"])), Some(4));
+    }
+
+    #[test]
+    fn fault_plan_flag_maps_empty_spec_and_errors() {
+        assert_eq!(fault_plan_of(&parse(&[])).unwrap(), None);
+        let a = parse(&["--fault-plan", "seed=7,drop=0.25,crash=1@3"]);
+        let plan = fault_plan_of(&a).unwrap().unwrap();
+        assert_eq!(plan.crash_at(1), Some(3));
+        let a = parse(&["--fault-plan", "bogus=1"]);
+        let e = fault_plan_of(&a).unwrap_err();
+        assert!(e.starts_with("--fault-plan:"), "unexpected error text: {e}");
+    }
+
+    #[test]
+    fn checkpoint_flags_map_unset_to_none() {
+        let a = parse(&[]);
+        assert_eq!(opt_path_of(&a, "checkpoint-dir"), None);
+        assert_eq!(opt_path_of(&a, "resume"), None);
+        assert_eq!(a.get_usize("checkpoint-every"), 0);
+        let a = parse(&["--checkpoint-every", "5", "--checkpoint-dir", "ckpt",
+                        "--resume", "ckpt"]);
+        assert_eq!(opt_path_of(&a, "checkpoint-dir"), Some("ckpt".into()));
+        assert_eq!(opt_path_of(&a, "resume"), Some("ckpt".into()));
+        assert_eq!(a.get_usize("checkpoint-every"), 5);
+    }
+
+    #[test]
+    fn serve_deadline_zero_means_none() {
+        let toks: Vec<String> = Vec::new();
+        let a = serve_cli().parse_from(&toks).unwrap();
+        assert_eq!(deadline_of(&a), None);
+        let toks: Vec<String> = ["--deadline", "0.25"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = serve_cli().parse_from(&toks).unwrap();
+        assert_eq!(deadline_of(&a), Some(0.25));
     }
 
     #[test]

@@ -17,9 +17,19 @@
 //! reduction order — asserted by `rust/tests/convergence.rs`.
 
 use crate::analytic::DdpBackend;
-use crate::comm::{Communicator, Group};
+use crate::comm::{CommError, Communicator, Group};
 use crate::model::ParamStore;
 use crate::tensor::Tensor;
+
+/// Snapshot of Adam's mutable state — what a checkpoint must persist so
+/// a resumed run continues the *exact* trajectory (the moments feed the
+/// update multiplicatively; an f32 of drift would diverge within steps).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptimState {
+    pub step: usize,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
 
 /// AdamW with linear warmup + inverse-sqrt decay and global-norm clipping
 /// (the paper's recipe: lr 5e-4, warmup 2000, Adam(0.9, 0.999), wd 0.01).
@@ -106,6 +116,29 @@ impl Adam {
         }
     }
 
+    /// Snapshot step counter + first/second moments for checkpointing.
+    pub fn export_state(&self) -> OptimState {
+        OptimState { step: self.step, m: self.m.clone(), v: self.v.clone() }
+    }
+
+    /// Restore a snapshot taken by [`Adam::export_state`]. The shapes
+    /// must match this optimizer's construction — a mismatch means the
+    /// checkpoint belongs to a different model or sharding layout.
+    pub fn load_state(&mut self, st: OptimState) -> Result<(), String> {
+        let shapes = |vs: &[Vec<f32>]| vs.iter().map(Vec::len).collect::<Vec<_>>();
+        if shapes(&st.m) != shapes(&self.m) || shapes(&st.v) != shapes(&self.v) {
+            return Err(format!(
+                "optimizer state shape mismatch: checkpoint {:?}, live {:?}",
+                shapes(&st.m),
+                shapes(&self.m)
+            ));
+        }
+        self.step = st.step;
+        self.m = st.m;
+        self.v = st.v;
+        Ok(())
+    }
+
     /// Flat-space variant (ZeRO shard path).
     pub fn step_flat(&mut self, param: &mut [f32], grad: &[f32]) {
         assert_eq!(self.m.len(), 1, "flat Adam must be built with one size");
@@ -184,23 +217,25 @@ impl DistOptimizer {
         params: &mut ParamStore,
         grads: &mut [Tensor],
         scale: f32,
-    ) {
+    ) -> Result<(), CommError> {
         match self {
             DistOptimizer::Replicated { adam, bucket_elems, legacy } => {
                 if *legacy {
                     // single flat all-reduce
                     let mut flat = ParamStore::flatten(grads, 1);
                     let mut t = Tensor::new(vec![flat.len()], std::mem::take(&mut flat));
-                    comm.all_reduce(group, &mut t);
+                    comm.all_reduce(group, &mut t)?;
                     ParamStore::unflatten(t.data(), grads);
                 } else {
                     // bucketed all-reduce in reverse registration order
                     // (mirrors DDP's overlap-friendly bucketing)
                     let mut bucket: Vec<usize> = Vec::new();
                     let mut elems = 0usize;
-                    let flush = |idxs: &mut Vec<usize>, grads: &mut [Tensor]| {
+                    let flush = |idxs: &mut Vec<usize>,
+                                 grads: &mut [Tensor]|
+                     -> Result<(), CommError> {
                         if idxs.is_empty() {
-                            return;
+                            return Ok(());
                         }
                         let ts: Vec<Tensor> =
                             idxs.iter().map(|&i| grads[i].clone()).collect();
@@ -208,7 +243,7 @@ impl DistOptimizer {
                             vec![ts.iter().map(|t| t.len()).sum()],
                             ParamStore::flatten(&ts, 1),
                         );
-                        comm.all_reduce(group, &mut flat);
+                        comm.all_reduce(group, &mut flat)?;
                         let mut off = 0;
                         for &i in idxs.iter() {
                             let n = grads[i].len();
@@ -218,16 +253,17 @@ impl DistOptimizer {
                             off += n;
                         }
                         idxs.clear();
+                        Ok(())
                     };
                     for i in (0..grads.len()).rev() {
                         bucket.push(i);
                         elems += grads[i].len();
                         if elems >= *bucket_elems {
-                            flush(&mut bucket, grads);
+                            flush(&mut bucket, grads)?;
                             elems = 0;
                         }
                     }
-                    flush(&mut bucket, grads);
+                    flush(&mut bucket, grads)?;
                 }
                 for g in grads.iter_mut() {
                     g.scale(scale);
@@ -240,11 +276,11 @@ impl DistOptimizer {
                 // reduce-scatter grads into my shard
                 let flat_g = ParamStore::flatten(grads, *shard_len * n);
                 let gt = Tensor::new(vec![flat_g.len()], flat_g);
-                let mut shard_g = comm.reduce_scatter(group, &gt);
+                let mut shard_g = comm.reduce_scatter(group, &gt)?;
                 shard_g.scale(scale);
                 // clip by *global* norm: all-reduce the squared shard norms
                 let mut sq = Tensor::scalar(shard_g.sq_norm() as f32);
-                comm.all_reduce(group, &mut sq);
+                comm.all_reduce(group, &mut sq)?;
                 let norm = (sq.item() as f64).sqrt();
                 if norm > adam.clip as f64 {
                     shard_g.scale((adam.clip as f64 / norm) as f32);
@@ -260,13 +296,32 @@ impl DistOptimizer {
                 adam.step_flat(my, shard_g.data());
                 // all-gather updated shards back into every replica
                 let shard_t = Tensor::new(vec![*shard_len], my.to_vec());
-                let all = comm.all_gather(group, &shard_t);
+                let all = comm.all_gather(group, &shard_t)?;
                 let mut full = Vec::with_capacity(*shard_len * n);
                 for s in all {
                     full.extend_from_slice(s.data());
                 }
                 ParamStore::unflatten(&full, params.tensors_mut());
             }
+        }
+        Ok(())
+    }
+
+    /// Checkpoint snapshot of the wrapped Adam (replicated backends
+    /// snapshot the full moments, sharded backends only their shard —
+    /// which is why every rank persists its own optimizer file).
+    pub fn export_state(&self) -> OptimState {
+        match self {
+            DistOptimizer::Replicated { adam, .. } => adam.export_state(),
+            DistOptimizer::Sharded { adam, .. } => adam.export_state(),
+        }
+    }
+
+    /// Restore a snapshot taken by [`DistOptimizer::export_state`].
+    pub fn load_state(&mut self, st: OptimState) -> Result<(), String> {
+        match self {
+            DistOptimizer::Replicated { adam, .. } => adam.load_state(st),
+            DistOptimizer::Sharded { adam, .. } => adam.load_state(st),
         }
     }
 }
@@ -354,7 +409,8 @@ mod tests {
                                 Tensor::new(t.shape().to_vec(), v)
                             })
                             .collect();
-                        opt.step(&comm, &group, &mut params, &mut grads, 0.5);
+                        opt.step(&comm, &group, &mut params, &mut grads, 0.5)
+                            .unwrap();
                     }
                     params
                         .tensors()
@@ -375,6 +431,39 @@ mod tests {
         let default_bucket = run(false, None);
         assert_eq!(legacy, bucketed);
         assert_eq!(legacy, default_bucket);
+    }
+
+    #[test]
+    fn exported_state_resumes_the_exact_trajectory() {
+        // Run A: 6 steps straight through. Run B: 3 steps, export, load
+        // into a *fresh* optimizer, 3 more. Trajectories must be bitwise
+        // equal — the checkpoint/resume contract in miniature.
+        let grad_at = |s: usize| {
+            vec![Tensor::new(vec![3], vec![0.1 * (s + 1) as f32; 3])]
+        };
+        let mut pa = vec![Tensor::new(vec![3], vec![1.0; 3])];
+        let mut aa = Adam::new(&[3], 0.05, 2);
+        for s in 0..6 {
+            aa.step(&mut pa, &grad_at(s));
+        }
+        let mut pb = vec![Tensor::new(vec![3], vec![1.0; 3])];
+        let mut ab = Adam::new(&[3], 0.05, 2);
+        for s in 0..3 {
+            ab.step(&mut pb, &grad_at(s));
+        }
+        let snapshot = ab.export_state();
+        let mut ab2 = Adam::new(&[3], 0.05, 2);
+        ab2.load_state(snapshot).unwrap();
+        for s in 3..6 {
+            ab2.step(&mut pb, &grad_at(s));
+        }
+        let bits = |p: &[Tensor]| -> Vec<u32> {
+            p[0].data().iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&pa), bits(&pb));
+        // shape mismatch is rejected, not silently truncated
+        let mut wrong = Adam::new(&[4], 0.05, 2);
+        assert!(wrong.load_state(ab2.export_state()).is_err());
     }
 
     #[test]

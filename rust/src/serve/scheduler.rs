@@ -56,6 +56,11 @@ pub struct ServeConfig {
     pub budget_states: usize,
     pub seed: u64,
     pub kernel_threads: usize,
+    /// graceful degradation under overload: a request still *waiting*
+    /// this many simulated seconds after arrival is shed instead of
+    /// admitted (`None` = serve everything, however late). Resident
+    /// requests are never shed — they hold state and make progress.
+    pub deadline: Option<f64>,
 }
 
 /// One sequence in flight. Times are virtual-clock seconds.
@@ -74,6 +79,9 @@ pub struct Request {
     pub finished_at: Option<f64>,
     /// evict→replay round-trips this request suffered
     pub replays: u32,
+    /// set when the request missed its deadline while waiting and was
+    /// shed (mutually exclusive with `finished_at`)
+    pub shed_at: Option<f64>,
 }
 
 /// Deterministic request stream: independent [`Rng`] forks for arrival
@@ -104,6 +112,7 @@ pub fn gen_requests(cfg: &ServeConfig, vocab: usize) -> Vec<Request> {
                 token_times: Vec::new(),
                 finished_at: None,
                 replays: 0,
+                shed_at: None,
             }
         })
         .collect()
@@ -118,6 +127,8 @@ pub struct BatchRecord {
     pub prefills: Vec<usize>,
     pub decodes: Vec<usize>,
     pub evicted: Vec<usize>,
+    /// waiting requests dropped this tick for missing their deadline
+    pub shed: Vec<usize>,
 }
 
 /// One scheduling decision.
@@ -139,6 +150,7 @@ pub struct Scheduler {
     finished: usize,
     tick: usize,
     max_batch: usize,
+    deadline: Option<f64>,
     /// state-shaped placeholder put into the cache per admission
     state_view: Tensor,
 }
@@ -154,6 +166,7 @@ impl Scheduler {
             finished: 0,
             tick: 0,
             max_batch: cfg.max_batch.max(1),
+            deadline: cfg.deadline,
             state_view: Tensor::zeros(state_shape),
             requests,
         }
@@ -167,6 +180,29 @@ impl Scheduler {
         {
             self.waiting.push_back(self.next_arrival);
             self.next_arrival += 1;
+        }
+
+        // Deadline shedding before admission: a request that has waited
+        // past its deadline is dropped rather than served uselessly late.
+        // Shedding only ever removes queue entries, so the starvation
+        // guard's termination argument is unchanged; with `deadline:
+        // None` this block is inert and the schedule is byte-identical
+        // to pre-deadline builds.
+        let mut shed = Vec::new();
+        if let Some(dl) = self.deadline {
+            let requests = &mut self.requests;
+            self.waiting.retain(|&rid| {
+                if now > requests[rid].arrival + dl {
+                    shed.push(rid);
+                    false
+                } else {
+                    true
+                }
+            });
+            for &rid in &shed {
+                requests[rid].shed_at = Some(now);
+                self.finished += 1;
+            }
         }
 
         // Residents are exactly the running sequences (finished ones are
@@ -190,7 +226,7 @@ impl Scheduler {
             prefills.push(rid);
         }
 
-        if prefills.is_empty() && decodes.is_empty() {
+        if prefills.is_empty() && decodes.is_empty() && shed.is_empty() {
             if self.finished == self.requests.len() {
                 return SchedStep::Done;
             }
@@ -201,7 +237,10 @@ impl Scheduler {
             return SchedStep::Idle(self.requests[self.next_arrival].arrival);
         }
 
-        let rec = BatchRecord { tick: self.tick, prefills, decodes, evicted };
+        // A shed-only tick still surfaces as Run so the trace records
+        // the drop; it carries zero cost and cannot repeat (the shed
+        // entries just left the queue), so the loop still terminates.
+        let rec = BatchRecord { tick: self.tick, prefills, decodes, evicted, shed };
         self.tick += 1;
         SchedStep::Run(rec)
     }
@@ -250,6 +289,7 @@ mod tests {
             budget_states: budget,
             seed: 0,
             kernel_threads: 1,
+            deadline: None,
         }
     }
 
@@ -336,6 +376,43 @@ mod tests {
         s.requests_mut()[1].generated.push(7);
         s.complete(1, last);
         assert_eq!(s.step(last), SchedStep::Done);
+    }
+
+    #[test]
+    fn expired_waiting_requests_are_shed_not_served() {
+        let mut c = cfg(3, 4, 4);
+        c.deadline = Some(0.001);
+        let reqs = gen_requests(&c, 64);
+        let last = reqs.last().unwrap().arrival;
+        let mut s = Scheduler::new(&c, reqs, &[1]);
+        // first tick lands far past every deadline: all three requests
+        // are waiting and expired, so all shed and none is admitted
+        let SchedStep::Run(b) = s.step(last + 1.0) else { panic!() };
+        assert_eq!(b.shed, vec![0, 1, 2]);
+        assert!(b.prefills.is_empty() && b.decodes.is_empty());
+        assert!(s.requests().iter().all(|r| r.shed_at.is_some()));
+        assert!(s.requests().iter().all(|r| r.finished_at.is_none()));
+        // shedding counts toward termination
+        assert_eq!(s.step(last + 1.0), SchedStep::Done);
+    }
+
+    #[test]
+    fn residents_are_never_shed() {
+        let mut c = cfg(2, 4, 4);
+        c.deadline = Some(0.5);
+        let reqs = gen_requests(&c, 64);
+        let t0 = reqs[0].arrival;
+        let mut s = Scheduler::new(&c, reqs, &[1]);
+        // admit request 0 within its deadline; it becomes resident
+        let SchedStep::Run(b) = s.step(t0) else { panic!() };
+        assert_eq!(b.prefills, vec![0]);
+        s.requests_mut()[0].generated.push(1);
+        // far past everyone's deadline: resident 0 keeps decoding,
+        // waiting 1 is shed
+        let SchedStep::Run(b) = s.step(t0 + 10.0) else { panic!() };
+        assert_eq!(b.decodes, vec![0]);
+        assert_eq!(b.shed, vec![1]);
+        assert_eq!(s.requests()[0].shed_at, None);
     }
 
     #[test]

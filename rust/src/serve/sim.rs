@@ -40,6 +40,8 @@ use super::scheduler::{gen_requests, BatchRecord, SchedStep, Scheduler, ServeCon
 pub struct ServeReport {
     /// requests that ran to their decode budget
     pub completed: usize,
+    /// requests dropped for missing their deadline while waiting
+    pub shed: usize,
     /// greedy tokens emitted across all requests
     pub total_tokens: usize,
     /// virtual-clock end time
@@ -202,6 +204,7 @@ pub fn simulate(cfg: &ServeConfig) -> Result<ServeReport> {
 
     let reqs = sched.requests();
     let completed = reqs.iter().filter(|r| r.finished_at.is_some()).count();
+    let shed = reqs.iter().filter(|r| r.shed_at.is_some()).count();
     let total_tokens: usize = reqs.iter().map(|r| r.generated.len()).sum();
     let ttft: Vec<f64> = reqs
         .iter()
@@ -215,6 +218,7 @@ pub fn simulate(cfg: &ServeConfig) -> Result<ServeReport> {
     }
     Ok(ServeReport {
         completed,
+        shed,
         total_tokens,
         sim_seconds: now,
         tokens_per_sec: total_tokens as f64 / now.max(f64::MIN_POSITIVE),
@@ -247,6 +251,7 @@ pub fn render_bench_json(cfg: &ServeConfig, rep: &ServeReport) -> String {
     out += &format!("  \"seed\": {},\n", cfg.seed);
     out += &format!("  \"kernel_threads\": {},\n", cfg.kernel_threads);
     out += &format!("  \"completed\": {},\n", rep.completed);
+    out += &format!("  \"shed\": {},\n", rep.shed);
     out += &format!("  \"total_tokens\": {},\n", rep.total_tokens);
     out += &format!("  \"sim_seconds\": {:e},\n", rep.sim_seconds);
     out += &format!("  \"throughput_tokens_per_sec\": {:e},\n", rep.tokens_per_sec);

@@ -1,0 +1,199 @@
+//! Chaos suite (ISSUE 9): deterministic fault injection must perturb
+//! *timing only*, never bytes.
+//!
+//! The comm substrate assigns every (src, dst) channel a private seq
+//! counter and makes all fault decisions — drop, duplicate, delay — a
+//! pure hash of `(plan seed, src, dst, op, seq)`. Drops retransmit
+//! behind the sender's back, duplicates are deduped by seq at the
+//! receiver, and delays only move `deliver_at`. Training under any such
+//! plan must therefore be **bitwise identical** to the fault-free run,
+//! and a rank killed mid-run must (a) surface as a typed error naming
+//! the dead rank fast, and (b) be recoverable through checkpoint/resume
+//! with a bitwise-equal final trajectory.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use lasp::comm::fault::FaultPlan;
+use lasp::comm::{CommError, CommWorld};
+use lasp::coordinator::{train, Schedule, TrainConfig, TrainResult};
+use lasp::tensor::Tensor;
+
+const STEPS: usize = 4;
+
+fn cfg(config: &str, sp: usize, schedule: Schedule) -> TrainConfig {
+    // N = 64 split as T ∈ {2, 4}: chunk 32 / 16 (same grid as
+    // overlap_parity, so the bundles are known to exist)
+    let mut c = TrainConfig::new(config, 64 / sp, sp);
+    c.steps = STEPS;
+    c.warmup = 10;
+    c.lr = 1e-3;
+    c.schedule = schedule;
+    c
+}
+
+fn assert_bitwise_equal(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.losses, b.losses, "{what}: losses diverge");
+    for (i, (ta, tb)) in a
+        .final_params
+        .tensors()
+        .iter()
+        .zip(b.final_params.tensors())
+        .enumerate()
+    {
+        assert!(ta.data() == tb.data(), "{what}: param {i} not bitwise equal");
+    }
+}
+
+static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+fn scratch_dir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "lasp_chaos_test_{}_{}",
+        std::process::id(),
+        DIR_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A leader that dies before serving the `group_tag` handshake must fail
+/// the waiting member with `RankDead` naming the leader — fast, not
+/// after the 600 s recv trip-wire.
+#[test]
+fn leader_crash_during_group_tag_fails_members_fast() {
+    let world = CommWorld::new(2);
+    let comms = world.communicators();
+    let (c0, c1) = (comms[0].clone(), comms[1].clone());
+
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(50));
+        c0.mark_dead(); // the leader "crashes" without sending its tag
+    });
+    let t0 = Instant::now();
+    let g = c1.world_group();
+    let mut t = Tensor::scalar(1.0);
+    // the member's first act inside any collective is the group_tag
+    // handshake with the leader (rank 0)
+    let err = c1.all_reduce(&g, &mut t).unwrap_err();
+    assert_eq!(err, CommError::RankDead { rank: 0 }, "got: {err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "death notification took {:?} — burned toward the recv timeout",
+        t0.elapsed()
+    );
+    killer.join().unwrap();
+}
+
+/// Certain duplication of every message: receiver-side dedup by seq must
+/// make redelivery invisible — collectives still compute exact results.
+#[test]
+fn duplicate_delivery_is_idempotent() {
+    let plan = FaultPlan::parse("seed=5,dup=1.0").unwrap();
+    let world = CommWorld::with_faults(4, plan);
+    let handles: Vec<_> = world
+        .communicators()
+        .into_iter()
+        .map(|c| {
+            std::thread::spawn(move || {
+                let g = c.world_group();
+                for round in 0..3 {
+                    let mut t =
+                        Tensor::scalar((c.rank() + round + 1) as f32);
+                    c.all_reduce(&g, &mut t).unwrap();
+                    // sum over ranks of (rank + round + 1)
+                    assert_eq!(t.item(), (6 + 4 * (round + 1)) as f32);
+                }
+                c.barrier().unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Message drops force the ack'd retransmit path on every hop of the
+/// ring — the trajectory must not notice.
+#[test]
+fn drop_retransmit_preserves_bitwise_trajectory() {
+    for schedule in Schedule::ALL {
+        let clean = train(&cfg("tiny", 2, schedule)).unwrap();
+        let mut faulted = cfg("tiny", 2, schedule);
+        faulted.fault_plan = Some(FaultPlan::parse("seed=11,drop=0.3").unwrap());
+        let r = train(&faulted).unwrap();
+        assert_bitwise_equal(
+            &clean,
+            &r,
+            &format!("tiny T=2 {} drop=0.3", schedule.name()),
+        );
+    }
+}
+
+/// The acceptance matrix: drops + duplicates + delays together, across
+/// both model families, both ring sizes, and all three schedules.
+#[test]
+fn combined_faults_are_bitwise_invisible_across_the_matrix() {
+    let plan =
+        FaultPlan::parse("seed=3,drop=0.2,dup=0.3,delay=0.3:200us").unwrap();
+    for config in ["tiny", "tiny_lt"] {
+        for sp in [2usize, 4] {
+            for schedule in Schedule::ALL {
+                let clean = train(&cfg(config, sp, schedule)).unwrap();
+                let mut faulted = cfg(config, sp, schedule);
+                faulted.fault_plan = Some(plan.clone());
+                let r = train(&faulted).unwrap();
+                assert_bitwise_equal(
+                    &clean,
+                    &r,
+                    &format!("{config} T={sp} {} chaos", schedule.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Kill rank 1 at step 2 under per-step checkpointing: the run fails
+/// with the injected crash as the *root* cause (not the peers' RankDead
+/// cascade), and resuming from the surviving checkpoint finishes the
+/// run bitwise equal to one that never crashed.
+#[test]
+fn rank_kill_then_resume_is_bitwise_equal_to_uninterrupted() {
+    let dir = scratch_dir();
+    let dir_s = dir.to_str().unwrap().to_string();
+
+    let clean = train(&cfg("tiny", 2, Schedule::Overlapped)).unwrap();
+
+    let mut crashed = cfg("tiny", 2, Schedule::Overlapped);
+    crashed.fault_plan = Some(FaultPlan::default().with_crash(1, 2));
+    crashed.checkpoint_every = 1;
+    crashed.checkpoint_dir = Some(dir_s.clone());
+    let t0 = Instant::now();
+    let err = train(&crashed).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("rank 1 crashed at step 2"),
+        "root cause lost behind the cascade: {msg}"
+    );
+    assert!(
+        msg.contains("worker rank 1"),
+        "error lacks the failing rank context: {msg}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "crash propagation took {:?} — peers burned toward the recv timeout",
+        t0.elapsed()
+    );
+
+    // steps 0 and 1 committed checkpoints before the crash
+    assert_eq!(lasp::coordinator::checkpoint::latest_step(&dir_s), Some(2));
+
+    let mut resumed = cfg("tiny", 2, Schedule::Overlapped);
+    resumed.resume = Some(dir_s);
+    let r = train(&resumed).unwrap();
+    assert_bitwise_equal(&clean, &r, "crash at step 2 + resume");
+    assert_eq!(r.losses.len(), STEPS, "resume must restore the loss history");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -24,6 +24,7 @@ fn cfg() -> ServeConfig {
         budget_states: 4,
         seed: 0,
         kernel_threads: 1,
+        deadline: None,
     }
 }
 
@@ -98,6 +99,37 @@ fn no_request_starves_even_at_budget_one() {
 }
 
 #[test]
+fn deadline_sheds_deterministically_instead_of_starving() {
+    // a deadline far tighter than the queueing delay under this arrival
+    // storm: late-queue requests shed instead of being served uselessly
+    // late — and the outcome is a pure function of the config
+    let mut c = cfg();
+    c.budget_states = 1;
+    c.max_batch = 2;
+    c.deadline = Some(1e-4);
+    let a = simulate(&c).unwrap();
+    let b = simulate(&c).unwrap();
+    assert_eq!(a.trace, b.trace, "shedding must be deterministic by seed");
+    assert_eq!(a.shed, b.shed);
+    assert!(a.shed > 0, "tight deadline under contention must shed");
+    assert!(a.completed >= 1, "early requests still complete");
+    assert_eq!(
+        a.completed + a.shed,
+        c.requests,
+        "every request either completes or sheds — nobody starves"
+    );
+
+    // a deadline nobody can miss must reproduce the no-deadline run
+    let mut generous = cfg();
+    generous.deadline = Some(1e9);
+    let g = simulate(&generous).unwrap();
+    let plain = simulate(&cfg()).unwrap();
+    assert_eq!(g.shed, 0);
+    assert_eq!(g.trace, plain.trace, "unreachable deadline must not perturb the schedule");
+    assert_eq!(g.completed, plain.completed);
+}
+
+#[test]
 fn bench_json_is_schema_valid() {
     let c = cfg();
     let r = simulate(&c).unwrap();
@@ -112,6 +144,7 @@ fn bench_json_is_schema_valid() {
         "seed",
         "kernel_threads",
         "completed",
+        "shed",
         "total_tokens",
         "sim_seconds",
         "throughput_tokens_per_sec",
