@@ -7,8 +7,27 @@
 //! produces its "measured" column without running 64 GPUs.
 
 use crate::analytic::SpMethod;
-use crate::comm::{CommError, Communicator, Group, OpKind, Payload};
+use crate::comm::{
+    CommError, Communicator, Group, OpKind, Payload, TAG_COLLECTIVE_BASE,
+};
 use crate::tensor::Tensor;
+
+/// Ring-Attention rotates two streams (K and V chunks) per hop.
+const STREAM_K: u64 = 0;
+const STREAM_V: u64 = 1;
+
+/// P2P tag for one Ring-Attention rotation hop: `stream` and hop index
+/// packed into a block that stays below the substrate's collective
+/// namespace at [`TAG_COLLECTIVE_BASE`] (the old scheme's raw
+/// `1_000_000 + s` literals landed *inside* it, colliding with
+/// `group_tag` allocations — exactly what `lasp lint`'s raw-tag rule
+/// and the checker's tag-namespace rule now reject).
+fn hop_tag(stream: u64, hop: usize) -> u64 {
+    debug_assert!(hop < 1 << 10, "hop {hop} overflows the tag block");
+    let tag = (1 << 11) | (stream << 10) | hop as u64;
+    debug_assert!(tag < TAG_COLLECTIVE_BASE);
+    tag
+}
 
 /// Execute the per-layer communication of `method` over `group`.
 ///
@@ -24,11 +43,7 @@ pub fn sp_layer_traffic(
     h: usize,
 ) -> Result<(), CommError> {
     let t = group.size();
-    let me = group
-        .ranks
-        .iter()
-        .position(|&r| r == comm.rank())
-        .expect("rank not in group");
+    let me = group.index_of(comm.rank())?;
     let next = group.ranks[(me + 1) % t];
     let prev = group.ranks[(me + t - 1) % t];
     match method {
@@ -60,18 +75,18 @@ pub fn sp_layer_traffic(
                     let kv = Tensor::zeros(&[c * d / h]);
                     comm.send_tagged(
                         next,
-                        1_000_000 + s as u64,
+                        hop_tag(STREAM_K, s),
                         Payload::F32(kv.data().to_vec()),
                         OpKind::P2p,
                     )?;
                     comm.send_tagged(
                         next,
-                        2_000_000 + s as u64,
+                        hop_tag(STREAM_V, s),
                         Payload::F32(kv.data().to_vec()),
                         OpKind::P2p,
                     )?;
-                    comm.recv_tagged(prev, 1_000_000 + s as u64)?;
-                    comm.recv_tagged(prev, 2_000_000 + s as u64)?;
+                    comm.recv_tagged(prev, hop_tag(STREAM_K, s))?;
+                    comm.recv_tagged(prev, hop_tag(STREAM_V, s))?;
                 }
             }
         }

@@ -1,0 +1,480 @@
+//! `lasp lint` — plain-text repo invariants clippy can't express
+//! (DESIGN.md §8). No new dependencies: a recursive walk over
+//! `rust/src` with substring/paren-balance matching.
+//!
+//! Rules:
+//!
+//! * **no-panic-comm** — non-test code under `comm/` and `coordinator/`
+//!   must not call `.unwrap()`, `.expect(…)`, `panic!`, `unreachable!`,
+//!   `todo!` or `unimplemented!`: those paths run on worker threads
+//!   where a panic poisons substrate locks and robs peers of the typed
+//!   `CommError` diagnostics (see `mark_dead`). `assert!` family stays
+//!   allowed — shape contracts are caller bugs, not wire faults.
+//! * **virtual-clock** — `runtime/kernel/` must not read wall clocks
+//!   (`Instant::now`, `SystemTime`): kernel results must be a pure
+//!   function of inputs or the bitwise-parity suite can't hold.
+//! * **raw-tag** — outside `comm/mod.rs` (which defines the tag-0
+//!   convenience channel), the tag argument of `send_tagged` /
+//!   `recv_tagged` / `send_tensor` / `recv_tensor` must not contain an
+//!   integer literal: tags come from `ring_tag`/`group_tag`/named
+//!   helpers so the namespace split stays auditable in one place.
+//!
+//! Test regions (from the first `#[cfg(test)]` line to end of file —
+//! the repo convention puts `mod tests` last) and `//` comments are
+//! exempt. Vetted exceptions live in `rust/lint_allow.txt`, each with a
+//! mandatory reason.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint hit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// path relative to the scanned root, `/`-separated
+    pub file: String,
+    /// 1-based line number
+    pub line: usize,
+    pub rule: &'static str,
+    /// the offending line, comment-stripped and trimmed
+    pub text: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.text)
+    }
+}
+
+/// One allowlist entry: `file-substr | rule | line-substr | reason`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub file: String,
+    pub rule: String,
+    pub pattern: String,
+    pub reason: String,
+}
+
+impl AllowEntry {
+    fn covers(&self, f: &Finding) -> bool {
+        f.file.contains(&self.file)
+            && (self.rule == "*" || self.rule == f.rule)
+            && f.text.contains(&self.pattern)
+    }
+}
+
+/// Parse the allowlist format: one entry per line,
+/// `file-substr | rule | line-substr | reason`; `#` starts a comment.
+/// The reason field is mandatory — an exception nobody can justify is
+/// not vetted.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 || parts.iter().any(|p| p.is_empty()) {
+            return Err(format!(
+                "allowlist line {}: expected `file | rule | pattern | reason`, got: {raw}",
+                i + 1
+            ));
+        }
+        out.push(AllowEntry {
+            file: parts[0].to_string(),
+            rule: parts[1].to_string(),
+            pattern: parts[2].to_string(),
+            reason: parts[3].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+// Pattern fragments are assembled with concat! so this file's own
+// source never contains the tokens it hunts for (the linter lints
+// itself like any other file).
+const RULE_NO_PANIC: &str = "no-panic-comm";
+const RULE_VCLOCK: &str = "virtual-clock";
+const RULE_RAW_TAG: &str = "raw-tag";
+
+const PANIC_PATTERNS: [&str; 6] = [
+    concat!(".unwrap", "()"),
+    concat!(".expect", "("),
+    concat!("panic!", "("),
+    concat!("unreachable!", "("),
+    concat!("todo!", "("),
+    concat!("unimplemented!", "("),
+];
+
+const CLOCK_PATTERNS: [&str; 2] =
+    [concat!("Instant::", "now"), concat!("System", "Time")];
+
+const TAGGED_CALLS: [&str; 4] = [
+    concat!("send_", "tagged("),
+    concat!("recv_", "tagged("),
+    concat!("send_", "tensor("),
+    concat!("recv_", "tensor("),
+];
+
+/// Strip a `//` comment, ignoring `//` inside string literals (good
+/// enough for this repo's code; raw strings with embedded quotes would
+/// need a real lexer).
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'/' if !in_str && i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Does `text` contain a standalone integer literal — a digit not
+/// preceded by an identifier character? (`u64::MAX` has no such digit:
+/// the `6` follows `u`.)
+fn has_int_literal(text: &str) -> bool {
+    let bytes = text.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b.is_ascii_digit() {
+            let prev_ident = i > 0
+                && (bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_');
+            if !prev_ident {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Split a call's argument text on top-level commas.
+fn split_args(args: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in args.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(&args[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&args[start..]);
+    out
+}
+
+fn lint_file(rel: &str, content: &str, findings: &mut Vec<Finding>) {
+    // test region: first `#[cfg(test)]` line to EOF (repo convention)
+    let test_start = content
+        .lines()
+        .position(|l| l.trim() == concat!("#[cfg", "(test)]"))
+        .unwrap_or(usize::MAX);
+    let stripped: Vec<&str> = content.lines().map(strip_comment).collect();
+
+    let in_comm = rel.contains("comm/") || rel.contains("coordinator/");
+    let in_kernel = rel.contains("runtime/kernel/");
+    let is_comm_mod = rel.ends_with("comm/mod.rs");
+
+    for (idx, line) in stripped.iter().enumerate() {
+        if idx >= test_start {
+            break;
+        }
+        if in_comm {
+            for pat in PANIC_PATTERNS {
+                if line.contains(pat) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: idx + 1,
+                        rule: RULE_NO_PANIC,
+                        text: line.trim().to_string(),
+                    });
+                    break;
+                }
+            }
+        }
+        if in_kernel {
+            for pat in CLOCK_PATTERNS {
+                if line.contains(pat) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: idx + 1,
+                        rule: RULE_VCLOCK,
+                        text: line.trim().to_string(),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+
+    // raw-tag needs paren balancing across lines: work on the joined
+    // non-test stripped text with a byte-offset -> line map
+    if is_comm_mod {
+        return;
+    }
+    let mut joined = String::new();
+    let mut line_starts = Vec::new();
+    for (idx, line) in stripped.iter().enumerate() {
+        if idx >= test_start {
+            break;
+        }
+        line_starts.push(joined.len());
+        joined.push_str(line);
+        joined.push('\n');
+    }
+    let line_of = |off: usize| match line_starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i, // insertion point i means offset is on line i (1-based)
+    };
+    for call in TAGGED_CALLS {
+        let mut from = 0usize;
+        while let Some(pos) = joined[from..].find(call) {
+            let at = from + pos;
+            let open = at + call.len() - 1; // the '('
+            // balance to the matching ')'
+            let mut depth = 0i32;
+            let mut end = None;
+            for (i, c) in joined[open..].char_indices() {
+                match c {
+                    '(' | '[' | '{' => depth += 1,
+                    ')' | ']' | '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = Some(open + i);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(end) = end {
+                let args = &joined[open + 1..end];
+                let parts = split_args(args);
+                // arg 1 is the tag for all four tagged-call signatures
+                if let Some(tag_arg) = parts.get(1) {
+                    if has_int_literal(tag_arg) {
+                        let ln = line_of(at);
+                        findings.push(Finding {
+                            file: rel.to_string(),
+                            line: ln,
+                            rule: RULE_RAW_TAG,
+                            text: format!(
+                                "{}{})",
+                                call,
+                                args.split_whitespace()
+                                    .collect::<Vec<_>>()
+                                    .join(" ")
+                            ),
+                        });
+                    }
+                }
+                from = end;
+            } else {
+                from = at + call.len();
+            }
+        }
+    }
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, files)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root`, returning findings not covered
+/// by the allowlist. Findings are sorted by (file, line) for stable
+/// output.
+pub fn run(root: &Path, allow: &[AllowEntry]) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let content = fs::read_to_string(path)?;
+        lint_file(&rel, &content, &mut findings);
+    }
+    findings.retain(|f| !allow.iter().any(|a| a.covers(f)));
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}
+
+/// Default scan root: the crate's `src/` directory.
+pub fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// Default allowlist path: `rust/lint_allow.txt` next to Cargo.toml.
+pub fn default_allowlist_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("lint_allow.txt")
+}
+
+/// Load an allowlist file; a missing file means an empty allowlist.
+pub fn load_allowlist(path: &Path) -> Result<Vec<AllowEntry>, String> {
+    match fs::read_to_string(path) {
+        Ok(text) => parse_allowlist(&text),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Vec::new()),
+        Err(e) => Err(format!("{}: {e}", path.display())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(rel: &str, content: &str) -> Vec<Finding> {
+        let mut out = Vec::new();
+        lint_file(rel, content, &mut out);
+        out
+    }
+
+    #[test]
+    fn catches_seeded_unwrap_in_comm() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let fs = lint_str("comm/bad.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, RULE_NO_PANIC);
+        assert_eq!(fs[0].line, 2);
+        // same content outside the scoped dirs is fine
+        assert!(lint_str("runtime/bad.rs", src).is_empty());
+    }
+
+    #[test]
+    fn comments_and_test_regions_are_exempt() {
+        let src = "\
+fn f() {} // calls .unwrap() in a comment only
+#[cfg(test)]
+mod tests {
+    fn g(x: Option<u32>) -> u32 { x.unwrap() }
+}
+";
+        assert!(lint_str("comm/ok.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catches_wall_clock_in_kernel() {
+        let src = "fn t() { let _ = std::time::Instant::now(); }\n";
+        let fs = lint_str("runtime/kernel/gemm.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, RULE_VCLOCK);
+        assert!(lint_str("serve/sim.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catches_raw_tag_literal_in_tag_argument_only() {
+        let bad = concat!(
+            "fn f(c: &C) {\n    c.send_",
+            "tagged(next, 1_000_000 + s as u64, p, k);\n}\n"
+        );
+        let fs = lint_str("baselines/x.rs", bad);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, RULE_RAW_TAG);
+        assert_eq!(fs[0].line, 2);
+
+        // literal in the *dst* argument is fine; named tag is fine
+        let ok = concat!(
+            "fn f(c: &C) {\n    c.send_",
+            "tensor(group.ranks[t_idx + 1], tag, &kv);\n}\n"
+        );
+        assert!(lint_str("coordinator/ring.rs", ok).is_empty());
+
+        // u64::MAX is a named constant, not a raw literal
+        let ctl = concat!("fn f(c: &C) {\n    c.recv_", "tagged(leader, u64::MAX);\n}\n");
+        assert!(lint_str("x.rs", ctl).is_empty());
+
+        // multi-line calls are balanced across lines
+        let multi = concat!(
+            "fn f(c: &C) {\n    c.send_",
+            "tagged(\n        next,\n        tag + 7,\n        p,\n        k,\n    );\n}\n"
+        );
+        let fs = lint_str("y.rs", multi);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].line, 2, "{fs:?}");
+    }
+
+    #[test]
+    fn comm_mod_is_exempt_from_raw_tag_only() {
+        let src = concat!("fn f(c: &C) {\n    c.send_", "tagged(dst, 0, p, k);\n}\n");
+        assert!(lint_str("comm/mod.rs", src).is_empty());
+        assert_eq!(lint_str("comm/other.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn allowlist_suppresses_with_reason() {
+        let src = concat!("fn f() {\n    panic!", "(\"boom\");\n}\n");
+        let mut out = Vec::new();
+        lint_file("comm/mod.rs", src, &mut out);
+        assert_eq!(out.len(), 1);
+        let allow = parse_allowlist(
+            "# vetted exceptions\ncomm/mod.rs | no-panic-comm | boom | contextless conversion, documented\n",
+        )
+        .unwrap();
+        out.retain(|f| !allow.iter().any(|a| a.covers(f)));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn allowlist_requires_all_four_fields() {
+        assert!(parse_allowlist("a | b | c").is_err());
+        assert!(parse_allowlist("a | b | c |").is_err());
+        assert!(parse_allowlist("a | b | c | because\n# comment\n\n").is_ok());
+    }
+
+    #[test]
+    fn string_literals_do_not_hide_code() {
+        // a `//` inside a string is not a comment: the unwrap after it
+        // on the same line must still be caught
+        let src = "fn f(u: &str, x: Option<u32>) { let _ = (\"http://x\", x.unwrap()); }\n";
+        let fs = lint_str("comm/url.rs", src);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+    }
+
+    #[test]
+    fn findings_render_with_location_and_rule() {
+        let f = Finding {
+            file: "comm/mod.rs".into(),
+            line: 7,
+            rule: RULE_NO_PANIC,
+            text: "x.unwrap_later()".into(),
+        };
+        assert_eq!(f.to_string(), "comm/mod.rs:7: [no-panic-comm] x.unwrap_later()");
+    }
+
+    /// The real tree must be lint-clean under the committed allowlist —
+    /// the same gate CI's check-smoke job enforces.
+    #[test]
+    fn repo_is_clean_under_committed_allowlist() {
+        let allow = load_allowlist(&default_allowlist_path()).unwrap();
+        let findings = run(&default_root(), &allow).unwrap();
+        assert!(
+            findings.is_empty(),
+            "lint findings in the tree:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! Event tracing for the protocol checker (DESIGN.md §8).
+//!
+//! A [`TraceRecorder`] hooks into the communicator behind an optional
+//! field on the shared world state: when absent (the default for every
+//! training/serving path) recording costs a single `Option` check per
+//! primitive; when present, every send, receive, collective control
+//! message and barrier transition is appended to a per-rank event log.
+//!
+//! The logs are *deterministic up to per-rank order*: each rank appends
+//! only its own events, so a log is exactly that rank's program order.
+//! Cross-rank order is deliberately not recorded — the happens-before
+//! analysis in [`protocol`](super::protocol) reconstructs it from
+//! send/recv matches and barrier generations, which is what makes the
+//! checker insensitive to scheduling noise in the traced run.
+
+use std::sync::Mutex;
+
+use crate::comm::OpKind;
+
+/// One traced communicator transition, as observed by the acting rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A logical send on channel (self → `dst`). Recorded once per
+    /// logical message — retransmits and duplicate copies are delivery
+    /// artifacts, invisible here just as they are in byte accounting.
+    Send { dst: usize, tag: u64, seq: u64, op: OpKind, nbytes: u64 },
+    /// A completed receive on channel (`src` → self): the message with
+    /// this `seq` was consumed under this `tag`.
+    Recv { src: usize, tag: u64, seq: u64 },
+    /// The rank arrived at barrier generation `gen`.
+    BarrierEnter { gen: u64 },
+    /// The rank left barrier generation `gen` (all ranks had arrived).
+    BarrierExit { gen: u64 },
+}
+
+/// An event positioned in its rank's program order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub rank: usize,
+    /// Index within the rank's log — the program-order coordinate used
+    /// by the happens-before graph.
+    pub index: usize,
+    pub kind: EventKind,
+}
+
+/// Per-rank event logs, appended to concurrently by the rank threads.
+/// The per-rank mutexes are leaf locks: `record` is called at points
+/// where the communicator holds at most one substrate lock, and nothing
+/// is ever acquired while a log lock is held.
+pub struct TraceRecorder {
+    logs: Vec<Mutex<Vec<Event>>>,
+}
+
+impl TraceRecorder {
+    pub fn new(world: usize) -> TraceRecorder {
+        TraceRecorder { logs: (0..world).map(|_| Mutex::new(Vec::new())).collect() }
+    }
+
+    /// Append an event to `rank`'s log. Lock poisoning is unreachable in
+    /// practice (nothing panics while holding a log lock); if a traced
+    /// thread did panic elsewhere, the partial log is still the best
+    /// available diagnostic, so we recover rather than cascade.
+    pub fn record(&self, rank: usize, kind: EventKind) {
+        let mut log = self.logs[rank]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let index = log.len();
+        log.push(Event { rank, index, kind });
+    }
+
+    /// Drain the logs into an immutable [`Trace`] for analysis. Call
+    /// after every traced thread has been joined.
+    pub fn take(&self) -> Trace {
+        Trace {
+            per_rank: self
+                .logs
+                .iter()
+                .map(|l| {
+                    std::mem::take(
+                        &mut *l.lock().unwrap_or_else(std::sync::PoisonError::into_inner),
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A completed run's per-rank event logs.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub per_rank: Vec<Vec<Event>>,
+}
+
+impl Trace {
+    pub fn world(&self) -> usize {
+        self.per_rank.len()
+    }
+
+    pub fn total_events(&self) -> usize {
+        self.per_rank.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_program_order_per_rank() {
+        let tr = TraceRecorder::new(2);
+        tr.record(0, EventKind::Send { dst: 1, tag: 7, seq: 0, op: OpKind::P2p, nbytes: 4 });
+        tr.record(1, EventKind::Recv { src: 0, tag: 7, seq: 0 });
+        tr.record(0, EventKind::BarrierEnter { gen: 0 });
+        let trace = tr.take();
+        assert_eq!(trace.world(), 2);
+        assert_eq!(trace.total_events(), 3);
+        assert_eq!(trace.per_rank[0].len(), 2);
+        assert_eq!(trace.per_rank[0][0].index, 0);
+        assert_eq!(trace.per_rank[0][1].index, 1);
+        assert!(matches!(trace.per_rank[0][1].kind, EventKind::BarrierEnter { gen: 0 }));
+        assert_eq!(trace.per_rank[1][0].rank, 1);
+    }
+
+    #[test]
+    fn take_drains_the_logs() {
+        let tr = TraceRecorder::new(1);
+        tr.record(0, EventKind::BarrierEnter { gen: 0 });
+        assert_eq!(tr.take().total_events(), 1);
+        assert_eq!(tr.take().total_events(), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_every_event() {
+        use std::sync::Arc;
+        let tr = Arc::new(TraceRecorder::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let tr = Arc::clone(&tr);
+                std::thread::spawn(move || {
+                    for s in 0..100u64 {
+                        tr.record(
+                            r,
+                            EventKind::Send {
+                                dst: (r + 1) % 4,
+                                tag: s,
+                                seq: s,
+                                op: OpKind::P2p,
+                                nbytes: 4,
+                            },
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let trace = tr.take();
+        assert_eq!(trace.total_events(), 400);
+        for log in &trace.per_rank {
+            for (i, ev) in log.iter().enumerate() {
+                assert_eq!(ev.index, i);
+            }
+        }
+    }
+}

@@ -37,6 +37,12 @@ pub enum CommError {
     /// A barrier waiter exhausted its deadline (a rank hung without
     /// declaring itself dead).
     BarrierTimeout { rank: usize },
+    /// A rank invoked a collective on a [`Group`](super::Group) it is
+    /// not a member of — a coordinator wiring bug, not a wire fault.
+    NotInGroup { rank: usize },
+    /// A caller violated the substrate's usage contract (e.g. a scatter
+    /// root supplying no chunks). `what` states the broken contract.
+    Protocol { rank: usize, what: &'static str },
 }
 
 impl fmt::Display for CommError {
@@ -65,6 +71,12 @@ impl fmt::Display for CommError {
                 "comm: rank {rank} barrier timed out — a rank died \
                  before reaching it?"
             ),
+            CommError::NotInGroup { rank } => {
+                write!(f, "comm: rank {rank} is not a member of the group")
+            }
+            CommError::Protocol { rank, what } => {
+                write!(f, "comm: rank {rank} protocol violation: {what}")
+            }
         }
     }
 }
@@ -92,6 +104,13 @@ mod tests {
         }
         .to_string();
         assert!(m.contains("f32") && m.contains("i32") && m.contains("src 0"));
+        assert_eq!(
+            CommError::NotInGroup { rank: 5 }.to_string(),
+            "comm: rank 5 is not a member of the group"
+        );
+        let p = CommError::Protocol { rank: 0, what: "root must supply scatter chunks" }
+            .to_string();
+        assert!(p.contains("rank 0") && p.contains("scatter chunks"), "{p}");
     }
 
     #[test]

@@ -30,9 +30,10 @@
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
+use crate::check::trace::{EventKind, Trace, TraceRecorder};
 use crate::tensor::Tensor;
 
 pub mod error;
@@ -41,6 +42,28 @@ pub mod stats;
 pub use error::CommError;
 pub use fault::FaultPlan;
 pub use stats::{CommStats, OpKind};
+
+/// Collective tag blocks live at multiples of `1 << TAG_COLLECTIVE_SHIFT`:
+/// `group_tag` hands out `fresh_tag() << TAG_COLLECTIVE_SHIFT`, leaving
+/// room for the per-step offsets the ring algorithms add. P2P tags (the
+/// LASP ring's `ring_tag`, baseline hop tags) must stay strictly below
+/// [`TAG_COLLECTIVE_BASE`] so the two namespaces can never collide — an
+/// invariant `lasp check` enforces on every traced run.
+pub const TAG_COLLECTIVE_SHIFT: u32 = 16;
+pub const TAG_COLLECTIVE_BASE: u64 = 1 << TAG_COLLECTIVE_SHIFT;
+
+/// Control-plane tag reserved for `group_tag` handshakes. Never used for
+/// data; exempt from tag-reuse analysis (it is a FIFO stream).
+pub const TAG_CONTROL: u64 = u64::MAX;
+
+/// Lock acquisition that survives poisoning. A poisoned substrate lock
+/// means some peer thread panicked; the typed dead-rank machinery
+/// (`mark_dead` + `CommError::RankDead`) is how that failure surfaces to
+/// survivors — cascading the panic through every lock site would replace
+/// a rank-addressed diagnostic with a bare poison unwrap.
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Message payload; token scatters are i32, ring/collective tensor data
 /// is f32, and the all-gather schedule's KV increments travel as f64
@@ -150,9 +173,31 @@ struct Msg {
 #[derive(Default)]
 struct MailboxInner {
     q: VecDeque<Msg>,
-    /// Seqs already consumed: a duplicate delivery of any of these is
-    /// dropped on the floor (idempotent receive).
+    /// Every seq below this has been consumed: the dense prefix of the
+    /// dedup state, advanced by `note_consumed`. A duplicate delivery of
+    /// any such seq is dropped on the floor without touching `seen`.
+    watermark: u64,
+    /// Consumed seqs at or above the watermark (out-of-order tag
+    /// consumption leaves gaps). Bounded by the channel's reordering
+    /// window — as the dense prefix fills in, `note_consumed` migrates
+    /// these into the watermark, so long fault-injected runs no longer
+    /// grow this set without bound.
     seen: HashSet<u64>,
+}
+
+impl MailboxInner {
+    fn is_consumed(&self, seq: u64) -> bool {
+        seq < self.watermark || self.seen.contains(&seq)
+    }
+
+    /// Record `seq` as consumed, then advance the watermark across the
+    /// now-dense prefix, garbage-collecting the migrated entries.
+    fn note_consumed(&mut self, seq: u64) {
+        self.seen.insert(seq);
+        while self.seen.remove(&self.watermark) {
+            self.watermark += 1;
+        }
+    }
 }
 
 /// One src->dst mailbox: eager (buffered) delivery, blocking receive.
@@ -171,13 +216,15 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(600);
 
 impl Mailbox {
     fn push(&self, msg: Msg) {
-        self.inner.lock().unwrap().q.push_back(msg);
+        lock_or_recover(&self.inner).q.push_back(msg);
         self.cv.notify_all();
     }
 
     /// Blocking receive: first matching tag whose `deliver_at` has
     /// passed. `me` is the waiting rank and `src_dead` its view of the
     /// sender's liveness — a dead sender fails the wait immediately.
+    /// Returns the consumed message's seq alongside the payload so the
+    /// trace recorder can log the exact send↔recv match.
     fn pop(
         &self,
         me: usize,
@@ -185,20 +232,24 @@ impl Mailbox {
         tag: u64,
         timeout: Duration,
         src_dead: &AtomicBool,
-    ) -> Result<Payload, CommError> {
+    ) -> Result<(u64, Payload), CommError> {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_or_recover(&self.inner);
         loop {
-            let MailboxInner { q, seen } = &mut *inner;
             // purge duplicate deliveries of already-consumed seqs
-            q.retain(|m| !seen.contains(&m.seq));
-            if let Some(idx) = q.iter().position(|m| m.tag == tag) {
-                let deliver_at = q[idx].deliver_at;
+            {
+                let MailboxInner { q, watermark, seen } = &mut *inner;
+                q.retain(|m| !(m.seq < *watermark || seen.contains(&m.seq)));
+            }
+            if let Some(idx) = inner.q.iter().position(|m| m.tag == tag) {
+                let deliver_at = inner.q[idx].deliver_at;
                 let now = Instant::now();
                 if deliver_at <= now {
-                    let msg = q.remove(idx).unwrap();
-                    seen.insert(msg.seq);
-                    return Ok(msg.payload);
+                    if let Some(msg) = inner.q.remove(idx) {
+                        inner.note_consumed(msg.seq);
+                        return Ok((msg.seq, msg.payload));
+                    }
+                    continue;
                 }
                 // matched but still in flight: wait for the earlier of
                 // its delivery time and our deadline
@@ -206,8 +257,10 @@ impl Mailbox {
                     return Err(CommError::Timeout { rank: me, src, tag });
                 }
                 let wait = deliver_at.min(deadline) - now;
-                let (guard, _) = self.cv.wait_timeout(inner, wait).unwrap();
-                inner = guard;
+                inner = match self.cv.wait_timeout(inner, wait) {
+                    Ok((guard, _)) => guard,
+                    Err(poisoned) => poisoned.into_inner().0,
+                };
                 continue;
             }
             if src_dead.load(Ordering::SeqCst) {
@@ -219,8 +272,10 @@ impl Mailbox {
             }
             // Wait only for the *remaining* budget so the total elapsed
             // time is bounded no matter how often we are woken.
-            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
-            inner = guard;
+            inner = match self.cv.wait_timeout(inner, deadline - now) {
+                Ok((guard, _)) => guard,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
         }
     }
 }
@@ -261,6 +316,11 @@ struct Shared {
     /// crash); peers blocked on it fail fast with `RankDead`.
     dead: Vec<AtomicBool>,
     seq: AtomicU64,
+    /// Protocol-checker hook (DESIGN.md §8): when set, every logical
+    /// send/recv/barrier transition is appended to a per-rank event log.
+    /// `None` on all production paths — the cost when off is this one
+    /// `Option` check per primitive.
+    trace: Option<TraceRecorder>,
 }
 
 /// Construction handle: build once, hand one [`Communicator`] per rank to
@@ -271,17 +331,17 @@ pub struct CommWorld {
 
 impl CommWorld {
     pub fn new(world: usize) -> CommWorld {
-        Self::build(world, None, None)
+        Self::build(world, None, None, false)
     }
 
     pub fn with_link_model(world: usize, link: LinkModel) -> CommWorld {
-        Self::build(world, Some(link), None)
+        Self::build(world, Some(link), None, false)
     }
 
     /// A world whose message deliveries are perturbed by a deterministic
     /// [`FaultPlan`] (drops with retransmit, duplicates, delays).
     pub fn with_faults(world: usize, plan: FaultPlan) -> CommWorld {
-        Self::build(world, None, Some(plan))
+        Self::build(world, None, Some(plan), false)
     }
 
     pub fn with_options(
@@ -289,10 +349,26 @@ impl CommWorld {
         link: Option<LinkModel>,
         faults: Option<FaultPlan>,
     ) -> CommWorld {
-        Self::build(world, link, faults)
+        Self::build(world, link, faults, false)
     }
 
-    fn build(world: usize, link: Option<LinkModel>, faults: Option<FaultPlan>) -> CommWorld {
+    /// A world with the protocol-checker event recorder attached: every
+    /// logical send/recv/barrier transition is logged per rank, for
+    /// post-hoc happens-before analysis via [`CommWorld::trace`].
+    pub fn with_recording(
+        world: usize,
+        link: Option<LinkModel>,
+        faults: Option<FaultPlan>,
+    ) -> CommWorld {
+        Self::build(world, link, faults, true)
+    }
+
+    fn build(
+        world: usize,
+        link: Option<LinkModel>,
+        faults: Option<FaultPlan>,
+        record: bool,
+    ) -> CommWorld {
         assert!(world > 0);
         let mailboxes = (0..world)
             .map(|_| (0..world).map(|_| Mailbox::default()).collect())
@@ -308,6 +384,7 @@ impl CommWorld {
                 faults,
                 dead: (0..world).map(|_| AtomicBool::new(false)).collect(),
                 seq: AtomicU64::new(1),
+                trace: record.then(|| TraceRecorder::new(world)),
             }),
         }
     }
@@ -320,6 +397,13 @@ impl CommWorld {
 
     pub fn stats(&self) -> &CommStats {
         &self.shared.stats
+    }
+
+    /// Drain the recorded event logs, if this world was built with
+    /// [`CommWorld::with_recording`]. Call after joining every rank
+    /// thread — the trace is only complete once the run is.
+    pub fn trace(&self) -> Option<Trace> {
+        self.shared.trace.as_ref().map(TraceRecorder::take)
     }
 }
 
@@ -339,11 +423,14 @@ impl Group {
         self.ranks.len()
     }
 
-    fn index_of(&self, rank: usize) -> usize {
+    /// Group-relative index of a global rank; a rank calling a
+    /// collective on a group it doesn't belong to is a coordinator
+    /// wiring bug, surfaced as a typed [`CommError::NotInGroup`].
+    pub fn index_of(&self, rank: usize) -> Result<usize, CommError> {
         self.ranks
             .iter()
             .position(|&r| r == rank)
-            .unwrap_or_else(|| panic!("rank {rank} not in group {:?}", self.ranks))
+            .ok_or(CommError::NotInGroup { rank })
     }
 }
 
@@ -379,10 +466,10 @@ impl Communicator {
         // sleep on the condvar.
         for dst in 0..self.shared.world {
             let mb = &self.shared.mailboxes[dst][self.rank];
-            drop(mb.inner.lock().unwrap());
+            drop(lock_or_recover(&mb.inner));
             mb.cv.notify_all();
         }
-        drop(self.shared.barrier_count.lock().unwrap());
+        drop(lock_or_recover(&self.shared.barrier_count));
         self.shared.barrier_cv.notify_all();
     }
 
@@ -431,6 +518,9 @@ impl Communicator {
         // copies are virtual — so byte accounting stays exactly the
         // Table-1 wire volume regardless of the fault plan.
         self.shared.stats.record(self.rank, kind, nbytes);
+        if let Some(tr) = &self.shared.trace {
+            tr.record(self.rank, EventKind::Send { dst, tag, seq, op: kind, nbytes });
+        }
         let deliver_at = Instant::now() + delay;
         if dup {
             // duplicate delivery: same seq, so the receiver dedups it
@@ -442,13 +532,17 @@ impl Communicator {
 
     /// Blocking receive of the matching tag from `src`.
     pub fn recv_tagged(&self, src: usize, tag: u64) -> Result<Payload, CommError> {
-        self.shared.mailboxes[self.rank][src].pop(
+        let (seq, payload) = self.shared.mailboxes[self.rank][src].pop(
             self.rank,
             src,
             tag,
             RECV_TIMEOUT,
             &self.shared.dead[src],
-        )
+        )?;
+        if let Some(tr) = &self.shared.trace {
+            tr.record(self.rank, EventKind::Recv { src, tag, seq });
+        }
+        Ok(payload)
     }
 
     /// Untagged convenience pair (tag 0) for simple P2P exchanges.
@@ -491,12 +585,21 @@ impl Communicator {
     pub fn barrier(&self) -> Result<(), CommError> {
         let shared = &self.shared;
         let deadline = Instant::now() + RECV_TIMEOUT;
-        let mut g = shared.barrier_count.lock().unwrap();
+        let mut g = lock_or_recover(&shared.barrier_count);
         let gen = g.1;
         g.0 += 1;
+        // Recording under the barrier lock keeps Enter/Exit ordered with
+        // the generation transitions they log (the recorder's own lock
+        // is a leaf — nothing else is acquired while it is held).
+        if let Some(tr) = &shared.trace {
+            tr.record(self.rank, EventKind::BarrierEnter { gen });
+        }
         if g.0 == shared.world {
             g.0 = 0;
             g.1 = g.1.wrapping_add(1);
+            if let Some(tr) = &shared.trace {
+                tr.record(self.rank, EventKind::BarrierExit { gen });
+            }
             shared.barrier_cv.notify_all();
             return Ok(());
         }
@@ -512,11 +615,13 @@ impl Communicator {
                 g.0 -= 1;
                 return Err(CommError::BarrierTimeout { rank: self.rank });
             }
-            let (guard, _) = shared
-                .barrier_cv
-                .wait_timeout(g, deadline - now)
-                .unwrap();
-            g = guard;
+            g = match shared.barrier_cv.wait_timeout(g, deadline - now) {
+                Ok((guard, _)) => guard,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+        if let Some(tr) = &shared.trace {
+            tr.record(self.rank, EventKind::BarrierExit { gen });
         }
         Ok(())
     }
@@ -532,19 +637,27 @@ impl Communicator {
     }
 
     /// Leader draws a fresh tag block and distributes it to the group on
-    /// the control plane (tag u64::MAX; zero-cost, not counted as data).
-    /// Control-plane pushes are fault-exempt — a "dropped" handshake
-    /// would stall the collective itself rather than exercise the data
-    /// path — but still seq-stamped so receiver dedup stays consistent.
-    fn group_tag(&self, group: &Group, _kind: OpKind) -> Result<u64, CommError> {
+    /// the control plane ([`TAG_CONTROL`]; zero-cost, not counted as
+    /// data). Control-plane pushes are fault-exempt — a "dropped"
+    /// handshake would stall the collective itself rather than exercise
+    /// the data path — but still seq-stamped so receiver dedup stays
+    /// consistent, and still traced (tagged with the collective's
+    /// `kind`) so the checker sees a complete channel history.
+    fn group_tag(&self, group: &Group, kind: OpKind) -> Result<u64, CommError> {
         let leader = group.ranks[0];
         if self.rank == leader {
-            let tag = self.fresh_tag() << 16;
+            let tag = self.fresh_tag() << TAG_COLLECTIVE_SHIFT;
             for &r in &group.ranks[1..] {
                 let mb = &self.shared.mailboxes[r][leader];
                 let seq = mb.next_seq.fetch_add(1, Ordering::Relaxed);
+                if let Some(tr) = &self.shared.trace {
+                    tr.record(
+                        self.rank,
+                        EventKind::Send { dst: r, tag: TAG_CONTROL, seq, op: kind, nbytes: 8 },
+                    );
+                }
                 mb.push(Msg {
-                    tag: u64::MAX,
+                    tag: TAG_CONTROL,
                     seq,
                     deliver_at: Instant::now(),
                     payload: Payload::I32(vec![
@@ -556,8 +669,8 @@ impl Communicator {
             Ok(tag)
         } else {
             let v = self
-                .recv_tagged(leader, u64::MAX)?
-                .expect_i32(leader, u64::MAX)?;
+                .recv_tagged(leader, TAG_CONTROL)?
+                .expect_i32(leader, TAG_CONTROL)?;
             Ok((((v[0] as u32) as u64) << 32) | ((v[1] as u32) as u64))
         }
     }
@@ -572,7 +685,7 @@ impl Communicator {
             return Ok(());
         }
         let tag = self.group_tag(group, OpKind::AllReduce)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
         let len = t.len();
@@ -626,7 +739,7 @@ impl Communicator {
             return Ok(vec![t.clone()]);
         }
         let tag = self.group_tag(group, OpKind::AllGather)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
         let mut slots: Vec<Option<Tensor>> = vec![None; n];
@@ -646,7 +759,8 @@ impl Communicator {
             cur = Tensor::new(t.shape().to_vec(), recv);
             slots[src] = Some(cur.clone());
         }
-        Ok(slots.into_iter().map(Option::unwrap).collect())
+        // the n-1 ring steps fill every slot: flatten is total here
+        Ok(slots.into_iter().flatten().collect())
     }
 
     /// Ring all-gather of raw f64 buffers, in group order. Same ring
@@ -665,7 +779,7 @@ impl Communicator {
             return Ok(vec![data.to_vec()]);
         }
         let tag = self.group_tag(group, OpKind::AllGather)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
         let mut slots: Vec<Option<Vec<f64>>> = vec![None; n];
@@ -684,7 +798,8 @@ impl Communicator {
             let src = (me + n - 1 - s) % n;
             slots[src] = Some(cur.clone());
         }
-        Ok(slots.into_iter().map(Option::unwrap).collect())
+        // the n-1 ring steps fill every slot: flatten is total here
+        Ok(slots.into_iter().flatten().collect())
     }
 
     /// Ring reduce-scatter (sum): every rank contributes `t` (same shape);
@@ -697,7 +812,7 @@ impl Communicator {
         }
         assert_eq!(t.len() % n, 0, "reduce_scatter needs len divisible by group");
         let tag = self.group_tag(group, OpKind::ReduceScatter)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         let next = group.ranks[(me + 1) % n];
         let prev = group.ranks[(me + n - 1) % n];
         let c = t.len() / n;
@@ -735,7 +850,7 @@ impl Communicator {
         let n = group.size();
         assert_eq!(inputs.len(), n);
         let tag = self.group_tag(group, OpKind::AllToAll)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         let mut out: Vec<Option<Tensor>> = vec![None; n];
         for (j, inp) in inputs.iter().enumerate() {
             if j == me {
@@ -757,7 +872,8 @@ impl Communicator {
                 out[j] = Some(Tensor::new(inputs[j].shape().to_vec(), recv));
             }
         }
-        Ok(out.into_iter().map(Option::unwrap).collect())
+        // self-chunk plus n-1 receives fill every slot: flatten is total
+        Ok(out.into_iter().flatten().collect())
     }
 
     /// Broadcast from the group-relative `root` index.
@@ -772,7 +888,7 @@ impl Communicator {
             return Ok(());
         }
         let tag = self.group_tag(group, OpKind::Broadcast)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         if me == root {
             for (j, &r) in group.ranks.iter().enumerate() {
                 if j != root {
@@ -803,9 +919,12 @@ impl Communicator {
     ) -> Result<Vec<i32>, CommError> {
         let n = group.size();
         let tag = self.group_tag(group, OpKind::Scatter)?;
-        let me = group.index_of(self.rank);
+        let me = group.index_of(self.rank)?;
         if me == root {
-            let chunks = chunks.expect("root must supply scatter chunks");
+            let chunks = chunks.ok_or(CommError::Protocol {
+                rank: self.rank,
+                what: "root must supply scatter chunks",
+            })?;
             assert_eq!(chunks.len(), n);
             let mut mine = Vec::new();
             for (j, c) in chunks.into_iter().enumerate() {
@@ -1093,7 +1212,7 @@ mod tests {
                 return; // ranks 0/1 sit this one out entirely
             }
             let g = Group::new(vec![2, 3]);
-            let me = g.index_of(c.rank());
+            let me = g.index_of(c.rank()).unwrap();
             let t = Tensor::new(vec![2], vec![c.rank() as f32; 2]);
             let all = c.all_gather(&g, &t).unwrap();
             assert_eq!(all[0].data(), &[2.0; 2]);
@@ -1256,9 +1375,187 @@ mod tests {
             assert_eq!(v, vec![i as f32], "duplicate copy leaked through");
         }
         // every message carried a duplicate; after each seq is consumed
-        // once, any copies still queued must be invisible (seen seqs)
+        // once, any copies still queued must be invisible (below the
+        // watermark or in the residual seen set)
         let inner = world.shared.mailboxes[1][0].inner.lock().unwrap();
-        assert!(inner.q.iter().all(|m| inner.seen.contains(&m.seq)));
+        assert!(inner
+            .q
+            .iter()
+            .all(|m| m.seq < inner.watermark || inner.seen.contains(&m.seq)));
+    }
+
+    /// Satellite pin: the dedup state is garbage-collected. In-order
+    /// consumption advances the watermark across every consumed seq, so
+    /// the `seen` overflow set stays empty no matter how long the run —
+    /// the unbounded-memory regression this PR fixes.
+    #[test]
+    fn dedup_state_is_garbage_collected_in_order() {
+        let plan = FaultPlan { seed: 5, dup_prob: 1.0, ..FaultPlan::default() };
+        let world = CommWorld::with_faults(2, plan);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        let n = 100u64;
+        for i in 0..n {
+            c0.send_tagged(1, i, Payload::F32(vec![i as f32]), OpKind::P2p).unwrap();
+        }
+        for i in 0..n {
+            let v = c1.recv_tagged(0, i).unwrap().expect_f32(0, i).unwrap();
+            assert_eq!(v, vec![i as f32]);
+        }
+        let inner = world.shared.mailboxes[1][0].inner.lock().unwrap();
+        assert_eq!(inner.watermark, n, "watermark must cover the dense prefix");
+        assert!(
+            inner.seen.is_empty(),
+            "in-order consumption must leave no residual seen entries: {:?}",
+            inner.seen
+        );
+    }
+
+    /// Out-of-order tag consumption leaves a bounded gap: the watermark
+    /// stalls at the unconsumed seq and catches up (draining `seen`)
+    /// once the gap closes.
+    #[test]
+    fn dedup_watermark_catches_up_after_out_of_order_consumption() {
+        let world = CommWorld::new(2);
+        let comms = world.communicators();
+        let c0 = comms[0].clone();
+        let c1 = comms[1].clone();
+        for tag in 0..3u64 {
+            c0.send_tagged(1, tag, Payload::F32(vec![tag as f32]), OpKind::P2p).unwrap();
+        }
+        // consume seqs 2, 0, 1 by picking tags out of arrival order
+        for &tag in &[2u64, 0, 1] {
+            let v = c1.recv_tagged(0, tag).unwrap().expect_f32(0, tag).unwrap();
+            assert_eq!(v, vec![tag as f32]);
+        }
+        let inner = world.shared.mailboxes[1][0].inner.lock().unwrap();
+        assert_eq!(inner.watermark, 3);
+        assert!(inner.seen.is_empty(), "{:?}", inner.seen);
+    }
+
+    #[test]
+    fn index_of_rejects_non_members() {
+        let g = Group::new(vec![2, 3]);
+        assert_eq!(g.index_of(3), Ok(1));
+        assert_eq!(g.index_of(0), Err(CommError::NotInGroup { rank: 0 }));
+    }
+
+    #[test]
+    fn scatter_without_chunks_is_a_typed_protocol_error() {
+        let world = CommWorld::new(1);
+        let comms = world.communicators();
+        let err = comms[0].scatter_i32(&comms[0].world_group(), 0, None).unwrap_err();
+        assert_eq!(
+            err,
+            CommError::Protocol { rank: 0, what: "root must supply scatter chunks" }
+        );
+    }
+
+    /// Recording off (every production constructor): no trace exists.
+    /// Recording on: the trace holds one Send and one Recv per logical
+    /// message with matching seqs, and barrier Enter/Exit pairs.
+    #[test]
+    fn recording_captures_sends_recvs_and_barriers() {
+        assert!(CommWorld::new(2).trace().is_none());
+        let world = CommWorld::with_recording(2, None, None);
+        run_comms(&world, |c| {
+            if c.rank() == 0 {
+                c.send_tensor(1, 7, &Tensor::new(vec![1], vec![4.0])).unwrap();
+            } else {
+                c.recv_tensor(0, 7, &[1]).unwrap();
+            }
+            c.barrier().unwrap();
+        });
+        let trace = world.trace().expect("recording world must yield a trace");
+        assert_eq!(trace.world(), 2);
+        let sends: Vec<_> = trace.per_rank[0]
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Send { dst, tag, seq, op, nbytes } => {
+                    Some((dst, tag, seq, op, nbytes))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(sends, vec![(1, 7, 0, OpKind::P2p, 4)]);
+        let recvs: Vec<_> = trace.per_rank[1]
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Recv { src, tag, seq } => Some((src, tag, seq)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(recvs, vec![(0, 7, 0)]);
+        for log in &trace.per_rank {
+            let enters =
+                log.iter().filter(|e| matches!(e.kind, EventKind::BarrierEnter { gen: 0 }));
+            let exits =
+                log.iter().filter(|e| matches!(e.kind, EventKind::BarrierExit { gen: 0 }));
+            assert_eq!(enters.count(), 1);
+            assert_eq!(exits.count(), 1);
+        }
+    }
+
+    /// Property (satellite): the barrier generation counter is strictly
+    /// sequential per rank across consecutive barriers — generations are
+    /// never reused or skipped, for any world size and barrier count.
+    #[test]
+    fn prop_barrier_generations_are_sequential() {
+        use crate::util::proptest::{check, param};
+        check(
+            11,
+            12,
+            &[param("world", 1, 4), param("n", 1, 6)],
+            |case| {
+                let world = case.usize("world");
+                let n = case.usize("n") as u64;
+                let cw = CommWorld::with_recording(world, None, None);
+                let handles: Vec<_> = cw
+                    .communicators()
+                    .into_iter()
+                    .map(|c| {
+                        thread::spawn(move || {
+                            for _ in 0..n {
+                                c.barrier().unwrap();
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().map_err(|_| "barrier thread panicked".to_string())?;
+                }
+                let trace = cw.trace().ok_or("no trace")?;
+                for (rank, log) in trace.per_rank.iter().enumerate() {
+                    let gens: Vec<u64> = log
+                        .iter()
+                        .filter_map(|e| match e.kind {
+                            EventKind::BarrierEnter { gen } => Some(gen),
+                            _ => None,
+                        })
+                        .collect();
+                    let expect: Vec<u64> = (0..n).collect();
+                    if gens != expect {
+                        return Err(format!(
+                            "rank {rank} entered generations {gens:?}, expected {expect:?}"
+                        ));
+                    }
+                    let exits: Vec<u64> = log
+                        .iter()
+                        .filter_map(|e| match e.kind {
+                            EventKind::BarrierExit { gen } => Some(gen),
+                            _ => None,
+                        })
+                        .collect();
+                    if exits != expect {
+                        return Err(format!(
+                            "rank {rank} exited generations {exits:?}, expected {expect:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -62,6 +62,21 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 
 // ---- framing: magic + version + len + payload + checksum ----------------
 
+/// Decode a little-endian u32 from a slice whose length the surrounding
+/// framing/`take` checks already guarantee to be exactly 4 bytes.
+fn u32_le(raw: &[u8]) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(raw);
+    u32::from_le_bytes(b)
+}
+
+/// Little-endian u64 counterpart of [`u32_le`] (exactly 8 bytes).
+fn u64_le(raw: &[u8]) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(raw);
+    u64::from_le_bytes(b)
+}
+
 /// Atomically write `payload` under the checkpoint frame: the bytes land
 /// in `<path>.tmp` first and only an intact file is renamed into place.
 fn write_frame(path: &Path, payload: &[u8]) -> Result<()> {
@@ -85,11 +100,11 @@ fn read_frame(path: &Path) -> Result<Vec<u8>> {
     if buf.len() < 28 || &buf[..8] != MAGIC {
         bail!("{}: not a LASP checkpoint file", path.display());
     }
-    let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let version = u32_le(&buf[8..12]);
     if version != VERSION {
         bail!("{}: checkpoint version {version}, expected {VERSION}", path.display());
     }
-    let len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+    let len = u64_le(&buf[12..20]) as usize;
     if buf.len() != 28 + len {
         bail!(
             "{}: truncated checkpoint ({} bytes, framed length {})",
@@ -99,7 +114,7 @@ fn read_frame(path: &Path) -> Result<Vec<u8>> {
         );
     }
     let payload = &buf[20..20 + len];
-    let stored = u64::from_le_bytes(buf[20 + len..].try_into().unwrap());
+    let stored = u64_le(&buf[20 + len..]);
     let actual = fnv1a(payload);
     if stored != actual {
         bail!(
@@ -143,7 +158,7 @@ impl<'a> Reader<'a> {
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64_le(self.take(8)?))
     }
 
     fn f32s(&mut self) -> Result<Vec<f32>> {
@@ -151,7 +166,7 @@ impl<'a> Reader<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .map(|c| f32::from_bits(u32_le(c)))
             .collect())
     }
 

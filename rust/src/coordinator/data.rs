@@ -82,7 +82,10 @@ pub fn distribute(
     let group = placement.sp_group(placement.group_of(rank));
     let is_src = rank == placement.source_rank(rank);
     let chunks = if is_src {
-        let seq = seq.expect("source rank must hold the sequence");
+        let seq = seq.ok_or(CommError::Protocol {
+            rank,
+            what: "source rank must hold the sequence",
+        })?;
         Some(
             placement
                 .split_sequence(seq)

@@ -264,7 +264,9 @@ pub fn backward_chunk(
     let kv_in = cache
         .get(slot)
         .or(kv_in_fallback)
-        .expect("KV state neither cached nor recomputed — coordinator bug")
+        .ok_or_else(|| anyhow::anyhow!(
+            "KV state neither cached nor recomputed — coordinator bug"
+        ))?
         .clone();
 
     // Overlap phase 1: loss head + final norm + top-layer parameter
@@ -307,8 +309,10 @@ pub fn backward_chunk(
     let mut out = ctx.exec(timer, name, &rest)?;
 
     // outputs: dparams…, dkv_in, loss
-    let loss_sum = out.pop().unwrap().as_f32().item();
-    let dkv_in = out.pop().unwrap().into_f32();
+    let missing =
+        || anyhow::anyhow!("{name} returned fewer outputs than its ABI");
+    let loss_sum = out.pop().ok_or_else(missing)?.as_f32().item();
+    let dkv_in = out.pop().ok_or_else(missing)?.into_f32();
     let grads: Vec<Tensor> = out.into_iter().map(Value::into_f32).collect();
 
     // Send dKV_in to the group predecessor.
@@ -393,7 +397,9 @@ fn backward_chunk_allgather(
     let kv_in = cache
         .get(slot)
         .or(kv_in_fallback)
-        .expect("KV state neither cached nor recomputed — coordinator bug")
+        .ok_or_else(|| anyhow::anyhow!(
+            "KV state neither cached nor recomputed — coordinator bug"
+        ))?
         .clone();
 
     let mut delta = timer.time("compute", || {
@@ -517,5 +523,54 @@ mod tests {
                 assert!(seen.insert(t), "tag collision at step {step} {phase:?}");
             }
         }
+    }
+
+    /// Randomized form of the namespace audit (the checker's
+    /// tag-namespace rule as an executable property): for any (step,
+    /// phase) and any plausible collective history, the ring tag
+    /// collides with neither the untagged channel, nor any offset
+    /// inside any `group_tag` block, nor the control tag.
+    #[test]
+    fn prop_ring_tags_are_disjoint_from_every_collective_block() {
+        use crate::comm::{
+            TAG_COLLECTIVE_BASE, TAG_COLLECTIVE_SHIFT, TAG_CONTROL,
+        };
+        use crate::util::proptest::{check, param};
+        check(
+            17,
+            400,
+            &[
+                param("step", 0, 1 << 20),
+                param("phase", 1, 3),
+                param("colls", 1, 64),
+                param("off", 0, TAG_COLLECTIVE_BASE - 1),
+            ],
+            |case| {
+                let phase = match case.get("phase") {
+                    1 => RingPhase::Forward,
+                    2 => RingPhase::Replay,
+                    _ => RingPhase::Backward,
+                };
+                let ring = ring_tag(case.usize("step"), phase);
+                if ring == 0 {
+                    return Err("ring tag hit the untagged channel".into());
+                }
+                if ring >= TAG_COLLECTIVE_BASE || ring == TAG_CONTROL {
+                    return Err(format!(
+                        "ring tag {ring} left the P2P namespace"
+                    ));
+                }
+                // the `colls`-th collective block (fresh_tag starts at
+                // 1), probed at an arbitrary in-block offset
+                let coll = (case.get("colls") << TAG_COLLECTIVE_SHIFT)
+                    | case.get("off");
+                if coll < TAG_COLLECTIVE_BASE || coll == ring {
+                    return Err(format!(
+                        "collective tag {coll} collides with the ring"
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -18,6 +18,7 @@ use super::data::{distribute, Placement};
 use super::kv_cache::KvCache;
 use super::ring::{backward_chunk, forward_chunk, RingCtx, RingPhase};
 use crate::analytic::DdpBackend;
+use crate::check::trace::Trace;
 use crate::comm::{fault::FaultPlan, CommError, CommWorld, Communicator, OpKind};
 use crate::model::ParamStore;
 use crate::optim::DistOptimizer;
@@ -66,6 +67,10 @@ pub struct TrainConfig {
     /// deterministic fault injection on the comm substrate (`None` =
     /// faults off — the zero-overhead fast path)
     pub fault_plan: Option<FaultPlan>,
+    /// record every send/recv/barrier into a happens-before trace
+    /// ([`TrainResult::trace`]) for `lasp check`; off is the
+    /// zero-overhead fast path (the recorder is never allocated)
+    pub record_comm: bool,
     /// write a checkpoint every k steps (0 = never); requires
     /// [`checkpoint_dir`](TrainConfig::checkpoint_dir)
     pub checkpoint_every: usize,
@@ -96,6 +101,7 @@ impl TrainConfig {
             kernel_threads: None,
             log_every: 0,
             fault_plan: None,
+            record_comm: false,
             checkpoint_every: 0,
             checkpoint_dir: None,
             resume: None,
@@ -151,6 +157,10 @@ pub struct TrainResult {
     /// number of point-to-point sends inside all-gather collectives
     pub allgather_msgs: u64,
     pub kv_cache_peak_bytes: usize,
+    /// per-rank comm event logs, present iff
+    /// [`TrainConfig::record_comm`] was set — feed to
+    /// [`crate::check::protocol::analyze`]
+    pub trace: Option<Trace>,
 }
 
 /// Run a training job; blocks until all workers finish.
@@ -166,9 +176,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     );
     let world = cfg.world();
     let placement = Placement::new(world, cfg.sp_size);
-    let comm_world = match &cfg.fault_plan {
-        Some(plan) => CommWorld::with_faults(world, plan.clone()),
-        None => CommWorld::new(world),
+    let comm_world = if cfg.record_comm {
+        CommWorld::with_recording(world, None, cfg.fault_plan.clone())
+    } else {
+        match &cfg.fault_plan {
+            Some(plan) => CommWorld::with_faults(world, plan.clone()),
+            None => CommWorld::new(world),
+        }
     };
     let comms = comm_world.communicators();
     let (tx, rx) = mpsc::channel::<WorkerResult>();
@@ -242,6 +256,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         allgather_bytes: stats.bytes(OpKind::AllGather),
         allgather_msgs: stats.msgs(OpKind::AllGather),
         kv_cache_peak_bytes: kv_peak,
+        trace: comm_world.trace(),
     })
 }
 
@@ -411,7 +426,9 @@ fn worker(
 
         // ---- checkpoint (collective; `step_<N>` = state entering step N) -----
         if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
-            let dir = cfg.checkpoint_dir.as_deref().expect("validated in train");
+            let dir = cfg.checkpoint_dir.as_deref().ok_or_else(|| {
+                anyhow::anyhow!("checkpoint_every set without checkpoint_dir")
+            })?;
             phases.time("checkpoint", || {
                 checkpoint::save(dir, cfg, comm, step + 1, &losses, &params, &optim)
             })?;

@@ -28,6 +28,7 @@
 
 pub mod analytic;
 pub mod baselines;
+pub mod check;
 pub mod cluster;
 pub mod comm;
 pub mod coordinator;

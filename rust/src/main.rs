@@ -10,6 +10,7 @@
 
 use anyhow::Result;
 use lasp::analytic::{self, DdpBackend, SpMethod};
+use lasp::check;
 use lasp::cluster::Topology;
 use lasp::comm::fault::FaultPlan;
 use lasp::coordinator::{train, Schedule, TrainConfig};
@@ -121,6 +122,39 @@ fn train_cli() -> Cli {
         .flag("unfused", "disable kernel fusion (Table-5 ablation)")
         .flag("no-kv-cache", "disable KV state caching (Table-5 ablation)")
         .flag("no-overlap", "deprecated: alias for --schedule sequential")
+}
+
+/// The `lasp check` argument set: record real tiny training runs and
+/// feed the traces through the protocol checker (DESIGN.md §8).
+fn check_cli() -> Cli {
+    Cli::new("lasp check", "verify comm-protocol invariants on recorded runs")
+        .opt("config", "tiny", "model config (artifact bundle name)")
+        .opt("chunk", "16", "chunk length C (bundle must exist)")
+        .opt("sp", "2", "sequence parallel size T")
+        .opt("steps", "3", "training steps per recorded run")
+        .opt("schedule", "all",
+             "schedule to check: sequential|overlapped|allgather|all")
+        .opt("fault-plan", "seed=3,drop=0.2,dup=0.3,delay=0.3:200us",
+             "fault plan applied to every recorded run ('' = faults off; \
+              crash faults abort runs before a trace exists)")
+        .flag("no-explore", "skip the interleaving-explorer scenario suite")
+}
+
+/// Resolve `--schedule` for `lasp check`: a single schedule or `all`.
+fn schedules_of(a: &Args) -> Result<Vec<Schedule>, String> {
+    match a.get("schedule") {
+        "all" => Ok(Schedule::ALL.to_vec()),
+        s => Schedule::parse(s).map(|s| vec![s]),
+    }
+}
+
+/// The `lasp lint` argument set (plain-text repo scan, DESIGN.md §8).
+fn lint_cli() -> Cli {
+    Cli::new("lasp lint", "scan rust/src for textual comm/kernel invariants")
+        .opt("root", "", "directory to scan (default: this crate's src/)")
+        .opt("allowlist", "",
+             "vetted-exception file (default: rust/lint_allow.txt; \
+              missing file = empty allowlist)")
 }
 
 /// The `lasp serve` argument set (extracted for parse tests, mirroring
@@ -274,6 +308,91 @@ fn main() -> Result<()> {
                 println!("wrote {path}");
             }
         }
+        "check" => {
+            let a = check_cli().parse_from(&args).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            let schedules = schedules_of(&a).unwrap_or_else(|e| {
+                eprintln!("--schedule: {e}");
+                std::process::exit(2)
+            });
+            let fault = fault_plan_of(&a).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            let runs = check::check_schedules(
+                a.get("config"),
+                a.get_usize("chunk"),
+                a.get_usize("sp"),
+                a.get_usize("steps"),
+                &schedules,
+                fault.as_ref(),
+            )?;
+            let mut findings = 0usize;
+            for run in &runs {
+                if run.violations.is_empty() {
+                    println!("check {:<20} {:>7} events  clean",
+                             run.label, run.events);
+                } else {
+                    findings += run.violations.len();
+                    println!("check {:<20} {:>7} events  {} violations",
+                             run.label, run.events, run.violations.len());
+                    for v in &run.violations {
+                        println!("  {v}");
+                    }
+                }
+            }
+            if !a.has("no-explore") {
+                for s in check::builtin_scenarios() {
+                    match check::run_scenario(&s) {
+                        Ok(rep) => println!(
+                            "explore {:<18} {:>7} states  {} terminals  \
+                             1 outcome",
+                            s.name, rep.states, rep.terminals
+                        ),
+                        Err(e) => {
+                            findings += 1;
+                            println!("explore {:<18} FAILED: {e}", s.name);
+                        }
+                    }
+                }
+            }
+            if findings > 0 {
+                eprintln!("check: {findings} findings");
+                std::process::exit(1);
+            }
+            println!("check: clean");
+        }
+        "lint" => {
+            let a = lint_cli().parse_from(&args).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2)
+            });
+            let root = match a.get("root") {
+                "" => check::lint::default_root(),
+                r => std::path::PathBuf::from(r),
+            };
+            let allow_path = match a.get("allowlist") {
+                "" => check::lint::default_allowlist_path(),
+                p => std::path::PathBuf::from(p),
+            };
+            let allow =
+                check::load_allowlist(&allow_path).unwrap_or_else(|e| {
+                    eprintln!("--allowlist: {e}");
+                    std::process::exit(2)
+                });
+            let findings = check::run_lint(&root, &allow)?;
+            for f in &findings {
+                println!("{f}");
+            }
+            if !findings.is_empty() {
+                eprintln!("lint: {} findings under {}", findings.len(),
+                          root.display());
+                std::process::exit(1);
+            }
+            println!("lint: clean ({})", root.display());
+        }
         "comm-volume" => {
             // Table 1 at the paper's parameters.
             let (b, d, h, t) = (1u64, 2048u64, 16u64, 64u64);
@@ -346,6 +465,10 @@ fn main() -> Result<()> {
                  \x20 eval         train then evaluate on held-out data\n\
                  \x20 serve        continuous-batching decode simulator (--json\n\
                  \x20              writes BENCH_serve.json)\n\
+                 \x20 check        verify comm-protocol invariants on recorded\n\
+                 \x20              runs + interleaving-explorer suite\n\
+                 \x20 lint         textual repo lint (panics in comm paths, wall\n\
+                 \x20              clocks in kernels, raw tag literals)\n\
                  \x20 comm-volume  print the Table-1 communication volumes\n\
                  \x20 scaling      print the Fig.3/Table-4 scale projection\n\
                  \x20 info         inspect an artifact bundle\n\n\
@@ -426,6 +549,41 @@ mod tests {
         assert_eq!(opt_path_of(&a, "checkpoint-dir"), Some("ckpt".into()));
         assert_eq!(opt_path_of(&a, "resume"), Some("ckpt".into()));
         assert_eq!(a.get_usize("checkpoint-every"), 5);
+    }
+
+    #[test]
+    fn check_cli_defaults_cover_the_acceptance_matrix() {
+        let toks: Vec<String> = Vec::new();
+        let a = check_cli().parse_from(&toks).unwrap();
+        assert_eq!(a.get("config"), "tiny");
+        assert_eq!((a.get_usize("chunk"), a.get_usize("sp")), (16, 2));
+        assert_eq!(a.get_usize("steps"), 3);
+        assert_eq!(schedules_of(&a).unwrap(), Schedule::ALL.to_vec());
+        let plan = fault_plan_of(&a).unwrap();
+        assert!(plan.is_some(), "default check run must inject faults");
+        assert!(!a.has("no-explore"));
+    }
+
+    #[test]
+    fn check_cli_single_schedule_and_bad_schedule() {
+        let toks: Vec<String> =
+            ["--schedule", "allgather"].iter().map(|s| s.to_string()).collect();
+        let a = check_cli().parse_from(&toks).unwrap();
+        assert_eq!(schedules_of(&a).unwrap(), vec![Schedule::AllGather]);
+        let toks: Vec<String> =
+            ["--schedule", "bogus"].iter().map(|s| s.to_string()).collect();
+        let a = check_cli().parse_from(&toks).unwrap();
+        assert!(schedules_of(&a).is_err());
+    }
+
+    #[test]
+    fn lint_cli_empty_paths_mean_crate_defaults() {
+        let toks: Vec<String> = Vec::new();
+        let a = lint_cli().parse_from(&toks).unwrap();
+        assert_eq!(a.get("root"), "");
+        assert_eq!(a.get("allowlist"), "");
+        assert!(check::lint::default_root().ends_with("src"));
+        assert!(check::lint::default_allowlist_path().ends_with("lint_allow.txt"));
     }
 
     #[test]
